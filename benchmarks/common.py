@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: wall-clock timing of the software path.
+
+On this CPU container the "software counterpart" (pure-jnp GEMM, the 8-core
+RISC-V baseline's role) is *measured*; RedMulE-side numbers are *derived*
+from the calibrated machine model (no 22 nm silicon here) — mirroring how
+the paper pairs measured SW with the accelerator.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]
+
+
+def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

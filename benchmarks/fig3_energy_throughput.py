@@ -1,0 +1,41 @@
+"""Fig 3c (cluster energy per MAC vs size) + Fig 3d (throughput vs size).
+
+The derived column carries the model's pJ/MAC and MAC/cycle; the measured
+column times the matching pure-jnp GEMM on this host (software-counterpart
+role).  The paper's qualitative claims — energy/op falls and throughput
+rises monotonically with matrix size, skinny-K collapses utilization — are
+visible directly in the emitted table.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_us
+from repro.core.perf_model import DEFAULT_MODEL, GEMM
+
+SIZES = [16, 32, 64, 96, 128, 192, 256, 384, 512]
+
+
+def run() -> list[Row]:
+    m = DEFAULT_MODEL
+    rows: list[Row] = []
+    f = jax.jit(lambda a, b: (a @ b).astype(jnp.float16))
+    for s in SIZES:
+        g = GEMM(s, s, s)
+        x = jnp.ones((s, s), jnp.float16)
+        us = time_us(f, x, x)
+        rows.append((
+            f"fig3c/energy_per_mac_{s}x{s}x{s}", us,
+            f"{m.energy_per_mac_pj(g):.2f}pJ/MAC"))
+        rows.append((
+            f"fig3d/throughput_{s}x{s}x{s}", us,
+            f"{m.hw_macs_per_cycle(g):.2f}MAC/cyc "
+            f"util={m.utilization(g)*100:.1f}%"))
+    # the skinny-K regime of Fig 3d (K == batch)
+    for k in (1, 2, 4, 8, 16):
+        g = GEMM(128, 640, k)
+        rows.append((
+            f"fig3d/skinny_k{k}", 0.0,
+            f"{m.hw_macs_per_cycle(g):.2f}MAC/cyc "
+            f"util={m.utilization(g)*100:.1f}%"))
+    return rows

@@ -1,0 +1,25 @@
+"""Fig 4b — RedMulE area vs array shape (H, L) at P=3.
+
+Reproduces the sweep: area grows ~linearly in FMA count, matches the whole
+PULP cluster at 256 FMAs and doubles it at 512; the memory-port count steps
+9 -> 11 when H goes 4 -> 5 (the bandwidth wall the paper calls out).
+"""
+
+from benchmarks.common import Row
+from repro.core.perf_model import DEFAULT_MODEL
+
+SWEEP = [(4, 4), (4, 8), (8, 8), (8, 16), (8, 32), (16, 32)]
+
+
+def run() -> list[Row]:
+    m = DEFAULT_MODEL
+    rows: list[Row] = []
+    for H, L in SWEEP:
+        area = m.area_mm2(H, L)
+        rows.append((
+            f"fig4b/area_H{H}_L{L}", 0.0,
+            f"{H*L}FMA area={area:.3f}mm2 "
+            f"vs_cluster={area/m.cluster_area_mm2:.2f}x ports={m.ports(H)}"))
+    rows.append(("fig4b/ports_step_H4_H5", 0.0,
+                 f"H4={m.ports(4)} H5={m.ports(5)} (paper: 9 -> 11)"))
+    return rows

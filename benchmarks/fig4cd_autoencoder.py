@@ -1,0 +1,51 @@
+"""Fig 4c/4d — TinyMLPerf AutoEncoder fwd/bwd speedups and the batching
+effect.
+
+The model-derived speedups reproduce the paper (2.6x @ B=1, bwd > fwd,
+~16x HW throughput gain and 24.4x @ B=16); the measured column times the
+REAL AE fwd/bwd on this host via the framework (functional end-to-end
+reproduction of the use case, pure FP16).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_us
+from repro.core import precision as prec
+from repro.core.perf_model import DEFAULT_MODEL, autoencoder_report
+from repro.data import SyntheticAE
+from repro.models import autoencoder
+
+
+def run() -> list[Row]:
+    m = DEFAULT_MODEL
+    rows: list[Row] = []
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+
+    fwd = jax.jit(lambda p, x: autoencoder.ae_forward(p, x, policy=prec.PAPER_FP16))
+    bwd = jax.jit(jax.grad(
+        lambda p, x: autoencoder.ae_loss(p, x, policy=prec.PAPER_FP16)[0]))
+
+    for B in (1, 16):
+        x = jnp.asarray(SyntheticAE(batch=B).sample(0))
+        us_f = time_us(fwd, params, x)
+        us_b = time_us(bwd, params, x)
+        r = autoencoder_report(m, B)
+        rows.append((
+            f"fig4c/ae_fwd_B{B}", us_f,
+            f"model_speedup_fwd={r['speedup_fwd']:.2f}x"))
+        rows.append((
+            f"fig4c/ae_bwd_B{B}", us_b,
+            f"model_speedup_bwd={r['speedup_bwd']:.2f}x"))
+        rows.append((
+            f"fig4cd/ae_total_B{B}", us_f + us_b,
+            f"model_speedup={r['speedup']:.2f}x paper={'2.6x' if B == 1 else '24.4x'} "
+            f"hw_macs_per_cyc={r['hw_macs_per_cycle']:.2f} "
+            f"act_footprint={r['footprint_kb']:.0f}kB"))
+    r1 = autoencoder_report(m, 1)
+    r16 = autoencoder_report(m, 16)
+    rows.append((
+        "fig4d/batching_throughput_gain", 0.0,
+        f"model={r16['hw_macs_per_cycle']/r1['hw_macs_per_cycle']:.1f}x "
+        f"paper=~16x"))
+    return rows

@@ -1,0 +1,45 @@
+"""Beyond-paper: TPU-pod roofline summary from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per (arch x shape x mesh): the three terms, the dominant
+bottleneck, and the roofline fraction.  This is the §Roofline table's
+source of truth.
+"""
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+OUT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def run(tag: str = "final") -> list[Row]:
+    rows: list[Row] = []
+    files = sorted(glob.glob(os.path.join(OUT_DIR, f"{tag}__*.json")))
+    if not files:
+        return [("roofline/none", 0.0,
+                 f"no dry-run artifacts under {OUT_DIR} — run "
+                 "python -m repro.launch.dryrun first")]
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("skipped"):
+            rows.append((name, 0.0, "SKIP " + r["skipped"]))
+            continue
+        if r.get("error"):
+            rows.append((name, 0.0, "ERROR " + r["error"][:80]))
+            continue
+        rows.append((
+            name,
+            r["compile_s"] * 1e6,
+            f"compute={r['compute_s']*1e3:.1f}ms "
+            f"memory={r['memory_s']*1e3:.1f}ms "
+            f"collective={r['collective_s']*1e3:.1f}ms "
+            f"dominant={r['dominant']} "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"roofline={r['roofline_fraction']*100:.2f}% "
+            f"hbm={r['per_device_hbm_gib']:.2f}GiB"))
+    return rows

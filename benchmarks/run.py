@@ -1,0 +1,23 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Measured numbers are the host's
+software-counterpart timings; derived numbers come from the calibrated
+RedMulE machine model (Table I / Figs 3-4) and from the dry-run roofline
+artifacts (beyond-paper §Roofline).
+"""
+
+from benchmarks import (fig3_energy_throughput, fig4a_hw_vs_sw,
+                        fig4b_area_sweep, fig4cd_autoencoder,
+                        roofline_report, table1_soa)
+from benchmarks.common import emit
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for mod in (table1_soa, fig3_energy_throughput, fig4a_hw_vs_sw,
+                fig4b_area_sweep, fig4cd_autoencoder, roofline_report):
+        emit(mod.run())
+
+
+if __name__ == "__main__":
+    main()

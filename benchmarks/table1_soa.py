@@ -1,0 +1,48 @@
+"""Table I — state-of-the-art comparison row for PULP+RedMulE.
+
+Derived columns reproduce the published row from the machine model and
+report the relative error; the us_per_call column measures the CPU jnp GEMM
+(the software-counterpart role).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_us
+from repro.core.perf_model import DEFAULT_MODEL, GEMM, TABLE1_PUBLISHED
+
+
+def run() -> list[Row]:
+    m = DEFAULT_MODEL
+    g = GEMM(1024, 1024, 1024)
+    x = jnp.ones((g.M, g.N), jnp.float16)
+    w = jnp.ones((g.N, g.K), jnp.float16)
+    f = jax.jit(lambda a, b: (a @ b).astype(jnp.float16))
+    us = time_us(f, x, w)
+
+    pub_eff = TABLE1_PUBLISHED["pulp_redmule_22nm_peak_eff"]
+    pub_perf = TABLE1_PUBLISHED["pulp_redmule_22nm_peak_perf"]
+    rows: list[Row] = []
+
+    def row(name, model_val, published, unit):
+        err = abs(model_val - published) / published * 100
+        rows.append((f"table1/{name}", us,
+                     f"model={model_val:.3g}{unit} paper={published}{unit} "
+                     f"err={err:.1f}%"))
+
+    row("perf_gops_665mhz", m.gflops(g, m.freq_peak_perf_mhz),
+        pub_perf["perf_gops"], "GOPS")
+    row("perf_gops_476mhz", m.gflops(g, m.freq_peak_eff_mhz),
+        pub_eff["perf_gops"], "GOPS")
+    row("eff_gops_per_w_065v", m.gflops_per_watt(g), pub_eff["gops_per_w"], "")
+    row("eff_gops_per_w_080v", m.gflops_per_watt(g, peak_perf=True),
+        pub_perf["gops_per_w"], "")
+    row("area_mm2", m.area_mm2(), 0.07, "mm2")
+    rows.append(("table1/macs_per_cycle", us,
+                 f"model={m.hw_macs_per_cycle(GEMM(304, 304, 304)):.1f} "
+                 f"paper=31.6 (98.8% util)"))
+    rows.append(("table1/speedup_vs_8core_sw", us,
+                 f"model={m.speedup(g):.1f}x paper=22x"))
+    rows.append(("table1/eff_gain_vs_sw", us,
+                 f"model={m.efficiency_gain_vs_sw(g):.2f}x paper=4.65x"))
+    return rows

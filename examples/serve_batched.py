@@ -1,0 +1,54 @@
+"""Batched serving: prefill once, decode greedily with a donated KV cache.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch deepseek-v2-lite-16b
+    (MLA archs serve from the compressed c_kv cache — the r=512 trick.)
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.serve import generate
+from repro.models import transformer
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="deepseek-v2-lite-16b",
+                   choices=configs.ARCH_IDS)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--prompt-len", type=int, default=24)
+    p.add_argument("--gen", type=int, default=24)
+    args = p.parse_args()
+
+    cfg = configs.get_reduced(args.arch)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size, jnp.int32)
+
+    t0 = time.perf_counter()
+    seqs = generate(params, cfg, prompts, args.gen)
+    jax.block_until_ready(seqs)
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name}: {args.batch} requests x {args.gen} tokens "
+          f"in {dt:.2f}s ({args.batch*args.gen/dt:.1f} tok/s incl. compile)")
+    print("first completion:", np.asarray(seqs[0, args.prompt_len:]))
+
+    if cfg.mla:
+        c = transformer.init_cache(cfg, args.batch,
+                                   args.prompt_len + args.gen)
+        kv = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c))
+        naive = (cfg.n_layers * args.batch * (args.prompt_len + args.gen)
+                 * cfg.n_heads * (cfg.mla.qk_nope_dim + cfg.mla.v_head_dim) * 2 * 2)
+        print(f"MLA compressed cache: {kv/1e6:.2f} MB "
+              f"vs naive GQA cache ~{naive/1e6:.2f} MB "
+              f"({naive/kv:.1f}x smaller)")
+
+
+if __name__ == "__main__":
+    main()

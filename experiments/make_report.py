@@ -1,0 +1,76 @@
+"""Generate the §Dry-run / §Roofline markdown tables from dryrun JSONs.
+
+    PYTHONPATH=src python experiments/make_report.py [--tag final]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "yi-9b", "qwen3-1.7b", "mistral-nemo-12b", "command-r-35b",
+    "deepseek-v2-lite-16b", "deepseek-moe-16b", "musicgen-medium",
+    "xlstm-1.3b", "hymba-1.5b", "pixtral-12b",
+]
+
+
+def load(tag, out_dir):
+    recs = {}
+    for f in glob.glob(os.path.join(out_dir, f"{tag}__*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_cell(r):
+    if r is None:
+        return "| (missing) " * 7 + "|"
+    if r.get("skipped"):
+        return "| — skipped: quadratic 500k decode on full attention " + "| — " * 6 + "|"
+    if r.get("error"):
+        return f"| ERROR {r['error'][:40]} " + "| — " * 6 + "|"
+    return (f"| {r['compute_s']*1e3:,.1f} | {r['memory_s']*1e3:,.1f} "
+            f"| {r['collective_s']*1e3:,.1f} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']*100:.3f}% "
+            f"| {r['per_device_hbm_gib']:.2f} |")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--tag", default="final")
+    p.add_argument("--out", default="experiments/dryrun")
+    args = p.parse_args()
+    recs = load(args.tag, args.out)
+
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(f"\n### Mesh `{mesh}` "
+              f"({'256 chips, single pod' if mesh == 'pod16x16' else '512 chips, 2 pods'})\n")
+        print("| arch | shape | compute ms | memory ms | collective ms "
+              "| dominant | useful | roofline | HBM GiB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                r = recs.get((arch, shape, mesh))
+                print(f"| {arch} | {shape} {fmt_cell(r)}")
+
+    # dry-run compile record
+    print("\n### Compile record (multi-pod mesh)\n")
+    print("| arch | shape | lower s | compile s | HLO MB | collectives (GB/dev wire) |")
+    print("|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, "pod2x16x16"))
+            if not r or r.get("skipped") or r.get("error"):
+                continue
+            colls = " ".join(
+                f"{k.split('-')[-1] if '-' in k else k}:{v/1e9:.1f}"
+                for k, v in sorted(r["collectives"].items()) if v > 1e6)
+            print(f"| {arch} | {shape} | {r['lower_s']} | {r['compile_s']} "
+                  f"| {r['hlo_bytes']/1e6:.1f} | {colls} |")
+
+
+if __name__ == "__main__":
+    main()

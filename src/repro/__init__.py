@@ -1,0 +1,6 @@
+"""RedMulE-JAX: a TPU-native, multi-pod reproduction of RedMulE
+(Tortorella et al., 2022) — reduced-precision GEMM as the universal
+engine of training and inference, scaled from a 32-FMA array to a
+512-chip pod pair. See DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Atomic / async / elastic checkpointing."""
+
+from repro.checkpoint.checkpoint import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,149 @@
+"""Atomic, async, elastic checkpointing.
+
+Layout (one directory per step):
+
+    <root>/step_000123.tmp/...   (while writing)
+    <root>/step_000123/
+        manifest.json            tree structure, shapes, dtypes, metadata
+        arrays.npz               flattened leaves (host-local shard or full)
+
+Guarantees:
+  * **atomic** — written to ``.tmp`` then ``os.replace``d, so a crash never
+    leaves a half checkpoint visible; ``latest()`` only sees complete dirs;
+  * **async**  — ``save_async`` snapshots to host RAM synchronously (so
+    training can mutate buffers) and writes on a background thread;
+  * **elastic** — arrays are stored with their *logical* tree paths, not
+    device layouts; ``restore`` yields host arrays the caller re-shards onto
+    any mesh (``jax.device_put`` with new NamedShardings), so an N-host
+    checkpoint restores onto an M-host job;
+  * **bounded** — ``keep`` most recent checkpoints are retained.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}, treedef
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- #
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:09d}")
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.root, name, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------- #
+    def save(self, step: int, tree: Any, metadata: Optional[Dict] = None) -> str:
+        """Synchronous atomic save."""
+        arrays, treedef = _flatten(tree)
+        final = self._dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(arrays),
+            "shapes": {k: list(v.shape) for k, v in arrays.items()},
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        return final
+
+    def save_async(self, step: int, tree: Any, metadata: Optional[Dict] = None) -> None:
+        """Snapshot now (host copy), write in the background."""
+        self.wait()  # one in flight at a time
+        snapshot = jax.tree.map(lambda x: np.asarray(x).copy(), tree)
+
+        def run():
+            try:
+                self.save(step, snapshot, metadata)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------- #
+    def restore(self, step: int, like: Any) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``like`` (any mesh/sharding — the
+        caller re-shards with device_put)."""
+        d = self._dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaves, treedef = jax.tree.flatten(like)
+        if len(leaves) != manifest["n_leaves"]:
+            raise ValueError(
+                f"checkpoint has {manifest['n_leaves']} leaves, "
+                f"restore target has {len(leaves)}")
+        out = []
+        for i, leaf in enumerate(leaves):
+            arr = data[f"leaf_{i}"]
+            want = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != want:
+                raise ValueError(f"leaf_{i}: checkpoint {arr.shape} vs target {want}")
+            out.append(arr)
+        return jax.tree.unflatten(treedef, out), manifest["metadata"]
+
+    def restore_latest(self, like: Any) -> Optional[Tuple[int, Any, Dict]]:
+        step = self.latest()
+        if step is None:
+            return None
+        tree, meta = self.restore(step, like)
+        return step, tree, meta
+
+    # ------------------------------------------------------------- #
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self._dir(s), ignore_errors=True)

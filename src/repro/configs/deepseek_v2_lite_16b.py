@@ -1,0 +1,44 @@
+"""deepseek-v2-lite-16b — MoE with MLA [arXiv:2405.04434; hf].
+
+Assignment note: the task sheet says both "MoE 64e top-6" and "160 routed";
+the published DeepSeek-V2-Lite has 64 routed experts (160 belongs to full
+V2) — we follow the published 64e config, as the "MoE 64e top-6" field says.
+"""
+
+import dataclasses
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+ARCH_ID = "deepseek-v2-lite-16b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="moe",
+        n_layers=27,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,  # routed-expert width (per assignment)
+        vocab_size=102400,
+        mla=MLAConfig(kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(n_routed=64, n_shared=2, top_k=6, d_expert=1408,
+                      dense_ff=10944, first_dense=1),
+        rope_theta=1e4,
+        notes="MLA compressed KV cache (r=512); fine-grained 64e MoE; "
+              "the paper-representative cell (small-GEMM regime)",
+    )
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        full(), n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=32, vocab_size=512, q_chunk=64,
+        mla=MLAConfig(kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                      v_head_dim=16),
+        moe=MoEConfig(n_routed=8, n_shared=2, top_k=2, d_expert=32,
+                      dense_ff=128, first_dense=1),
+    )

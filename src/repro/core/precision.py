@@ -1,0 +1,103 @@
+"""Precision policies for RedMulE-JAX.
+
+RedMulE computes IEEE binary16 (FP16) FMAs end to end. On TPU the MXU
+natively accumulates in fp32, so the framework exposes precision as an
+explicit, first-class policy:
+
+* ``PAPER_FP16``   — faithful to the paper: fp16 inputs, fp16 accumulation
+  (emulated by re-rounding the accumulator), fp16 outputs.
+* ``TPU_FP16``     — fp16 inputs, fp32 accumulation, fp16 outputs. The
+  TPU-native realization of the paper's engine (DESIGN.md §2, §8.3).
+* ``TPU_BF16``     — bf16 inputs, fp32 accumulation, bf16 outputs. The
+  default for the LM architectures (TPU-native training precision).
+* ``FP32``         — reference precision for oracles and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = [
+    "Policy",
+    "PAPER_FP16",
+    "TPU_FP16",
+    "TPU_BF16",
+    "FP32",
+    "resolve",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """A matmul precision policy.
+
+    Attributes:
+      name: human-readable identifier.
+      compute_dtype: dtype operands are cast to before the MXU.
+      accum_dtype: dtype of the on-array accumulator (the Z-buffer).
+      output_dtype: dtype results are stored to HBM in. ``None`` means
+        "same as compute_dtype".
+      faithful_accum: when True, the accumulator is re-rounded to
+        ``accum_dtype`` after every reduction block, emulating the paper's
+        in-pipeline fp16 accumulation error model (rather than doing one
+        final downcast from fp32).
+    """
+
+    name: str
+    compute_dtype: jnp.dtype
+    accum_dtype: jnp.dtype
+    output_dtype: Optional[jnp.dtype] = None
+    faithful_accum: bool = False
+
+    @property
+    def out_dtype(self) -> jnp.dtype:
+        return self.output_dtype if self.output_dtype is not None else self.compute_dtype
+
+
+PAPER_FP16 = Policy(
+    name="paper_fp16",
+    compute_dtype=jnp.float16,
+    accum_dtype=jnp.float16,
+    output_dtype=jnp.float16,
+    faithful_accum=True,
+)
+
+TPU_FP16 = Policy(
+    name="tpu_fp16",
+    compute_dtype=jnp.float16,
+    accum_dtype=jnp.float32,
+    output_dtype=jnp.float16,
+)
+
+TPU_BF16 = Policy(
+    name="tpu_bf16",
+    compute_dtype=jnp.bfloat16,
+    accum_dtype=jnp.float32,
+    output_dtype=jnp.bfloat16,
+)
+
+FP32 = Policy(
+    name="fp32",
+    compute_dtype=jnp.float32,
+    accum_dtype=jnp.float32,
+    output_dtype=jnp.float32,
+)
+
+_BY_NAME = {p.name: p for p in (PAPER_FP16, TPU_FP16, TPU_BF16, FP32)}
+
+
+def resolve(policy) -> Policy:
+    """Accept a Policy or its string name."""
+    if isinstance(policy, Policy):
+        return policy
+    if policy is None:
+        return TPU_BF16
+    try:
+        return _BY_NAME[str(policy)]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown precision policy {policy!r}; known: {sorted(_BY_NAME)}"
+        ) from e

@@ -1,0 +1,122 @@
+"""Tile-shape selection: the TPU analogue of RedMulE's (H, L, P) parameters.
+
+RedMulE fixes the X-buffer row width to ``H*(P+1)`` elements so that one
+288-bit TCDM port keeps the array saturated; changing H changes the number of
+memory ports (paper Fig 4b).  On TPU the equivalent trade is the BlockSpec
+tile shape: it fixes the VMEM working set (the X/W/Z buffers) and the
+DMA-per-FLOP ratio.  This module picks tile shapes under an explicit VMEM
+budget, with MXU alignment, mirroring the paper's "keep the port busy, keep
+the array full" rule:
+
+* the Z (output) tile is the accumulator held on-array for the whole
+  N-reduction (store-once rule) — it pays ``accum_bytes`` per element;
+* the X and W tiles are double-buffered (Pallas pipelining = the Streamer's
+  interleaved load schedule), so they pay 2x their bytes;
+* the lane dimension must be a multiple of 128 and the sublane dimension a
+  multiple of the dtype packing (8 for fp32, 16 for 16-bit types).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["TileConfig", "choose_tiles", "vmem_bytes", "MXU_LANE", "sublane"]
+
+# MXU systolic array is 128x128; lane dim of a VMEM tile must be 128-aligned.
+MXU_LANE = 128
+# Default VMEM budget we allow the GEMM working set to claim (v5e has ~16 MiB;
+# leave headroom for Pallas pipeline bookkeeping and the caller's other ops).
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def sublane(dtype) -> int:
+    """Minimum sublane multiple for a dtype (second-to-last dim packing)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return max(8, 32 // max(1, itemsize))
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Block shapes for Z = X @ W with X:(M,N), W:(N,K)  [paper naming].
+
+    bm tiles M (output rows, the "L" analogue), bk tiles K (output columns,
+    the "H*(P+1)" analogue), bn tiles the contraction N (the dimension the
+    paper streams W along and accumulates over).
+    """
+
+    bm: int = 256
+    bn: int = 512
+    bk: int = 256
+
+    def __post_init__(self):
+        for name in ("bm", "bn", "bk"):
+            v = getattr(self, name)
+            if v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
+
+    def grid(self, M: int, N: int, K: int) -> Tuple[int, int, int]:
+        return (_cdiv(M, self.bm), _cdiv(K, self.bk), _cdiv(N, self.bn))
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(x: int, m: int) -> int:
+    return _cdiv(x, m) * m
+
+
+def vmem_bytes(t: TileConfig, compute_dtype, accum_dtype) -> int:
+    """VMEM working set: double-buffered X & W tiles + resident Z accumulator."""
+    cb = jnp.dtype(compute_dtype).itemsize
+    ab = jnp.dtype(accum_dtype).itemsize
+    x_tile = t.bm * t.bn * cb
+    w_tile = t.bn * t.bk * cb
+    z_acc = t.bm * t.bk * ab
+    z_out = t.bm * t.bk * cb
+    return 2 * (x_tile + w_tile) + z_acc + z_out
+
+
+def choose_tiles(
+    M: int,
+    N: int,
+    K: int,
+    *,
+    compute_dtype=jnp.bfloat16,
+    accum_dtype=jnp.float32,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> TileConfig:
+    """Pick (bm, bn, bk) for a (M,N)x(N,K) GEMM.
+
+    Policy (paper §II-C transposed to VMEM):
+      1. never tile beyond the (aligned) problem size;
+      2. prefer a large square-ish Z tile (maximizes X/W reuse per Z byte,
+         the paper's store-once rule makes Z cheap to keep large);
+      3. grow bn (the streamed dimension) with leftover budget — longer
+         N-runs amortize the accumulator's fill latency, exactly like the
+         paper's H*(P+1)-cycle pipeline fill;
+      4. shrink in the order bn -> bk -> bm until the working set fits.
+    """
+    sl = sublane(compute_dtype)
+    m_cap = _round_up(min(M, 512), sl)
+    k_cap = _round_up(min(K, 512), MXU_LANE)
+    n_cap = _round_up(min(N, 2048), MXU_LANE)
+
+    bm, bk, bn = m_cap, k_cap, n_cap
+    # Shrink until the VMEM working set fits the budget.
+    while vmem_bytes(TileConfig(bm, bn, bk), compute_dtype, accum_dtype) > vmem_budget:
+        if bn > MXU_LANE:
+            bn //= 2
+        elif bk > MXU_LANE:
+            bk //= 2
+        elif bm > sl:
+            bm //= 2
+        else:
+            break
+    bn = max(MXU_LANE, _round_up(bn, MXU_LANE))
+    bk = max(MXU_LANE, _round_up(bk, MXU_LANE))
+    bm = max(sl, _round_up(bm, sl))
+    return TileConfig(bm=bm, bn=bn, bk=bk)

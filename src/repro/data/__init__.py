@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic sharded synthetic streams + prefetch."""
+
+from repro.data.pipeline import Prefetcher, SyntheticAE, SyntheticLM
+
+__all__ = ["SyntheticLM", "SyntheticAE", "Prefetcher"]

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* redmule_matmul.py -- the paper's engine: X-stationary / W-streamed tiled
+  GEMM with a VMEM scratch accumulator (store-once Z).  ops.py wraps it
+  (padding, tile choice, batching); ref.py holds the pure-jnp oracles.
+* flash_attention.py -- RedMulE-tiled attention (Q-stationary, K/V streamed,
+  online-softmax accumulator) for long-context prefill.
+"""

@@ -1,0 +1,80 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile multiples (zeros are accumulation-neutral), tile
+selection via :mod:`repro.core.tiling`, and batching (vmap adds a leading
+grid dimension to the kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as prec
+from repro.core import tiling
+from repro.kernels.redmule_matmul import redmule_matmul_pallas
+
+__all__ = ["redmule_matmul", "redmule_matmul_batched"]
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[-2], cols - x.shape[-1]
+    if pr == 0 and pc == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)]
+    return jnp.pad(x, pad)
+
+
+def _padded_dims(M: int, N: int, K: int, t: tiling.TileConfig):
+    up = lambda v, b: -(-v // b) * b
+    return up(M, t.bm), up(N, t.bn), up(K, t.bk)
+
+
+def redmule_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    policy: prec.Policy,
+    tile: Optional[tiling.TileConfig] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """2D Z = X @ W on the RedMulE kernel (pads, runs, slices)."""
+    M, N = x.shape
+    K = w.shape[1]
+    if tile is None:
+        tile = tiling.choose_tiles(
+            M, N, K, compute_dtype=policy.compute_dtype, accum_dtype=policy.accum_dtype
+        )
+    Mp, Np, Kp = _padded_dims(M, N, K, tile)
+    xp = _pad_to(x, Mp, Np)
+    wp = _pad_to(w, Np, Kp)
+    z = redmule_matmul_pallas(xp, wp, tile=tile, policy=policy, interpret=interpret)
+    return z[:M, :K]
+
+
+def redmule_matmul_batched(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    policy: prec.Policy,
+    tile: Optional[tiling.TileConfig] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched Z[b] = X[b] @ W[b]; x: (B, M, N), w: (B, N, K)."""
+    B, M, N = x.shape
+    K = w.shape[2]
+    if tile is None:
+        tile = tiling.choose_tiles(
+            M, N, K, compute_dtype=policy.compute_dtype, accum_dtype=policy.accum_dtype
+        )
+    Mp, Np, Kp = _padded_dims(M, N, K, tile)
+    xp = _pad_to(x, Mp, Np)
+    wp = _pad_to(w, Np, Kp)
+    run = functools.partial(
+        redmule_matmul_pallas, tile=tile, policy=policy, interpret=interpret
+    )
+    z = jax.vmap(run)(xp, wp)
+    return z[:, :M, :K]

@@ -1,0 +1,93 @@
+"""RedMulE matmul as a Pallas TPU kernel.
+
+The paper's dataflow (§II-B/C), re-derived for the TPU memory hierarchy
+(DESIGN.md §2):
+
+* grid = (M/bm, K/bk, N/bn) with the contraction (N) innermost and marked
+  ``arbitrary`` — the X tile for a given (m, k) stays resident across the
+  whole N sweep (X-stationary) while W tiles stream through VMEM
+  (W-streaming), double-buffered by the Pallas pipeline (the Streamer's
+  interleaved load schedule);
+* the Z tile lives in a VMEM scratch accumulator for the entire reduction
+  and is written to HBM exactly once, on the last N step (the Z-buffer
+  store-once rule);
+* the accumulator is fp32 by default (MXU-native) or fp16 re-rounded per
+  N-block in ``paper_faithful`` mode (the binary16 in-pipeline accumulation
+  error model).
+
+Shapes must be pre-padded to tile multiples by ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import precision as prec
+from repro.core import tiling
+
+__all__ = ["redmule_matmul_pallas"]
+
+
+def _kernel(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype):
+    """One (bm, bk) Z tile; invoked n_tiles times along the reduction."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # The MXU step: X tile (held steady) x streamed W tile. The partial
+    # product is accumulated on-array; in faithful-fp16 mode acc_ref is
+    # fp16 so the += re-rounds to binary16 every block, like the paper's
+    # FMA feedback path.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=acc_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == n_tiles - 1)
+    def _store_once():
+        z_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile", "policy", "interpret"),
+)
+def redmule_matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    tile: tiling.TileConfig,
+    policy: prec.Policy,
+    interpret: bool = False,
+) -> jax.Array:
+    """Z = X @ W for 2D operands already padded to tile multiples."""
+    M, N = x.shape
+    N2, K = w.shape
+    assert N == N2, (x.shape, w.shape)
+    assert M % tile.bm == 0 and N % tile.bn == 0 and K % tile.bk == 0, (
+        f"shapes {(M, N, K)} not padded to tiles {tile}"
+    )
+    grid = (M // tile.bm, K // tile.bk, N // tile.bn)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_tiles=grid[2], out_dtype=policy.out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile.bm, tile.bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile.bn, tile.bk), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tile.bm, tile.bk), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, K), policy.out_dtype),
+        scratch_shapes=[pltpu.VMEM((tile.bm, tile.bk), policy.accum_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="redmule_matmul",
+    )(x, w)

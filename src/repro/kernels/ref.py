@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the "software counterpart" of the paper's experiments and the
+correctness references for the Pallas kernels.  They are policy-aware: the
+faithful-fp16 oracle reproduces the kernel's per-N-block re-rounding
+semantics so kernel-vs-ref comparisons are tight for every policy.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as prec
+from repro.core import tiling
+
+__all__ = ["matmul_ref", "matmul_exact", "attention_ref"]
+
+
+def matmul_exact(x: jax.Array, w: jax.Array) -> jax.Array:
+    """fp32 ground truth, ignoring the policy (for error measurements)."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    policy: prec.Policy,
+    tile: Optional[tiling.TileConfig] = None,
+) -> jax.Array:
+    """Oracle for ``kernels.redmule_matmul`` with identical accumulation
+    semantics.
+
+    * fp32 accumulation: one dot in fp32, downcast once (store-once).
+    * faithful fp16 accumulation: partial products per bn-block are
+      re-rounded to the accumulator dtype before the running sum, exactly
+      like the kernel's ``acc_ref[...] += dot(...)`` with an fp16 scratch.
+    """
+    xc = x.astype(policy.compute_dtype)
+    wc = w.astype(policy.compute_dtype)
+    if not policy.faithful_accum:
+        z = jnp.dot(xc, wc, preferred_element_type=policy.accum_dtype)
+        return z.astype(policy.out_dtype)
+
+    bn = tile.bn if tile is not None else 128
+    N = x.shape[-1]
+    n_blocks = -(-N // bn)
+    pad = n_blocks * bn - N
+    if pad:
+        xc = jnp.pad(xc, [(0, 0)] * (xc.ndim - 1) + [(0, pad)])
+        wc = jnp.pad(wc, [(0, pad)] + [(0, 0)] * (wc.ndim - 1))
+    acc = jnp.zeros((*xc.shape[:-1], wc.shape[-1]), policy.accum_dtype)
+    for b in range(n_blocks):
+        xs = xc[..., b * bn : (b + 1) * bn]
+        ws = wc[b * bn : (b + 1) * bn]
+        part = jnp.dot(xs, ws, preferred_element_type=policy.accum_dtype)
+        acc = (acc + part).astype(policy.accum_dtype)
+    return acc.astype(policy.out_dtype)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Plain softmax attention oracle. q,k,v: (B, H, S, D) (k/v may have
+    fewer heads — GQA broadcast is the caller's job). fp32 softmax."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        S, T = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

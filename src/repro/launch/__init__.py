@@ -1,0 +1,1 @@
+"""Launch layer: meshes, training/serving drivers, multi-pod dry-run."""

@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Single pod  = 16 x 16 = 256 chips  ("data", "model").
+Multi-pod   = 2 x 16 x 16 = 512 chips ("pod", "data", "model") — the "pod"
+axis carries only data parallelism (gradient all-reduce) because inter-pod
+links are the slowest tier; TP/EP never cross a pod boundary.
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "data_axes", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes present in this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def make_host_mesh():
+    """A 1-device mesh for CPU smoke tests (same axis names as single-pod)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,160 @@
+"""Serving driver: sharded prefill + decode steps, batched greedy generation.
+
+Decode shardings: KV caches shard over batch (DP axes) and, crucially, over
+the *sequence* dimension on the model axis ("kv_seq" -> "model") — KV-head
+counts (4-24) never divide a 16-way TP axis, so the cache's parallel dim at
+32k-500k context is the sequence (DESIGN.md §5).
+
+CLI (deliverable (b)): serve a reduced model with batched requests:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \\
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import transformer
+from repro.runtime import sharding
+
+__all__ = [
+    "serve_rules", "cache_spec_tree", "build_serve_step", "build_prefill",
+    "make_sharded_serve_step", "generate", "main",
+]
+
+
+def serve_rules(base: Optional[sharding.Rules] = None) -> sharding.Rules:
+    """Decode-time rules: shard the KV sequence over the model axis.
+
+    KV-head counts (4-24) never divide the 16-way TP axis, so heads must be
+    declared replicated *up front* — otherwise they'd claim the model axis in
+    logical_spec and leave the sequence dim unsharded after sanitization."""
+    base = base or sharding.Rules()
+    return dataclasses.replace(
+        base, serve_attention=True,
+        overrides=base.overrides + (
+            ("kv_heads", None),
+            ("kv_seq", ("model",)),
+        ))
+
+
+def cache_spec_tree(cfg, rules, mesh, batch: int, max_len: int):
+    axes = transformer.cache_axes(cfg)
+    abstract = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, max_len))
+    spec = jax.tree.map(
+        lambda ax: sharding.logical_spec(ax, rules),
+        axes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+    return jax.tree.map(
+        lambda s, a: sharding.sanitize_spec(s, a.shape, mesh),
+        spec, abstract, is_leaf=lambda x: isinstance(x, P))
+
+
+def build_serve_step(cfg, rules: Optional[sharding.Rules]):
+    def step(params, cache, tokens, pos):
+        with sharding.use_rules(rules):
+            return transformer.serve_step(params, cfg, tokens, cache, pos)
+    return step
+
+
+def build_prefill(cfg, rules: Optional[sharding.Rules], max_len: int):
+    def pre(params, batch):
+        with sharding.use_rules(rules):
+            return transformer.prefill(params, cfg, batch, max_len)
+    return pre
+
+
+def make_sharded_serve_step(cfg, mesh, rules, *, batch: int, max_len: int,
+                            donate: bool = True):
+    rules = serve_rules(rules)
+    step = build_serve_step(cfg, rules)
+    pspec = transformer.param_specs(cfg, rules)
+    pshape = transformer.abstract_params(cfg)
+    pspec = jax.tree.map(
+        lambda s, a: sharding.sanitize_spec(s, a.shape, mesh),
+        pspec, pshape, is_leaf=lambda x: isinstance(x, P))
+    cspec = cache_spec_tree(cfg, rules, mesh, batch, max_len)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = dp[0] if len(dp) == 1 else dp
+    tok_spec = P(dp, None) if batch % _axsize(mesh, dp) == 0 else P()
+    ns = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t, is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(
+        step,
+        in_shardings=(ns(pspec), ns(cspec), ns(tok_spec), None),
+        out_shardings=(None, ns(cspec)),
+        donate_argnums=(1,) if donate else (),
+    )
+    return jitted, pspec, cspec
+
+
+def _axsize(mesh, name):
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape.get(name, 1) if hasattr(mesh.shape, "get") else mesh.shape[name]
+
+
+# --------------------------------------------------------------------- #
+# Generation loop (greedy)
+# --------------------------------------------------------------------- #
+def generate(params, cfg, prompts: jax.Array, gen_len: int,
+             rules: Optional[sharding.Rules] = None):
+    """prompts: (B, S) int32. Returns (B, S+gen_len)."""
+    B, S = prompts.shape
+    max_len = S + gen_len
+    pre = jax.jit(build_prefill(cfg, rules, max_len))
+    step = jax.jit(build_serve_step(cfg, rules), donate_argnums=(1,))
+    logits, cache = pre(params, {"inputs": prompts})
+    out = [prompts]
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    for i in range(gen_len):
+        out.append(tok)
+        if i == gen_len - 1:
+            break
+        logits, cache = step(params, cache, tok, jnp.int32(S + i))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="yi-9b", choices=configs.ARCH_IDS)
+    p.add_argument("--reduced", action="store_true", default=True)
+    p.add_argument("--full", dest="reduced", action="store_false")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
+    rng = jax.random.PRNGKey(args.seed)
+    params = transformer.init_params(rng, cfg)
+    prompts = jax.random.randint(
+        rng, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
+    t0 = time.perf_counter()
+    seqs = generate(params, cfg, prompts, args.gen)
+    jax.block_until_ready(seqs)
+    dt = time.perf_counter() - t0
+    tps = args.batch * args.gen / dt
+    print(f"arch={cfg.name} batched-generate {seqs.shape} in {dt:.2f}s "
+          f"({tps:.1f} tok/s)")
+    print("sample:", np.asarray(seqs[0, args.prompt_len:]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: every GEMM routes through the RedMulE engine."""

@@ -1,0 +1,347 @@
+"""Attention on the RedMulE engine: GQA (+qk-norm, sliding window) and MLA.
+
+Prefill/train uses a q-chunked online attention (flash-style in pure jnp) so
+32k-sequence score tensors are never materialized whole; on TPU the Pallas
+``flash_attention`` kernel implements the same schedule.  Decode attends one
+query against the KV cache.
+
+Caches:
+  * GQA — k/v tensors (B, Hkv, T, hd), updated in place at ``pos``;
+  * MLA — the *compressed* (c_kv, k_rope) pair (B, T, r[+dr]): the paper's
+    store-small / recompute-fat trade, k_nope/v re-expanded on the fly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import matmul
+from repro.core import precision as prec
+from repro.models import layers
+from repro.models.layers import Param
+from repro.runtime import sharding
+
+__all__ = [
+    "gqa_schema",
+    "mla_schema",
+    "gqa_attention",
+    "mla_attention",
+    "init_gqa_cache",
+    "init_mla_cache",
+    "chunked_attention",
+]
+
+NEG_INF = jnp.float32(-1e30)
+
+
+# --------------------------------------------------------------------- #
+# Schemas
+# --------------------------------------------------------------------- #
+def gqa_schema(cfg) -> Dict[str, Any]:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s: Dict[str, Any] = {
+        # fused qkv: one fat RedMulE GEMM; split after
+        "wqkv": Param((d, (hq + 2 * hkv) * hd), ("embed", "heads")),
+        "wo": Param((hq * hd, d), ("heads", "embed")),
+    }
+    if cfg.use_bias:
+        s["bqkv"] = Param(((hq + 2 * hkv) * hd,), ("heads",), init="zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = Param((hd,), (None,), init="ones")
+        s["k_norm"] = Param((hd,), (None,), init="ones")
+    return s
+
+
+def mla_schema(cfg) -> Dict[str, Any]:
+    m = cfg.mla
+    d, hq = cfg.d_model, cfg.n_heads
+    return {
+        "wq": Param((d, hq * (m.qk_nope_dim + m.qk_rope_dim)), ("embed", "heads")),
+        # fused down-projection: compressed kv rank + shared rope key
+        "wdkv": Param((d, m.kv_lora_rank + m.qk_rope_dim), ("embed", "kv_rank")),
+        "kv_norm": Param((m.kv_lora_rank,), (None,), init="ones"),
+        "wuk": Param((m.kv_lora_rank, hq * m.qk_nope_dim), ("kv_rank", "heads")),
+        "wuv": Param((m.kv_lora_rank, hq * m.v_head_dim), ("kv_rank", "heads")),
+        "wo": Param((hq * m.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Caches
+# --------------------------------------------------------------------- #
+def init_gqa_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (batch, hkv, max_len, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Core attention math (q-chunked online)
+# --------------------------------------------------------------------- #
+def _masked_softmax_block(
+    s: jax.Array,  # (B, Hkv, G, qc, T) fp32 scores
+    rows: jax.Array,  # (qc,) absolute query positions
+    kv_valid: jax.Array,  # scalar: number of valid kv slots
+    causal: bool,
+    window: Optional[jax.Array],
+) -> jax.Array:
+    cols = jnp.arange(s.shape[-1])
+    mask = cols[None, :] < kv_valid
+    if causal:
+        mask = mask & (cols[None, :] <= rows[:, None])
+    if window is not None:
+        mask = mask & (cols[None, :] > rows[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Hkv, G, S, hd)
+    k: jax.Array,  # (B, Hkv, T, hd)
+    v: jax.Array,  # (B, Hkv, T, hdv)
+    *,
+    q_offset: jax.Array,  # scalar: absolute position of q[..., 0, :]
+    kv_valid: jax.Array,  # scalar: valid kv length
+    causal: bool = True,
+    window: Optional[jax.Array] = None,
+    q_chunk: int = 1024,
+    scale: Optional[float] = None,
+    policy: prec.Policy,
+) -> jax.Array:
+    """Returns (B, Hkv, G, S, hdv). Scores fp32, never materialized beyond
+    one q-chunk (the RedMulE store-once rule applied to attention)."""
+    B, Hkv, G, S, hd = q.shape
+    if scale is None:
+        scale = hd**-0.5
+    scores_policy = dataclasses.replace(
+        policy, name=policy.name + "_scores", output_dtype=jnp.float32,
+        faithful_accum=False,
+    )
+    kt = jnp.swapaxes(k, -1, -2)[:, :, None]  # (B, Hkv, 1, hd, T)
+    vb = v[:, :, None]
+    # Decode: pin the attention dots to the sequence-sharded KV layout —
+    # scores/pv become partial over the seq shards (small softmax
+    # all-reduces) instead of GSPMD "involuntarily rematerializing" the
+    # whole cache to match the head-sharded output (a 537 MB x layers
+    # all-gather).  Training keeps GSPMD's head-sharded schedule.
+    rules = sharding.current_rules()
+    pin = rules is not None and rules.serve_attention
+
+    def c(x, *axes):
+        return sharding.constrain(x, *axes) if pin else x
+
+    kt = c(kt, "batch", "kv_heads", None, None, "kv_seq")
+    vb = c(vb, "batch", "kv_heads", None, "kv_seq", None)
+
+    def block(q_blk: jax.Array, rows: jax.Array) -> jax.Array:
+        q_blk = c(q_blk, "batch", "kv_heads", None, None, None)
+        s = matmul(q_blk, kt, policy=scores_policy) * scale
+        s = c(s, "batch", "kv_heads", None, None, "kv_seq")
+        p = _masked_softmax_block(s, rows, kv_valid, causal, window)
+        out = matmul(p.astype(policy.compute_dtype), vb, policy=policy)
+        return c(out, "batch", "kv_heads", None, None, None)
+
+    if S <= q_chunk:
+        return block(q, q_offset + jnp.arange(S))
+
+    n = -(-S // q_chunk)
+    pad = n * q_chunk - S
+    if pad:
+        q = jnp.pad(q, [(0, 0)] * 3 + [(0, pad), (0, 0)])
+    qs = jnp.moveaxis(q.reshape(B, Hkv, G, n, q_chunk, hd), 3, 0)
+
+    def step(_, xs):
+        q_blk, idx = xs
+        rows = q_offset + idx * q_chunk + jnp.arange(q_chunk)
+        return None, block(q_blk, rows)
+
+    _, out = jax.lax.scan(step, None, (qs, jnp.arange(n)))
+    out = jnp.moveaxis(out, 0, 3).reshape(B, Hkv, G, n * q_chunk, -1)
+    return out[:, :, :, :S]
+
+
+# --------------------------------------------------------------------- #
+# GQA forward
+# --------------------------------------------------------------------- #
+def gqa_attention(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    *,
+    pos_offset: jax.Array,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    window: Optional[jax.Array] = None,
+    policy: prec.Policy,
+    q_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hkv
+
+    qkv = matmul(x, params["wqkv"], policy=policy)
+    if "bqkv" in params:
+        qkv = qkv + params["bqkv"].astype(qkv.dtype)
+    q, kk, vv = jnp.split(qkv, [hq * hd, (hq + hkv) * hd], axis=-1)
+    q = q.reshape(B, S, hq, hd).transpose(0, 2, 1, 3)       # (B, Hq, S, hd)
+    kk = kk.reshape(B, S, hkv, hd).transpose(0, 2, 1, 3)    # (B, Hkv, S, hd)
+    vv = vv.reshape(B, S, hkv, hd).transpose(0, 2, 1, 3)
+
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, params["q_norm"])
+        kk = layers.rmsnorm(kk, params["k_norm"])
+
+    positions = pos_offset + jnp.arange(S)
+    cos, sin = layers.rope(positions, hd, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    kk = layers.apply_rope(kk, cos, sin)
+
+    if cache is not None:
+        if S == 1:
+            # decode: masked merge — elementwise over the (possibly
+            # TP-sharded) cache sequence dim, so no gather is forced the way
+            # a dynamic-update-slice at a traced position would
+            T = cache["k"].shape[2]
+            hit = (jnp.arange(T) == pos_offset)[None, None, :, None]
+            k_all = jnp.where(hit, kk.astype(cache["k"].dtype), cache["k"])
+            v_all = jnp.where(hit, vv.astype(cache["v"].dtype), cache["v"])
+        else:
+            zero = jnp.zeros((), jnp.int32)
+            k_all = jax.lax.dynamic_update_slice(
+                cache["k"], kk.astype(cache["k"].dtype),
+                (zero, zero, pos_offset, zero))
+            v_all = jax.lax.dynamic_update_slice(
+                cache["v"], vv.astype(cache["v"].dtype),
+                (zero, zero, pos_offset, zero))
+        new_cache = {"k": k_all, "v": v_all}
+        kv_valid = pos_offset + S
+    else:
+        k_all, v_all, new_cache, kv_valid = kk, vv, None, jnp.int32(S)
+
+    k_all = sharding.constrain(k_all, "batch", "kv_heads", "kv_seq", None)
+    v_all = sharding.constrain(v_all, "batch", "kv_heads", "kv_seq", None)
+
+    qg = q.reshape(B, hkv, g, S, hd)
+    o = chunked_attention(
+        qg, k_all, v_all,
+        q_offset=pos_offset, kv_valid=kv_valid, causal=True,
+        window=window, q_chunk=q_chunk, policy=policy,
+    )
+    o = o.reshape(B, hq, S, hd).transpose(0, 2, 1, 3).reshape(B, S, hq * hd)
+    o = sharding.constrain(o, "batch", None, "heads")
+    out = matmul(o, params["wo"], policy=policy)
+    return out, new_cache
+
+
+# --------------------------------------------------------------------- #
+# MLA forward (DeepSeek-V2 family)
+# --------------------------------------------------------------------- #
+def mla_attention(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg,
+    *,
+    pos_offset: jax.Array,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    policy: prec.Policy,
+    q_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    m = cfg.mla
+    B, S, d = x.shape
+    hq = cfg.n_heads
+    dn, dr, dv, r = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+
+    q = matmul(x, params["wq"], policy=policy).reshape(B, S, hq, dn + dr)
+    q = q.transpose(0, 2, 1, 3)  # (B, Hq, S, dn+dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+
+    dkv = matmul(x, params["wdkv"], policy=policy)  # (B, S, r + dr)
+    ckv, kr = dkv[..., :r], dkv[..., r:]
+    ckv = layers.rmsnorm(ckv, params["kv_norm"])
+
+    positions = pos_offset + jnp.arange(S)
+    cos, sin = layers.rope(positions, dr, cfg.rope_theta)
+    qr = layers.apply_rope(qr, cos, sin)
+    kr = layers.apply_rope(kr[:, None], cos, sin)[:, 0]  # (B, S, dr)
+
+    if cache is not None:
+        if S == 1:
+            T = cache["ckv"].shape[1]
+            hit = (jnp.arange(T) == pos_offset)[None, :, None]
+            ckv_all = jnp.where(hit, ckv.astype(cache["ckv"].dtype), cache["ckv"])
+            kr_all = jnp.where(hit, kr.astype(cache["kr"].dtype), cache["kr"])
+        else:
+            zero = jnp.zeros((), jnp.int32)
+            ckv_all = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                (zero, pos_offset, zero))
+            kr_all = jax.lax.dynamic_update_slice(
+                cache["kr"], kr.astype(cache["kr"].dtype),
+                (zero, pos_offset, zero))
+        new_cache = {"ckv": ckv_all, "kr": kr_all}
+        kv_valid = pos_offset + S
+    else:
+        ckv_all, kr_all, new_cache, kv_valid = ckv, kr, None, jnp.int32(S)
+
+    ckv_all = sharding.constrain(ckv_all, "batch", "kv_seq", None)
+    T = ckv_all.shape[1]
+
+    if S == 1 and cache is not None:
+        # Absorbed decode: fold W_uk into the query and W_uv into the
+        # context so the compressed cache is attended DIRECTLY — no
+        # per-step (T, Hq*dn) k/v re-expansion (saves a factor of dn=128
+        # on the T-dependent FLOPs; this was the useful~0 diagnosis of the
+        # MLA decode cells in EXPERIMENTS.md §Roofline).
+        acc = jnp.float32
+        wuk = params["wuk"].reshape(r, hq, dn).astype(policy.compute_dtype)
+        wuv = params["wuv"].reshape(r, hq, dv).astype(policy.compute_dtype)
+        q_abs = jnp.einsum("bhsd,rhd->bhsr", qn.astype(policy.compute_dtype),
+                           wuk, preferred_element_type=acc)
+        s = jnp.einsum("bhsr,btr->bhst", q_abs.astype(policy.compute_dtype),
+                       ckv_all, preferred_element_type=acc)
+        s = s + jnp.einsum("bhsd,btd->bhst",
+                           qr.astype(policy.compute_dtype), kr_all,
+                           preferred_element_type=acc)
+        s = s.astype(jnp.float32) * (dn + dr) ** -0.5
+        mask = jnp.arange(T)[None, None, None, :] < kv_valid
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bhsr", p.astype(policy.compute_dtype),
+                         ckv_all, preferred_element_type=acc)
+        o = jnp.einsum("bhsr,rhd->bhsd", ctx.astype(policy.compute_dtype),
+                       wuv, preferred_element_type=acc)
+        o = o.astype(policy.compute_dtype)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, hq * dv)
+        o = sharding.constrain(o, "batch", None, "heads")
+        return matmul(o, params["wo"], policy=policy), new_cache
+
+    # Prefill/train: re-expand the compressed cache (the MLA trade:
+    # small cache, extra GEMM)
+    kn = matmul(ckv_all, params["wuk"], policy=policy).reshape(B, T, hq, dn)
+    vv = matmul(ckv_all, params["wuv"], policy=policy).reshape(B, T, hq, dv)
+    kn = kn.transpose(0, 2, 1, 3)  # (B, Hq, T, dn)
+    vv = vv.transpose(0, 2, 1, 3)
+    k_full = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr_all[:, None], (B, hq, T, dr))], axis=-1)
+    q_full = jnp.concatenate([qn, qr], axis=-1)
+
+    o = chunked_attention(
+        q_full[:, :, None], k_full, vv,
+        q_offset=pos_offset, kv_valid=kv_valid, causal=True,
+        q_chunk=q_chunk, scale=(dn + dr) ** -0.5, policy=policy,
+    )
+    o = o[:, :, 0].transpose(0, 2, 1, 3).reshape(B, S, hq * dv)
+    o = sharding.constrain(o, "batch", None, "heads")
+    out = matmul(o, params["wo"], policy=policy)
+    return out, new_cache

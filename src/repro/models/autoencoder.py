@@ -1,0 +1,72 @@
+"""TinyMLPerf deep AutoEncoder — the paper's end-to-end use case (§III-B).
+
+MLPerf Tiny anomaly detection (ToyADMOS): 640 -> [128 x4] -> 8 -> [128 x4]
+-> 640, trained with MSE.  Every layer runs on the RedMulE engine in pure
+FP16 (the paper's precision regime) — this is the "adaptive deep learning /
+online fine-tuning on device" story, functional end to end.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear
+from repro.core import precision as prec
+from repro.core.perf_model import AE_DIMS
+from repro.models.layers import Param, init_tree
+
+__all__ = ["ae_schema", "init_ae", "ae_forward", "ae_loss", "AE_DIMS"]
+
+
+def ae_schema() -> Dict[str, Any]:
+    s: Dict[str, Any] = {}
+    n = len(AE_DIMS) - 1
+    for i in range(n):
+        s[f"fc{i}"] = {
+            # He init: 10 stacked ReLU layers vanish under 1/sqrt(fan_in)
+            "w": Param((AE_DIMS[i], AE_DIMS[i + 1]), ("ae_hidden", "ae_hidden"),
+                       init="he"),
+            "b": Param((AE_DIMS[i + 1],), ("ae_hidden",), init="zeros"),
+        }
+        if i != n - 1:
+            # the MLPerf Tiny AD reference model has BatchNorm after every
+            # hidden dense layer (also prevents the 8-wide bottleneck dying)
+            s[f"fc{i}"]["gamma"] = Param((AE_DIMS[i + 1],), ("ae_hidden",),
+                                         init="ones")
+            s[f"fc{i}"]["beta"] = Param((AE_DIMS[i + 1],), ("ae_hidden",),
+                                        init="zeros")
+    return s
+
+
+def init_ae(rng: jax.Array, dtype=jnp.float32):
+    return init_tree(rng, ae_schema(), dtype=dtype)
+
+
+def ae_forward(params, x: jax.Array, *, policy: prec.Policy = prec.PAPER_FP16,
+               backend=None) -> jax.Array:
+    """x: (B, 640) -> reconstruction (B, 640). Dense->BN->ReLU hidden blocks
+    (the MLPerf Tiny AD reference structure); BN statistics in fp32."""
+    h = x
+    n = len(AE_DIMS) - 1
+    for i in range(n):
+        p = params[f"fc{i}"]
+        h = linear(h, p["w"], p["b"], policy=policy, backend=backend)
+        if i != n - 1:
+            hf = h.astype(jnp.float32)
+            mu = hf.mean(axis=0, keepdims=True)
+            var = hf.var(axis=0, keepdims=True)
+            hf = (hf - mu) * jax.lax.rsqrt(var + 1e-5)
+            hf = hf * p["gamma"].astype(jnp.float32) + p["beta"].astype(jnp.float32)
+            h = jax.nn.relu(hf).astype(h.dtype)
+    return h
+
+
+def ae_loss(params, x: jax.Array, *, policy: prec.Policy = prec.PAPER_FP16,
+            backend=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    rec = ae_forward(params, x, policy=policy, backend=backend)
+    err = (rec.astype(jnp.float32) - x.astype(jnp.float32))
+    loss = jnp.mean(err * err)
+    return loss, {"mse": loss}

@@ -1,0 +1,209 @@
+"""Primitive layers + the parameter-schema machinery.
+
+Every parameter in the framework is declared as a :class:`Param` — shape plus
+*logical* sharding axes — inside a nested-dict schema.  One schema drives
+three things (MaxText-style, so ``init_params`` and ``param_specs`` can never
+drift apart):
+
+  * ``init_tree``  — materializes arrays (deterministic per-path RNG);
+  * ``spec_tree``  — the matching pytree of ``PartitionSpec`` for pjit;
+  * ``abstract_tree`` — ShapeDtypeStructs for the AOT dry-run.
+
+All GEMMs route through :func:`repro.core.matmul` (the RedMulE engine).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.core import matmul
+from repro.runtime import sharding
+
+__all__ = [
+    "Param",
+    "init_tree",
+    "spec_tree",
+    "abstract_tree",
+    "stack_schema",
+    "rmsnorm",
+    "layernorm",
+    "rope",
+    "apply_rope",
+    "mlp_glu",
+    "activation",
+    "cross_entropy",
+]
+
+
+# --------------------------------------------------------------------- #
+# Parameter schema
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Declares one parameter: shape, logical axes, initializer."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "proj"  # proj | embed | zeros | ones
+    fan_in_dim: int = -2
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def _path_fold(path: Tuple[str, ...]) -> int:
+    """Deterministic across processes — Python's hash() is salted."""
+    import zlib
+
+    return zlib.crc32("/".join(path).encode()) & 0x7FFFFFFF
+
+
+def init_tree(rng: jax.Array, schema: Dict[str, Any], dtype=jnp.float32):
+    """Materialize a schema. RNG is folded per path, so adding a parameter
+    never reshuffles its siblings (stable across config evolution)."""
+
+    def go(node, path):
+        if _is_param(node):
+            key = jax.random.fold_in(rng, _path_fold(path))
+            if node.init == "zeros":
+                return jnp.zeros(node.shape, dtype)
+            if node.init == "ones":
+                return jnp.ones(node.shape, dtype)
+            if node.init == "embed":
+                return (jax.random.normal(key, node.shape) * 0.02).astype(dtype)
+            fan_in = node.shape[node.fan_in_dim] if node.shape else 1
+            scale = (2.0 / fan_in) ** 0.5 if node.init == "he" else fan_in**-0.5
+            return (jax.random.normal(key, node.shape) * scale).astype(dtype)
+        return {k: go(v, path + (k,)) for k, v in node.items()}
+
+    return go(schema, ())
+
+
+def spec_tree(schema: Dict[str, Any], rules: Optional[sharding.Rules]):
+    def go(node):
+        if _is_param(node):
+            return sharding.logical_spec(node.axes, rules) if rules else PartitionSpec()
+        return {k: go(v) for k, v in node.items()}
+
+    return go(schema)
+
+
+def abstract_tree(schema: Dict[str, Any], dtype=jnp.float32):
+    def go(node):
+        if _is_param(node):
+            return jax.ShapeDtypeStruct(node.shape, dtype)
+        return {k: go(v) for k, v in node.items()}
+
+    return go(schema)
+
+
+def stack_schema(schema: Dict[str, Any], n: int, axis_name: str = "layers"):
+    """Prepend a stacked-layers dimension to every Param (for lax.scan)."""
+
+    def go(node):
+        if _is_param(node):
+            return Param(
+                shape=(n, *node.shape),
+                axes=(axis_name, *node.axes),
+                init=node.init,
+                fan_in_dim=node.fan_in_dim if node.fan_in_dim < 0 else node.fan_in_dim + 1,
+            )
+        return {k: go(v) for k, v in node.items()}
+
+    return go(schema)
+
+
+# --------------------------------------------------------------------- #
+# Norms / activations / embeddings
+# --------------------------------------------------------------------- #
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # statistics in fp32, application in the native dtype: the full-width
+    # fp32 upcast must never exist as a tensor — XLA hoists it out of remat
+    # regions and saves an fp32 copy of every residual otherwise
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: Optional[jax.Array] = None,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True) - jnp.square(mu)
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mu.astype(x.dtype)) * inv.astype(x.dtype) * scale.astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    return y
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+# --------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------- #
+def rope(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin tables (..., dim/2)."""
+    freqs = theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, H, S, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    if cos.ndim == 2:
+        cos, sin = cos[None, None], sin[None, None]
+    else:
+        cos, sin = cos[:, None], sin[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# MLP (gated) on the RedMulE engine
+# --------------------------------------------------------------------- #
+def mlp_glu(params: Dict[str, jax.Array], x: jax.Array, *, act: str, policy) -> jax.Array:
+    """Gated MLP: (act(x @ w_gate) * (x @ w_up)) @ w_down.  ``w_in`` fuses
+    gate+up as (d, 2*ff) — one fat RedMulE GEMM instead of two."""
+    h = matmul(x, params["w_in"], policy=policy)
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = activation(gate, act) * up
+    h = sharding.constrain(h, "batch", None, "ff")
+    return matmul(h, params["w_out"], policy=policy)
+
+
+# --------------------------------------------------------------------- #
+# Loss
+# --------------------------------------------------------------------- #
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 0.0) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Token-level CE in fp32; labels < 0 are masked out."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse**2
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    return loss, {"loss": loss, "ntokens": denom}

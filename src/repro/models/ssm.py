@@ -1,0 +1,311 @@
+"""SSM blocks: xLSTM (mLSTM + sLSTM) and Mamba2/SSD (for Hymba).
+
+One *chunkwise linear-attention engine* serves both mLSTM and SSD: the
+recurrence ``S_t = exp(g_t) * S_{t-1} + k_t v_t^T`` is evaluated in chunks —
+intra-chunk terms become dense GEMMs (RedMulE territory; this is the
+GEMM-dominated form claimed in DESIGN.md §5) and only the chunk-to-chunk
+state crosses the scan.  With log-decays g <= 0 every factor is exp(<=0),
+so the chunked form is numerically stable without a separate stabilizer.
+
+sLSTM is inherently sequential (scalar-state recurrence with a stabilizer,
+paper-inapplicable — no GEMM shape in the recurrence); it runs as a
+``lax.scan`` over time with its input projections hoisted into one big GEMM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import matmul
+from repro.core import precision as prec
+from repro.models import layers
+from repro.models.layers import Param
+
+__all__ = [
+    "chunked_linear_attention",
+    "linear_attention_step",
+    "mlstm_schema",
+    "mlstm_block",
+    "slstm_schema",
+    "slstm_block",
+    "mamba_schema",
+    "mamba_mixer",
+]
+
+_F32 = prec.FP32
+
+
+# --------------------------------------------------------------------- #
+# Chunkwise linear attention engine
+# --------------------------------------------------------------------- #
+def chunked_linear_attention(
+    q: jax.Array,        # (B, H, S, dk)
+    k: jax.Array,        # (B, H, S, dk)
+    v: jax.Array,        # (B, H, S, dv)
+    log_g: jax.Array,    # (B, H, S) log-decay, <= 0
+    *,
+    chunk: int = 64,
+    state: Optional[jax.Array] = None,  # (B, H, dk, dv)
+    backend: Optional[str] = None,      # xla | pallas | interpret
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,H,S,dv), final_state (B,H,dk,dv)).
+
+    backend="pallas" uses the VMEM-resident-state kernel
+    (kernels/chunked_linear_attention.py — the store-once rule applied to
+    the recurrence); default: pallas on TPU, xla elsewhere.  Falls back to
+    the xla path when an initial state is carried in (decode prefix) or the
+    sequence is not chunk-aligned."""
+    B, H, S, dk = q.shape
+    b = backend or ("pallas" if jax.default_backend() == "tpu" else "xla")
+    if b in ("pallas", "interpret") and state is None and S % chunk == 0:
+        from repro.kernels.chunked_linear_attention import (
+            chunked_linear_attention_pallas)
+
+        dv_ = v.shape[-1]
+        out, st = chunked_linear_attention_pallas(
+            q.reshape(B * H, S, dk), k.reshape(B * H, S, dk),
+            v.reshape(B * H, S, dv_),
+            log_g.reshape(B * H, S).astype(jnp.float32),
+            chunk=chunk, interpret=(b == "interpret"))
+        return (out.reshape(B, H, S, dv_).astype(jnp.float32),
+                st.reshape(B, H, dk, dv_))
+    dv = v.shape[-1]
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        padt = [(0, 0), (0, 0), (0, pad)]
+        q = jnp.pad(q, padt + [(0, 0)])
+        k = jnp.pad(k, padt + [(0, 0)])
+        v = jnp.pad(v, padt + [(0, 0)])
+        log_g = jnp.pad(log_g, padt)  # pad decay 0 => exp(0)=1, k=0 is inert
+
+    qf = q.astype(jnp.float32).reshape(B, H, n, chunk, dk)
+    kf = k.astype(jnp.float32).reshape(B, H, n, chunk, dk)
+    vf = v.astype(jnp.float32).reshape(B, H, n, chunk, dv)
+    gf = log_g.astype(jnp.float32).reshape(B, H, n, chunk)
+
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]  # i >= j
+
+    def step(S_prev, xs):
+        qc, kc, vc, gc = xs  # (B,H,c,·)
+        L = jnp.cumsum(gc, axis=-1)            # (B,H,c) inclusive decay-log
+        Ltot = L[..., -1:]
+        # intra-chunk: A_ij = exp(L_i - L_j) for i >= j
+        D = L[..., :, None] - L[..., None, :]
+        A = jnp.where(causal[None, None], jnp.exp(D), 0.0)
+        s = matmul(qc, jnp.swapaxes(kc, -1, -2), policy=_F32) * A   # (B,H,c,c)
+        out = matmul(s, vc, policy=_F32)
+        # inter-chunk: q_i decayed from chunk start against carried state
+        out = out + matmul(qc * jnp.exp(L)[..., None], S_prev, policy=_F32)
+        # state update: S' = exp(Ltot) S + sum_j exp(Ltot - L_j) k_j v_j
+        kdec = kc * jnp.exp(Ltot - L)[..., None]
+        S_new = jnp.exp(Ltot)[..., None] * S_prev + matmul(
+            jnp.swapaxes(kdec, -1, -2), vc, policy=_F32)
+        return S_new, out
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (qf, kf, vf, gf))
+    state, outs = jax.lax.scan(step, state, xs)
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, n * chunk, dv)[:, :, :S]
+    return out, state
+
+
+def linear_attention_step(
+    state: jax.Array,  # (B, H, dk, dv)
+    q: jax.Array,      # (B, H, dk)
+    k: jax.Array,
+    v: jax.Array,      # (B, H, dv)
+    log_g: jax.Array,  # (B, H)
+) -> Tuple[jax.Array, jax.Array]:
+    """One decode step: S' = exp(g) S + k v^T; out = q @ S'."""
+    state = (
+        jnp.exp(log_g.astype(jnp.float32))[..., None, None] * state
+        + k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    out = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    return out, state
+
+
+def _per_head_rmsnorm(x: jax.Array, scale: jax.Array, H: int) -> jax.Array:
+    """Group-norm over each head's channels. x: (B, S, di), scale: (di,)."""
+    B, S, di = x.shape
+    xh = x.reshape(B, S, H, di // H)
+    xh = layers.rmsnorm(xh, jnp.ones((di // H,), x.dtype))
+    return xh.reshape(B, S, di) * scale.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# mLSTM block (xLSTM)
+# --------------------------------------------------------------------- #
+def mlstm_schema(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = cfg.ssm.mlstm_proj_factor * d
+    H = cfg.n_heads
+    hd = di // H
+    return {
+        "w_up": Param((d, 2 * di), ("embed", "ff")),
+        # block-diagonal per-head q/k/v (xLSTM's linear_headwise): H
+        # independent hd->3hd projections, not one dense di->3di
+        "w_qkv": Param((H, hd, 3 * hd), (None, None, None)),
+        "w_if": Param((di, 2 * H), (None, None)),
+        "b_if": Param((2 * H,), (None,), init="zeros"),
+        "norm": Param((di,), (None,), init="ones"),
+        "w_down": Param((di, d), ("ff", "embed")),
+    }
+
+
+def mlstm_block(
+    params, x, cfg, *, policy, state=None,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """x: (B, S, d). state: (B, H, hd, hd) carried across decode steps."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = cfg.ssm.mlstm_proj_factor * d
+    hd = di // H
+
+    u = matmul(x, params["w_up"], policy=policy)
+    xin, z = jnp.split(u, 2, axis=-1)
+    xh = xin.reshape(B, S, H, hd).transpose(2, 0, 1, 3).reshape(H, B * S, hd)
+    qkv = matmul(xh, params["w_qkv"], policy=policy)      # (H, B*S, 3hd)
+    qkv = qkv.reshape(H, B, S, 3 * hd).transpose(1, 0, 2, 3)
+    q, k, v = jnp.split(qkv, 3, axis=-1)                  # (B, H, S, hd)
+    q = q * hd**-0.5
+
+    gates = matmul(xin, params["w_if"], policy=_F32) + params["b_if"].astype(jnp.float32)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)          # (B, S, H)
+    log_f = -jax.nn.softplus(-(f_raw + 3.0))             # log sigmoid(f+3) <= 0
+    i_gate = jax.nn.sigmoid(i_raw)
+    k = k * i_gate.transpose(0, 2, 1)[..., None].astype(k.dtype)
+    log_g = log_f.transpose(0, 2, 1)                     # (B, H, S)
+
+    if S == 1 and state is not None:
+        o, state = linear_attention_step(
+            state, q[:, :, 0], k[:, :, 0], v[:, :, 0], log_g[:, :, 0])
+        o = o[:, :, None]
+    else:
+        o, state = chunked_linear_attention(
+            q, k, v, log_g, chunk=cfg.ssm.chunk, state=state)
+
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, di).astype(x.dtype)
+    o = _per_head_rmsnorm(o, params["norm"], H)
+    o = o * jax.nn.silu(z)
+    return matmul(o, params["w_down"], policy=policy), state
+
+
+# --------------------------------------------------------------------- #
+# sLSTM block (xLSTM) — sequential scalar recurrence
+# --------------------------------------------------------------------- #
+def slstm_schema(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ff = cfg.ssm.slstm_ffn_dim(d)
+    return {
+        "w_gates": Param((d, 4 * d), ("embed", "ff")),
+        "r_gates": Param((H, hd, 4 * hd), (None, None, None)),
+        "b_gates": Param((4 * d,), (None,), init="zeros"),
+        "norm": Param((d,), (None,), init="ones"),
+        "ffn": {
+            "w_in": Param((d, 2 * ff), ("embed", "ff")),
+            "w_out": Param((ff, d), ("ff", "embed")),
+        },
+    }
+
+
+def slstm_block(
+    params, x, cfg, *, policy, state=None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """state: dict(c, n, h, m) each (B, H, hd)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+
+    wx = matmul(x, params["w_gates"], policy=policy)     # (B, S, 4d) — one GEMM
+    wx = wx.reshape(B, S, 4, H, hd).astype(jnp.float32)
+    if state is None:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        state = {"c": zeros, "n": zeros, "h": zeros,
+                 "m": jnp.full((B, H, hd), -1e30, jnp.float32)}
+    b = params["b_gates"].astype(jnp.float32).reshape(4, H, hd)
+    r = params["r_gates"].astype(jnp.float32)
+
+    def step(st, wx_t):  # wx_t: (B, 4, H, hd)
+        rec = jnp.einsum("bhd,hde->bhe", st["h"], r).reshape(B, H, 4, hd)
+        g = wx_t + rec.transpose(0, 2, 1, 3) + b[None]
+        z_t, i_t, f_t, o_t = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        log_f = -jax.nn.softplus(-(f_t + 3.0))
+        m_new = jnp.maximum(log_f + st["m"], i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(log_f + st["m"] - m_new)
+        c = f_p * st["c"] + i_p * jnp.tanh(z_t)
+        n = f_p * st["n"] + i_p
+        h = jax.nn.sigmoid(o_t) * c / jnp.maximum(jnp.abs(n), 1.0)
+        return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    h = layers.rmsnorm(h, params["norm"])
+    y = h + layers.mlp_glu(params["ffn"], h, act=cfg.act, policy=policy)
+    return y, state
+
+
+# --------------------------------------------------------------------- #
+# Mamba2 / SSD mixer (Hymba's SSM heads)
+# --------------------------------------------------------------------- #
+def mamba_schema(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = cfg.ssm.mamba_expand * d
+    H, N = cfg.n_heads, cfg.ssm.state_dim
+    return {
+        "w_xz": Param((d, 2 * di), ("embed", "ff")),
+        "w_bcdt": Param((d, 2 * N + H), ("embed", None)),
+        "a_log": Param((H,), (None,), init="zeros"),
+        "skip_d": Param((H,), (None,), init="ones"),
+        "dt_bias": Param((H,), (None,), init="zeros"),
+        "norm": Param((di,), (None,), init="ones"),
+        "w_out": Param((di, d), ("ff", "embed")),
+    }
+
+
+def mamba_mixer(
+    params, x, cfg, *, policy, state=None,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """SSD: linear attention with q=C, k=B, v=dt*x, decay=exp(-exp(A)dt)."""
+    B_, S, d = x.shape
+    H, N = cfg.n_heads, cfg.ssm.state_dim
+    di = cfg.ssm.mamba_expand * d
+    P = di // H
+
+    xz = matmul(x, params["w_xz"], policy=policy)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    bcdt = matmul(x, params["w_bcdt"], policy=_F32)      # (B, S, 2N + H)
+    bmat, cmat, dt = jnp.split(bcdt, [N, 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    log_g = (dt * a[None, None]).transpose(0, 2, 1)      # (B, H, S) <= 0
+
+    v = xin.reshape(B_, S, H, P).transpose(0, 2, 1, 3)   # (B, H, S, P)
+    v_in = v * dt.transpose(0, 2, 1)[..., None].astype(v.dtype)
+    q = jnp.broadcast_to(cmat[:, None], (B_, H, S, N))
+    k = jnp.broadcast_to(bmat[:, None], (B_, H, S, N))
+
+    if S == 1 and state is not None:
+        o, state = linear_attention_step(
+            state, q[:, :, 0], k[:, :, 0], v_in[:, :, 0], log_g[:, :, 0])
+        o = o[:, :, None]
+    else:
+        o, state = chunked_linear_attention(
+            q, k, v_in, log_g, chunk=cfg.ssm.chunk, state=state)
+
+    o = o + v.astype(jnp.float32) * params["skip_d"].astype(jnp.float32)[None, :, None, None]
+    o = o.transpose(0, 2, 1, 3).reshape(B_, S, di).astype(x.dtype)
+    o = _per_head_rmsnorm(o, params["norm"], H)
+    o = o * jax.nn.silu(z)
+    return matmul(o, params["w_out"], policy=policy), state

@@ -1,0 +1,11 @@
+"""Optimization substrate: AdamW/SGD, FP16 loss scaling, grad compression."""
+
+from repro.optim.compression import Compressor
+from repro.optim.optimizer import SGD, AdamW, OptState, clip_by_global_norm, global_norm
+from repro.optim.scale import LossScaleState, adjust, init_scale, scale_loss, unscale_and_check
+
+__all__ = [
+    "AdamW", "SGD", "OptState", "clip_by_global_norm", "global_norm",
+    "Compressor", "LossScaleState", "adjust", "init_scale", "scale_loss",
+    "unscale_and_check",
+]

@@ -1,0 +1,132 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+For cross-pod data parallelism the gradient all-reduce dominates the slow
+inter-pod links.  We compress per-leaf to fp16 or int8 (per-tensor scale)
+*before* the manual ``psum`` in the shard_map DP step and keep the
+quantization residual in an fp32 error-feedback buffer (EF-SGD), which keeps
+convergence unbiased in expectation.
+
+Used by ``launch/train.py --compress={none,fp16,int8}`` and benchmarked in
+the §Perf collective-term hillclimb.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Compressor", "NONE", "FP16", "INT8"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    kind: str = "none"  # none | fp16 | int8
+
+    @property
+    def wire_bits(self) -> int:
+        return {"none": 32, "fp16": 16, "int8": 8}[self.kind]
+
+    def init(self, params) -> Any:
+        if self.kind == "none":
+            return None
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads, ef) -> Tuple[Any, Any]:
+        """Returns (wire_grads, new_error_feedback). wire_grads are what
+        crosses the network; callers psum them and then ``decompress``."""
+        if self.kind == "none":
+            return grads, ef
+
+        def comp(g, e):
+            g = g.astype(jnp.float32) + e
+            if self.kind == "fp16":
+                wire = g.astype(jnp.float16)
+                resid = g - wire.astype(jnp.float32)
+                return wire, resid
+            # int8: symmetric per-tensor scale
+            amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+            scale = amax / 127.0
+            q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            resid = g - q.astype(jnp.float32) * scale
+            return (q, scale), resid
+
+        flat = jax.tree.map(comp, grads, ef)
+        is2 = lambda x: isinstance(x, tuple) and len(x) == 2
+        wire = jax.tree.map(lambda t: t[0], flat, is_leaf=is2)
+        new_ef = jax.tree.map(lambda t: t[1], flat, is_leaf=is2)
+        return wire, new_ef
+
+    def decompress(self, wire) -> Any:
+        if self.kind == "none":
+            return wire
+        if self.kind == "fp16":
+            return jax.tree.map(lambda w: w.astype(jnp.float32), wire)
+
+        def dec(leaf):
+            q, scale = leaf
+            return q.astype(jnp.float32) * scale
+
+        return jax.tree.map(
+            dec, wire, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+    def psum_wire(self, wire, axis_names) -> Any:
+        """All-reduce the wire representation inside shard_map.  int8 sums in
+        int32 (sums of +-127 over <=2^23 hosts cannot overflow)."""
+        if self.kind == "int8":
+            def ps(leaf):
+                q, scale = leaf
+                tot = jax.lax.psum(q.astype(jnp.int32), axis_names)
+                # scales differ per host: psum the dequantized mean scale
+                s = jax.lax.psum(scale, axis_names)
+                n = jax.lax.psum(jnp.ones((), jnp.float32), axis_names)
+                return tot.astype(jnp.float32) * (s / n) / n
+            return jax.tree.map(
+                ps, wire, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+        def ps(g):
+            # reduce on the 16-bit wire — upcasting first would defeat the
+            # compression (EF bounds the f16 summation error over steps)
+            tot = jax.lax.psum(g, axis_names)
+            cnt = jax.lax.psum(jnp.ones((), jnp.float32), axis_names)
+            return tot.astype(jnp.float32) / cnt
+        return jax.tree.map(ps, wire)
+
+
+def compressed_mean_allreduce(grads, ef, compressor: Compressor, mesh,
+                              axis_names=("data",)):
+    """Mean-all-reduce gradients across DP shards on a compressed wire.
+
+    shard_map over the DP axes: each shard compresses (grads + error
+    feedback), the psum crosses the network in fp16/int8, and the residual
+    stays local for the next step.  For a p-bit wire this cuts the gradient
+    collective bytes 32/p x at the cost of EF-bounded quantization error
+    (unbiased over steps — tests/test_optim.py).
+
+    grads must be replicated across the DP axes *within* each shard's view
+    (i.e. per-shard local gradients); returns (mean_grads fp32, new_ef).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if compressor.kind == "none":
+        def mean_fn(g):
+            return jax.tree.map(
+                lambda x: jax.lax.pmean(x.astype(jnp.float32), axis_names), g)
+        f = shard_map(mean_fn, mesh,
+                      in_specs=(jax.tree.map(lambda _: P(), grads),),
+                      out_specs=jax.tree.map(lambda _: P(), grads),
+                      check_rep=False)
+        return f(grads), ef
+
+    def local_fn(g, e):
+        wire, e2 = compressor.compress(g, e)
+        summed = compressor.psum_wire(wire, axis_names)
+        return summed, e2
+
+    specs_g = jax.tree.map(lambda _: P(), grads)
+    specs_e = jax.tree.map(lambda _: P(), ef)
+    f = shard_map(local_fn, mesh, in_specs=(specs_g, specs_e),
+                  out_specs=(specs_g, specs_e), check_rep=False)
+    return f(grads, ef)

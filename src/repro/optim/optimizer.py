@@ -1,0 +1,102 @@
+"""Optimizers: AdamW and SGD-momentum, pure-functional (optax-style).
+
+Moments are fp32 regardless of parameter dtype (mixed-precision discipline —
+the paper's FP16 regime keeps master state in the widest affordable type).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "SGD", "clip_by_global_norm", "global_norm", "OptState"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any  # None for SGD without second moment
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    # linear warmup then constant (cosine handled by the caller's schedule)
+    warmup_steps: int = 0
+
+    def init(self, params) -> OptState:
+        zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        if self.warmup_steps <= 0:
+            return jnp.float32(self.lr)
+        w = jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+        return jnp.float32(self.lr) * w
+
+    def update(self, grads, state: OptState, params) -> Tuple[Any, OptState]:
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - b2 ** step.astype(jnp.float32))
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        updates = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    def apply(self, params, updates):
+        return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 1e-2
+    momentum: float = 0.9
+
+    def init(self, params) -> OptState:
+        mu = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=None)
+
+    def update(self, grads, state: OptState, params) -> Tuple[Any, OptState]:
+        def upd(g, m):
+            m = self.momentum * m + g.astype(jnp.float32)
+            return (-self.lr * m), m
+
+        flat = jax.tree.map(upd, grads, state.mu)
+        updates = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step=state.step + 1, mu=mu, nu=None)
+
+    def apply(self, params, updates):
+        return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,63 @@
+"""Dynamic loss scaling for pure-FP16 training (the paper's regime).
+
+binary16 overflows at 65504; gradients under- and overflow without scaling.
+Standard dynamic scheme: multiply the loss by ``scale``; if any gradient is
+non-finite, skip the step and halve the scale; after ``growth_interval``
+consecutive finite steps, double it.  All state is traced (works inside jit).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LossScaleState", "init_scale", "scale_loss", "unscale_and_check", "adjust"]
+
+
+class LossScaleState(NamedTuple):
+    scale: jax.Array          # fp32
+    good_steps: jax.Array     # i32
+    growth_interval: jax.Array
+    overflow_count: jax.Array  # telemetry
+
+
+def init_scale(initial: float = 2.0**15, growth_interval: int = 2000) -> LossScaleState:
+    return LossScaleState(
+        scale=jnp.float32(initial),
+        good_steps=jnp.zeros((), jnp.int32),
+        growth_interval=jnp.int32(growth_interval),
+        overflow_count=jnp.zeros((), jnp.int32),
+    )
+
+
+def scale_loss(loss: jax.Array, state: LossScaleState) -> jax.Array:
+    return loss * state.scale.astype(loss.dtype)
+
+
+def unscale_and_check(grads: Any, state: LossScaleState) -> Tuple[Any, jax.Array]:
+    """Divide grads by the scale; return (grads, all_finite)."""
+    inv = 1.0 / state.scale
+    grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * inv), grads)
+    finite = jnp.all(
+        jnp.asarray([jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads)])
+    )
+    return grads, finite
+
+
+def adjust(state: LossScaleState, finite: jax.Array) -> LossScaleState:
+    good = jnp.where(finite, state.good_steps + 1, 0)
+    grow = good >= state.growth_interval
+    scale = jnp.where(
+        finite,
+        jnp.where(grow, state.scale * 2.0, state.scale),
+        jnp.maximum(state.scale * 0.5, 1.0),
+    )
+    good = jnp.where(grow, 0, good)
+    return LossScaleState(
+        scale=scale,
+        good_steps=good,
+        growth_interval=state.growth_interval,
+        overflow_count=state.overflow_count + jnp.where(finite, 0, 1).astype(jnp.int32),
+    )

@@ -1,0 +1,12 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from repro.roofline.analysis import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, CollectiveOp, RooflineReport,
+    collective_bytes_per_device, model_flops, parse_collectives, roofline,
+)
+
+__all__ = [
+    "PEAK_FLOPS", "HBM_BW", "ICI_BW", "CollectiveOp", "RooflineReport",
+    "parse_collectives", "collective_bytes_per_device", "roofline",
+    "model_flops",
+]

@@ -1,0 +1,447 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+Terms (per device, seconds) for TPU v5e targets:
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS      (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / HBM_BW          (819 GB/s)
+    collective = link_bytes_per_device / ICI_BW         (~50 GB/s/link)
+
+``cost_analysis()`` on this JAX/XLA build reports **per-device** "flops" and
+"bytes accessed" after SPMD partitioning (measured — DESIGN.md §7), so the
+first two terms read off directly.
+
+Collective bytes are NOT in cost_analysis: we parse ``compiled.as_text()``.
+The partitioned module shows per-device shapes; each collective is attributed
+ring-model wire bytes:
+
+    all-reduce        2 * R * (g-1)/g      (R = per-device tensor bytes)
+    all-gather        R * (g-1)/g          (R = gathered result bytes)
+    reduce-scatter    R * (g-1)            (R = scattered shard bytes)
+    all-to-all        R * (g-1)/g
+    collective-permute R
+
+Collectives inside ``while`` bodies (lax.scan layers, q-chunk loops) execute
+``known_trip_count`` times — we build the computation call graph (while
+body/condition, fusion calls, conditionals) and multiply each computation's
+collectives by its effective trip multiplier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+    "CollectiveOp", "parse_collectives", "collective_bytes_per_device",
+    "RooflineReport", "roofline", "model_flops",
+]
+
+PEAK_FLOPS = 197e12   # bf16 per chip, TPU v5e
+HBM_BW = 819e9        # bytes/s per chip
+ICI_BW = 50e9         # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int     # per-device result bytes (sum over tuple elements)
+    group_size: int
+    computation: str      # enclosing computation name
+    multiplier: int = 1   # effective trip count
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        R = self.result_bytes
+        if self.kind == "collective-permute":
+            # pairwise sends, no group amortization
+            return float(R)
+        if g == 1:
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * R * (g - 1) / g
+        if self.kind == "all-gather":
+            return R * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return float(R) * (g - 1)
+        if self.kind == "all-to-all":
+            return R * (g - 1) / g
+        return float(R)  # collective-permute
+
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of 'f32[16,512]{1,0}' or '(f32[64,512]{..}, f32[512,64]{..})'."""
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """Map computation name -> its body text."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    head_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+    entry_re = re.compile(r"^ENTRY\s+%?([\w.\-]+)")
+    for line in hlo.splitlines():
+        if cur is None:
+            m = head_re.match(line) if "{" in line else None
+            e = entry_re.match(line)
+            if e:
+                cur = e.group(1)
+                comps[cur] = []
+            elif m:
+                cur = m.group(1)
+                comps[cur] = []
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\]{},]+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^\n]*)")
+_DONE_RE = re.compile(r"(all-reduce|all-gather|all-to-all|collective-permute)-done")
+_WHILE_RE = re.compile(
+    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)([^\n]*)")
+_TRIP_RE = re.compile(r"known_trip_count\\?\":\{\\?\"n\\?\":\\?\"(\d+)")
+_CALL_RE = re.compile(r"(?:calls|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def parse_collectives(hlo: str) -> List[CollectiveOp]:
+    comps = _split_computations(hlo)
+    # entry = the computation not referenced by anyone (fallback: 'main')
+    referenced = set()
+    callers: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+
+    for name, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody, rest = m.group(1), m.group(2), m.group(3)
+            tm = _TRIP_RE.search(rest)
+            t = int(tm.group(1)) if tm else 1
+            for target, mult in ((cond, t), (wbody, t)):
+                if target in callers:
+                    callers[target].append((name, mult))
+                    referenced.add(target)
+        for m in _CALL_RE.finditer(body):
+            for target in re.split(r",\s*%?", m.group(1)):
+                target = target.strip().lstrip("%")
+                if target in callers:
+                    callers[target].append((name, 1))
+                    referenced.add(target)
+
+    entries = [c for c in comps if c not in referenced]
+    memo: Dict[str, int] = {}
+
+    def mult(name: str, seen=()) -> int:
+        if name in memo:
+            return memo[name]
+        if name in entries or not callers.get(name):
+            return 1
+        if name in seen:
+            return 1
+        total = 0
+        for caller, m in callers[name]:
+            total += mult(caller, seen + (name,)) * m
+        memo[name] = max(total, 1)
+        return memo[name]
+
+    ops: List[CollectiveOp] = []
+    for name, body in comps.items():
+        for m in _COLL_RE.finditer(body):
+            type_str, kind, attrs = m.group(1), m.group(2), m.group(3)
+            ops.append(CollectiveOp(
+                kind=kind,
+                result_bytes=_type_bytes(type_str),
+                group_size=_group_size(attrs),
+                computation=name,
+                multiplier=mult(name),
+            ))
+    return ops
+
+
+def collective_bytes_per_device(hlo: str) -> float:
+    return sum(op.wire_bytes * op.multiplier for op in parse_collectives(hlo))
+
+
+# --------------------------------------------------------------------- #
+# Structural per-device costs (trip-count aware)
+# --------------------------------------------------------------------- #
+# XLA:CPU's cost_analysis() reports while bodies ONCE (measured: a 28-layer
+# scan shows ~1 layer of flops), so the roofline derives compute/memory from
+# the HLO structure itself, using the same call-graph multipliers as the
+# collective parser:
+#   * dot flops  = 2 * prod(result dims) * prod(contracted dims)  (x trips)
+#   * HBM bytes  = per-instruction result + operand bytes in non-fusion
+#     computations (post-fusion HLO: each instruction's I/O ~ HBM traffic),
+#     skipping pure plumbing (parameter/constant/tuple/get-tuple-element).
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^=]*?\)|[\w\[\]{},.]+))\s+([\w\-]+)\(",
+    re.M)
+_DOT_OPS_RE = re.compile(r"dot\(%([\w.\-]+),\s*%([\w.\-]+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_PLUMBING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "custom-call",
+}
+
+
+def _shape_dims(type_str: str):
+    m = _ARRAY_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def structural_costs(hlo: str) -> Tuple[float, float]:
+    """(dot_flops, traffic_bytes) per device, trip-count aware."""
+    comps = _split_computations(hlo)
+
+    # call graph multipliers (same walk as parse_collectives)
+    referenced = set()
+    callers: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    fusion_only: Dict[str, bool] = {c: True for c in comps}
+    for name, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody, rest = m.group(1), m.group(2), m.group(3)
+            tm = _TRIP_RE.search(rest)
+            t = int(tm.group(1)) if tm else 1
+            for target in (cond, wbody):
+                if target in callers:
+                    callers[target].append((name, t))
+                    referenced.add(target)
+                    fusion_only[target] = False
+        for m in _CALL_RE.finditer(body):
+            for target in re.split(r",\s*%?", m.group(1)):
+                target = target.strip().lstrip("%")
+                if target in callers:
+                    callers[target].append((name, 1))
+                    referenced.add(target)
+                    # 'calls=' covers fusions AND call ops; treat called
+                    # computations as fused (I/O counted at the call site)
+    entries = [c for c in comps if c not in referenced]
+    memo: Dict[str, int] = {}
+
+    def mult(name: str, seen=()) -> int:
+        if name in memo:
+            return memo[name]
+        if name in entries or not callers.get(name):
+            return 1
+        if name in seen:
+            return 1
+        total = sum(mult(c, seen + (name,)) * m for c, m in callers[name])
+        memo[name] = max(total, 1)
+        return memo[name]
+
+    flops = 0.0
+    byts = 0.0
+    for name, body in comps.items():
+        is_fusion_body = name in referenced and fusion_only.get(name, False)
+        m_ = mult(name)
+        # symbol table for operand byte lookups
+        types: Dict[str, str] = {}
+        for im in _INSTR_RE.finditer(body):
+            types[im.group(1)] = im.group(2)
+        for im in _INSTR_RE.finditer(body):
+            iname, type_str, opcode = im.group(1), im.group(2), im.group(3)
+            line_start = im.start()
+            line_end = body.find("\n", line_start)
+            line = body[line_start:line_end if line_end != -1 else None]
+            if opcode == "dot":
+                dm = _DOT_OPS_RE.search(line)
+                cm = _LHS_CONTRACT_RE.search(line)
+                _, rdims = _shape_dims(type_str)
+                k = 1
+                if dm and cm and dm.group(1) in types:
+                    _, ldims = _shape_dims(types[dm.group(1)])
+                    for ci in (int(c) for c in cm.group(1).split(",") if c):
+                        if ci < len(ldims):
+                            k *= ldims[ci]
+                n = 1
+                for d in rdims:
+                    n *= d
+                flops += 2.0 * n * k * m_
+            if is_fusion_body or opcode in _PLUMBING:
+                continue
+            result_b = _type_bytes(type_str)
+            operands = re.findall(r"%([\w.\-]+)", line.split("(", 1)[1]) \
+                if "(" in line else []
+            operand_b = [
+                _type_bytes(types[o]) for o in operands if o in types]
+            if opcode in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced region, not the whole buffer
+                io = 2 * result_b
+            elif opcode in ("dynamic-update-slice", "scatter"):
+                # in-place region write: read+write the update, not the buffer
+                upd = operand_b[1] if len(operand_b) > 1 else result_b
+                io = 2 * upd
+            elif opcode in ("broadcast", "reshape", "transpose", "copy",
+                            "convert", "pad", "reverse"):
+                io = result_b + (operand_b[0] if operand_b else 0)
+            elif opcode == "fusion" and "dynamic-update-slice" in iname \
+                    and m_ > 1:
+                # fused in-place slice write inside a loop: the fusion's
+                # result type is the whole buffer but each iteration only
+                # touches buffer/trips bytes (scan-stacked outputs)
+                io = 2 * result_b // m_
+            elif opcode == "fusion" and "kind=kLoop" in line:
+                # a kLoop fusion reads O(1) elements per operand per output
+                # element — operands larger than the result are sliced views
+                # of loop-invariant stacks (scan weights/residuals), so cap
+                # each operand's traffic at the result size
+                io = result_b + sum(min(b, result_b) for b in operand_b)
+            else:
+                io = result_b + sum(operand_b)
+            byts += io * m_
+    return flops, byts
+
+
+# --------------------------------------------------------------------- #
+# Report
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    collectives: Dict[str, float]
+    memory_analysis: Dict[str, float]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_total = self.flops_per_device * self.n_devices
+        return self.model_flops / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the program ran at
+        the max-term bound: useful_model_flops / (bound_s * chips * peak)."""
+        denom = self.bound_s * self.n_devices * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction, bound_s=self.bound_s)
+        return d
+
+
+def roofline(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    model_flops_val: float,
+    hlo_text: Optional[str] = None,
+) -> RooflineReport:
+    ca = compiled.cost_analysis() or {}
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    hlo = hlo_text if hlo_text is not None else compiled.as_text()
+    # trip-count-aware structural costs (XLA:CPU counts while bodies once)
+    flops, byts = structural_costs(hlo)
+    flops = max(flops, xla_flops)
+    byts = max(byts, xla_bytes)
+    ops = parse_collectives(hlo)
+    coll = sum(op.wire_bytes * op.multiplier for op in ops)
+    per_kind: Dict[str, float] = {}
+    for op in ops:
+        per_kind[op.kind] = per_kind.get(op.kind, 0.0) + op.wire_bytes * op.multiplier
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+        "xla_flops": xla_flops,
+        "xla_bytes": xla_bytes,
+    }
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=coll,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll / ICI_BW,
+        model_flops=model_flops_val,
+        collectives=per_kind,
+        memory_analysis=mem,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode),
+    N = active non-embedding params (MoE counts top-k + shared only)."""
+    n_active = cfg.active_param_count() if cfg.moe else cfg.param_count()
+    # drop the embedding gather (not a GEMM) but keep the LM-head GEMM;
+    # with tied embeddings the one table IS the head, so nothing is dropped
+    n_embed = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
+    n = max(n_active - n_embed, 1)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,100 @@
+"""The analytical machine model must reproduce the paper's numbers.
+
+Every quantitative claim from the paper is asserted here (EXPERIMENTS.md
+quotes these same checks as the faithful-reproduction validation).
+"""
+
+import pytest
+
+from repro.core.perf_model import (DEFAULT_MODEL, GEMM, autoencoder_gemms,
+                                   autoencoder_report)
+
+M = DEFAULT_MODEL
+
+
+def test_peak_utilization_98_8pct():
+    """Paper: 31.6 MAC/cycle = 98.8% of the 32-FMA ideal at large sizes."""
+    g = GEMM(304, 304, 304)
+    assert abs(M.hw_macs_per_cycle(g) - 31.6) < 0.15
+    assert M.utilization(g) > 0.985
+    # asymptotically it only improves
+    assert M.utilization(GEMM(1024, 1024, 1024)) > M.utilization(g)
+
+
+def test_speedup_22x_over_software():
+    g = GEMM(1024, 1024, 1024)
+    assert abs(M.speedup(g) - 22.0) < 0.5
+
+
+def test_energy_efficiency_gain_4_65x():
+    g = GEMM(1024, 1024, 1024)
+    assert abs(M.efficiency_gain_vs_sw(g) - 4.65) < 0.25
+
+
+def test_table1_throughput_42gflops_at_666mhz():
+    g = GEMM(1024, 1024, 1024)
+    assert abs(M.gflops(g, M.freq_peak_perf_mhz) - 42.0) < 1.0
+
+
+def test_table1_efficiency_688_and_462_gflops_per_watt():
+    g = GEMM(1024, 1024, 1024)
+    assert abs(M.gflops_per_watt(g) - 688.0) < 25.0
+    assert abs(M.gflops_per_watt(g, peak_perf=True) - 462.0) < 15.0
+
+
+def test_area_0_07mm2_14pct_of_cluster():
+    assert abs(M.area_mm2() - 0.07) < 0.005
+    assert abs(M.area_fraction_of_cluster() - 0.14) < 0.01
+
+
+def test_area_sweep_fig4b():
+    """256 FMAs ~ cluster area; 512 ~ 2x cluster (Fig 4b)."""
+    assert abs(M.area_mm2(8, 32) - M.cluster_area_mm2) < 0.02
+    assert abs(M.area_mm2(16, 32) - 2 * M.cluster_area_mm2) < 0.03
+
+
+def test_ports_step_h4_to_h5():
+    """Paper: H=4 -> 9 ports; H=5 adds two more."""
+    assert M.ports(4) == 9
+    assert M.ports(5) == 11
+
+
+def test_utilization_collapses_for_skinny_k():
+    """Fig 3d / Fig 4c: K == batch == 1 starves the pipeline slots."""
+    skinny = GEMM(128, 640, 1)
+    assert M.utilization(skinny) < 0.10
+    fat = GEMM(128, 640, 128)
+    assert M.utilization(fat) > 0.8
+
+
+def test_autoencoder_b1_speedup_2_6x():
+    r = autoencoder_report(M, 1)
+    assert 2.3 < r["speedup"] < 3.1           # paper: 2.6x
+    assert r["speedup_bwd"] > r["speedup_fwd"]  # "advantages in backward"
+
+
+def test_autoencoder_b16_speedup_and_batching_gain():
+    r1 = autoencoder_report(M, 1)
+    r16 = autoencoder_report(M, 16)
+    assert 18.0 < r16["speedup"] < 27.0        # paper: 24.4x
+    gain = r16["hw_macs_per_cycle"] / r1["hw_macs_per_cycle"]
+    assert 10.0 < gain < 16.5                  # paper: "almost 16x"
+    # SW does not benefit from batching (same throughput per MAC)
+    sw_thr1 = sum(g.macs for gs in autoencoder_gemms(1).values() for g in gs) / r1["sw_cycles"]
+    sw_thr16 = sum(g.macs for gs in autoencoder_gemms(16).values() for g in gs) / r16["sw_cycles"]
+    assert sw_thr16 / sw_thr1 < 1.6
+
+
+def test_energy_per_mac_decreases_with_size():
+    """Fig 3c: energy/MAC falls monotonically with the computational burden."""
+    sizes = [16, 32, 64, 128, 256, 512]
+    e = [M.energy_per_mac_pj(GEMM(s, s, s)) for s in sizes]
+    assert all(a > b for a, b in zip(e, e[1:]))
+    assert e[-1] < 3.2  # ~2.9 pJ/MAC at the 0.65 V point
+
+
+def test_monotone_utilization_in_each_dim():
+    base = GEMM(64, 64, 64)
+    assert M.utilization(GEMM(256, 64, 64)) >= M.utilization(base)
+    assert M.utilization(GEMM(64, 256, 64)) >= M.utilization(base)
+    assert M.utilization(GEMM(64, 64, 256)) >= M.utilization(base)

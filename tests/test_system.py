@@ -1,0 +1,149 @@
+"""End-to-end system behaviour: training converges, serving generates,
+data pipeline is deterministic, the AE use case trains in pure FP16."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import precision as prec
+from repro.data import Prefetcher, SyntheticAE, SyntheticLM
+from repro.launch.train import build_train_step, init_state
+from repro.models import autoencoder, transformer
+from repro.optim import AdamW
+
+
+def test_train_loss_decreases_dense():
+    cfg = configs.get_reduced("yi-9b")
+    opt = AdamW(lr=3e-3, warmup_steps=5)
+    step = jax.jit(build_train_step(cfg, opt, rules=None), donate_argnums=(0,))
+    state = init_state(jax.random.PRNGKey(0), cfg, opt)
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
+    losses = []
+    for i, batch in zip(range(30), ds):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5
+
+
+def test_train_loss_decreases_moe():
+    cfg = configs.get_reduced("deepseek-moe-16b")
+    opt = AdamW(lr=3e-3, warmup_steps=5)
+    step = jax.jit(build_train_step(cfg, opt, rules=None), donate_argnums=(0,))
+    state = init_state(jax.random.PRNGKey(0), cfg, opt)
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
+    losses = []
+    drop0 = None
+    for i, batch in zip(range(30), ds):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+        if drop0 is None:
+            drop0 = float(metrics["moe_drop_frac"])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5
+    # dispatch not fully degenerate at init (Zipf data is top-heavy, so
+    # near-identical tokens legitimately route together); later steps may
+    # collapse the toy router entirely
+    assert drop0 < 0.9
+
+
+def test_train_loss_decreases_ssm():
+    cfg = configs.get_reduced("xlstm-1.3b")
+    opt = AdamW(lr=3e-3, warmup_steps=5)
+    step = jax.jit(build_train_step(cfg, opt, rules=None), donate_argnums=(0,))
+    state = init_state(jax.random.PRNGKey(0), cfg, opt)
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
+    losses = []
+    for i, batch in zip(range(30), ds):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+
+def test_generation_end_to_end():
+    from repro.launch.serve import generate
+
+    cfg = configs.get_reduced("qwen3-1.7b")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 8), 0,
+                                 cfg.vocab_size, jnp.int32)
+    seqs = generate(params, cfg, prompts, gen_len=6)
+    assert seqs.shape == (3, 14)
+    assert bool((seqs[:, :8] == prompts).all())
+    assert bool((seqs >= 0).all()) and bool((seqs < cfg.vocab_size).all())
+
+
+# ------------------------------------------------------------------ #
+# Data pipeline
+# ------------------------------------------------------------------ #
+def test_data_deterministic_replay():
+    ds = SyntheticLM(vocab_size=1000, seq_len=32, global_batch=4, seed=7)
+    a = ds.batch(5)
+    b = ds.batch(5)
+    np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    c = ds.batch(6)
+    assert not np.array_equal(a["inputs"], c["inputs"])
+
+
+def test_data_host_sharding_disjoint():
+    d0 = SyntheticLM(vocab_size=1000, seq_len=32, global_batch=8,
+                     num_hosts=2, host_id=0)
+    d1 = SyntheticLM(vocab_size=1000, seq_len=32, global_batch=8,
+                     num_hosts=2, host_id=1)
+    assert d0.local_batch == 4
+    a, b = d0.batch(0), d1.batch(0)
+    assert not np.array_equal(a["inputs"], b["inputs"])
+
+
+def test_labels_are_shifted_inputs():
+    ds = SyntheticLM(vocab_size=1000, seq_len=16, global_batch=2)
+    b = ds.batch(0)
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["labels"][:, :-1])
+
+
+def test_prefetcher_order_and_close():
+    items = iter(range(10))
+    pf = Prefetcher(items, depth=2)
+    got = [next(pf) for _ in range(5)]
+    assert got == list(range(5))
+    pf.close()
+
+
+# ------------------------------------------------------------------ #
+# Paper use case: AutoEncoder trains in pure FP16 (+ loss scaling story)
+# ------------------------------------------------------------------ #
+def test_autoencoder_trains_fp16():
+    """Pure-FP16 AE training (Dense->BN->ReLU per the MLPerf Tiny reference)
+    is stable and converges; fp32-parity checked in the test below."""
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    opt = AdamW(lr=3e-3)
+    state = opt.init(params)
+    ds = SyntheticAE(batch=64)
+    xs = [jnp.asarray(ds.sample(i)) for i in range(4)]
+
+    @jax.jit
+    def step(p, s, x):
+        (loss, _), g = jax.value_and_grad(
+            lambda q: autoencoder.ae_loss(q, x, policy=prec.PAPER_FP16),
+            has_aux=True)(p)
+        u, s = opt.update(g, s, p)
+        return opt.apply(p, u), s, loss
+
+    losses = []
+    for i in range(100):
+        params, state, loss = step(params, state, xs[i % 4])
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:10])
+
+
+def test_autoencoder_fp16_vs_fp32_numerics():
+    """The paper-faithful fp16-accumulation path tracks fp32 closely on the
+    AE's GEMM sizes (N <= 640)."""
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    x = jnp.asarray(SyntheticAE(batch=16).sample(0))
+    y16 = autoencoder.ae_forward(params, x, policy=prec.PAPER_FP16)
+    y32 = autoencoder.ae_forward(params, x, policy=prec.FP32)
+    err = float(jnp.max(jnp.abs(y16.astype(jnp.float32) - y32)))
+    assert err < 5e-2

@@ -1,0 +1,51 @@
+"""Tile-selection invariants (hypothesis property tests)."""
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiling
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    m=st.integers(1, 100_000),
+    n=st.integers(1, 100_000),
+    k=st.integers(1, 300_000),
+    dtype=st.sampled_from([jnp.bfloat16, jnp.float16, jnp.float32]),
+)
+def test_choose_tiles_invariants(m, n, k, dtype):
+    t = tiling.choose_tiles(m, n, k, compute_dtype=dtype)
+    # MXU alignment
+    assert t.bk % tiling.MXU_LANE == 0
+    assert t.bn % tiling.MXU_LANE == 0
+    assert t.bm % tiling.sublane(dtype) == 0
+    # VMEM budget respected
+    assert tiling.vmem_bytes(t, dtype, jnp.float32) <= tiling.DEFAULT_VMEM_BUDGET
+    # grid covers the problem
+    gm, gk, gn = t.grid(m, n, k)
+    assert gm * t.bm >= m and gk * t.bk >= k and gn * t.bn >= n
+    # no grossly-oversized tiles (max one padding tile per dim)
+    assert (gm - 1) * t.bm < m and (gk - 1) * t.bk < k and (gn - 1) * t.bn < n
+
+
+def test_large_gemm_gets_fat_tiles():
+    t = tiling.choose_tiles(8192, 8192, 8192, compute_dtype=jnp.bfloat16)
+    assert t.bm >= 256 and t.bk >= 256
+    assert t.bn >= 512
+
+
+def test_paper_mapping_streaming_dim_longest():
+    """The streamed (reduction) dim gets the longest run — the analogue of
+    the paper amortizing pipeline fill over the full N reduction."""
+    t = tiling.choose_tiles(512, 8192, 512, compute_dtype=jnp.bfloat16)
+    assert t.bn >= t.bm and t.bn >= t.bk
+
+
+def test_tiny_budget_degrades_gracefully():
+    t = tiling.choose_tiles(
+        4096, 4096, 4096, compute_dtype=jnp.bfloat16, vmem_budget=256 * 1024)
+    assert tiling.vmem_bytes(t, jnp.bfloat16, jnp.float32) <= 256 * 1024 or (
+        t.bm == tiling.sublane(jnp.bfloat16)
+        and t.bn == tiling.MXU_LANE
+        and t.bk == tiling.MXU_LANE
+    )
