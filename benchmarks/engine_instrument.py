@@ -1,0 +1,67 @@
+"""Engine instrumentation — GemmEvents driving the machine model.
+
+Every Engine dispatch emits a GemmEvent (flops, bytes, tile, backend,
+policy).  This benchmark feeds two *recorded* workloads into the calibrated
+RedMulE machine model and cross-checks them against the hand-derived
+analytic enumerations that predate the Engine:
+
+* the TinyMLPerf AutoEncoder forward (paper §III-B) vs
+  ``perf_model.autoencoder_gemms`` — recorded flops must equal analytic;
+* a reduced dense-LM forward vs ``perf_model.dense_forward_gemms``.
+
+The point: the perf model consumes what actually ran, not a re-derivation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro import configs
+from repro.core import engine
+from repro.core import perf_model
+from repro.core import precision as prec
+from repro.data import SyntheticAE
+from repro.models import autoencoder, transformer
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    m = perf_model.DEFAULT_MODEL
+
+    # --- AE forward: recorded events vs the paper's analytic enumeration ---
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    B = 16
+    x = jnp.asarray(SyntheticAE(batch=B).sample(0))
+    with engine.instrument() as events:
+        jax.eval_shape(
+            lambda p, xx: autoencoder.ae_forward(p, xx, policy=prec.PAPER_FP16),
+            params, x)
+    got = engine.total_flops(events)
+    # analytic fwd GEMMs use the transposed (out, in) x (in, B) convention;
+    # macs (and so flops) are orientation-invariant
+    want = perf_model.workload_flops(
+        [(g, 1) for g in perf_model.autoencoder_gemms(B)["fwd"]])
+    hw, sw = perf_model.workload_cycles_from_events(m, events)
+    rows.append((
+        f"engine/ae_fwd_B{B}", 0.0,
+        f"event_flops={got} analytic_flops={want} "
+        f"match={'OK' if got == want else 'MISMATCH'} "
+        f"model_speedup={sw/hw:.2f}x"))
+
+    # --- dense LM forward: recorded events vs dense_forward_gemms ---
+    cfg = configs.get_reduced("yi-9b")
+    lm_params = transformer.init_params(jax.random.PRNGKey(1), cfg)
+    Bl, S = 2, 64
+    batch = {"inputs": jnp.zeros((Bl, S), jnp.int32)}
+    with engine.instrument() as events:
+        jax.eval_shape(lambda p, b: transformer.forward(p, cfg, b)[0],
+                       lm_params, batch)
+    got = engine.total_flops(events)
+    want = perf_model.workload_flops(
+        perf_model.dense_forward_gemms(cfg, Bl, S))
+    rows.append((
+        f"engine/lm_fwd_{cfg.name}", 0.0,
+        f"event_flops={got} analytic_flops={want} "
+        f"match={'OK' if got == want else 'MISMATCH'} "
+        f"events={len(events)}"))
+    return rows

@@ -6,8 +6,8 @@ RedMulE machine model (Table I / Figs 3-4) and from the dry-run roofline
 artifacts (beyond-paper §Roofline).
 """
 
-from benchmarks import (fig3_energy_throughput, fig4a_hw_vs_sw,
-                        fig4b_area_sweep, fig4cd_autoencoder,
+from benchmarks import (engine_instrument, fig3_energy_throughput,
+                        fig4a_hw_vs_sw, fig4b_area_sweep, fig4cd_autoencoder,
                         roofline_report, table1_soa)
 from benchmarks.common import emit
 
@@ -15,7 +15,8 @@ from benchmarks.common import emit
 def main() -> None:
     print("name,us_per_call,derived")
     for mod in (table1_soa, fig3_energy_throughput, fig4a_hw_vs_sw,
-                fig4b_area_sweep, fig4cd_autoencoder, roofline_report):
+                fig4b_area_sweep, fig4cd_autoencoder, engine_instrument,
+                roofline_report):
         emit(mod.run())
 
 

@@ -1,4 +1,4 @@
-"""Quickstart: the RedMulE engine in five minutes.
+"""Quickstart: the RedMulE Engine in five minutes.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,35 +7,52 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PAPER_FP16, TPU_BF16, matmul, use_backend
+from repro.core import PAPER_FP16, TPU_BF16, engine
 from repro.core.perf_model import DEFAULT_MODEL, GEMM
 from repro.core.tiling import choose_tiles
 
 # ---------------------------------------------------------------- #
-# 1. Z = X @ W on the RedMulE engine (Pallas kernel in interpret
-#    mode on CPU; the real TPU lowering uses the same kernel body)
+# 1. Z = X @ W on the Engine (Pallas kernel in interpret mode on
+#    CPU; the real TPU lowering uses the same kernel body).  The
+#    backends are ordinary registry entries — engine.registered_backends()
 # ---------------------------------------------------------------- #
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(256, 640)), jnp.float16)
 w = jnp.asarray(rng.normal(size=(640, 128)), jnp.float16)
 
-with use_backend("interpret"):          # execute the kernel body on CPU
-    z_kernel = matmul(x, w, policy=PAPER_FP16)
-with use_backend("xla"):                # the production XLA path
-    z_xla = matmul(x, w, policy=PAPER_FP16)
+print("backends:", engine.registered_backends())
+with engine.use_backend("interpret"):   # execute the kernel body on CPU
+    z_kernel = engine.matmul(x, w, policy=PAPER_FP16)
+with engine.use_backend("xla"):         # the production XLA path
+    z_xla = engine.matmul(x, w, policy=PAPER_FP16)
 print("kernel vs xla max|diff|:",
       float(jnp.max(jnp.abs(z_kernel.astype(jnp.float32)
                             - z_xla.astype(jnp.float32)))))
 
 # ---------------------------------------------------------------- #
-# 2. Tiling: the TPU analogue of the paper's (H, L, P) parameters
+# 2. Instrumentation: every dispatch emits a GemmEvent
+# ---------------------------------------------------------------- #
+with engine.instrument() as events:
+    engine.linear(x, w, jnp.zeros((128,), jnp.float16),
+                  activation="relu", policy=PAPER_FP16)
+    engine.grouped_matmul(                      # 4 experts in one dispatch
+        jnp.zeros((4, 32, 640), jnp.float16),
+        jnp.zeros((4, 640, 128), jnp.float16), policy=PAPER_FP16)
+for ev in events:
+    print(f"event: {ev.spec.op:16s} {ev.spec.tag:14s} "
+          f"M/N/K={ev.spec.m}/{ev.spec.n}/{ev.spec.k} "
+          f"groups={ev.spec.groups} backend={ev.backend} "
+          f"flops={ev.total_flops}")
+
+# ---------------------------------------------------------------- #
+# 3. Tiling: the TPU analogue of the paper's (H, L, P) parameters
 # ---------------------------------------------------------------- #
 t = choose_tiles(4096, 4096, 4096, compute_dtype=jnp.bfloat16)
 print(f"4096^3 GEMM tiles: bm={t.bm} bn={t.bn} bk={t.bk} "
       f"(X-stationary, W-streamed along bn, Z stored once)")
 
 # ---------------------------------------------------------------- #
-# 3. The calibrated machine model (every Table-I number)
+# 4. The calibrated machine model (every Table-I number)
 # ---------------------------------------------------------------- #
 m = DEFAULT_MODEL
 g = GEMM(512, 512, 512)
@@ -45,9 +62,9 @@ print(f"RedMulE 32-FMA @ 512^3: {m.hw_macs_per_cycle(g):.2f} MAC/cycle "
       f"{m.gflops_per_watt(g):.0f} GFLOPS/W @ 0.65 V")
 
 # ---------------------------------------------------------------- #
-# 4. Precision policies
+# 5. Precision policies
 # ---------------------------------------------------------------- #
 for policy in (PAPER_FP16, TPU_BF16):
-    z = matmul(x, w, policy=policy)
+    z = engine.matmul(x, w, policy=policy)
     print(f"policy={policy.name:12s} out_dtype={z.dtype} "
           f"accum={jnp.dtype(policy.accum_dtype).name}")

@@ -1,19 +1,39 @@
 """Core of the RedMulE-JAX framework: the paper's contribution.
 
-* :mod:`repro.core.redmule`   -- the framework-wide GEMM primitive (engine).
+* :mod:`repro.core.engine`    -- the first-class GEMM Engine: op family
+  (matmul / linear / grouped_matmul / einsum2d), pluggable backend
+  registry, per-dispatch GemmEvent instrumentation.
 * :mod:`repro.core.tiling`    -- VMEM/MXU tile selection (H/L/P analogue).
 * :mod:`repro.core.precision` -- FP16/BF16/FP32 precision policies.
 * :mod:`repro.core.perf_model` -- calibrated machine model of the silicon.
+* :mod:`repro.core.redmule`   -- deprecated free-function shims (one
+  release); new code uses the Engine surface.
 """
 
-from repro.core import perf_model, precision, redmule, tiling
+from repro.core import engine, perf_model, precision, redmule, tiling
+from repro.core.engine import (
+    Engine,
+    GemmEvent,
+    GemmSpec,
+    einsum2d,
+    grouped_matmul,
+    instrument,
+    linear,
+    matmul,
+    register_backend,
+    registered_backends,
+    set_default_backend,
+    use_backend,
+)
 from repro.core.precision import FP32, PAPER_FP16, TPU_BF16, TPU_FP16, Policy
-from repro.core.redmule import linear, matmul, set_default_backend, use_backend
 from repro.core.tiling import TileConfig, choose_tiles
 
 __all__ = [
-    "perf_model", "precision", "redmule", "tiling",
+    "engine", "perf_model", "precision", "redmule", "tiling",
+    "Engine", "GemmSpec", "GemmEvent",
     "Policy", "PAPER_FP16", "TPU_FP16", "TPU_BF16", "FP32",
-    "matmul", "linear", "set_default_backend", "use_backend",
+    "matmul", "linear", "grouped_matmul", "einsum2d",
+    "register_backend", "registered_backends", "instrument",
+    "set_default_backend", "use_backend",
     "TileConfig", "choose_tiles",
 ]

@@ -1,0 +1,755 @@
+"""The RedMulE Engine — a first-class GEMM surface with pluggable backends.
+
+The paper's thesis is that *one* parametric GEMM engine serves every DL
+kernel — inference, training, attention, experts.  This module is that
+engine as an API:
+
+* :class:`GemmSpec`   — a frozen description of one contraction (einsum-style
+  tag, M/N/K, batching/grouping, precision :class:`~repro.core.precision.Policy`,
+  :class:`~repro.core.tiling.TileConfig`).
+* :class:`Engine`     — resolves a spec to a backend and dispatches it.  The
+  op family covers what the models need: :meth:`Engine.matmul`,
+  :meth:`Engine.linear` (fused bias+activation epilogue),
+  :meth:`Engine.grouped_matmul` (ragged per-expert GEMM for MoE) and
+  :meth:`Engine.einsum2d` (two-operand contractions).
+* a **backend registry** — :func:`register_backend` replaces the old
+  hard-coded backend tuple; "pallas", "interpret" and "xla" are ordinary
+  registered entries and third-party/GPU backends plug in at runtime without
+  editing this module.
+* **instrumentation** — every dispatch emits a :class:`GemmEvent` (flops,
+  bytes, tile, backend, policy) into the thread-local :func:`instrument`
+  collector; :mod:`repro.roofline.analysis` and :mod:`repro.core.perf_model`
+  consume these instead of re-deriving shapes by hand.
+
+Backend resolution precedence: explicit ``backend=`` argument >
+:func:`use_backend` context (thread-local) > ``REPRO_MATMUL_BACKEND`` env
+var (validated at read time) > platform default ("pallas" on TPU, "xla"
+elsewhere).
+
+Events are emitted at *trace* time: under ``jax.jit`` a cached executable
+re-runs without re-tracing, so wrap the tracing call (``.lower()``,
+``jax.eval_shape`` or the first invocation) in :func:`instrument`.  Code
+that traces a loop body once but executes it N times (``lax.scan`` layer
+stacks, q-chunk loops, grad-accumulation) wraps the scan in
+:func:`repeat` so each event carries the right multiplicity.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision as prec
+from repro.core import tiling
+
+__all__ = [
+    "GemmSpec",
+    "GemmEvent",
+    "Engine",
+    "BackendSpec",
+    "register_backend",
+    "unregister_backend",
+    "registered_backends",
+    "get_backend",
+    "backend_available",
+    "default_backend",
+    "set_default_backend",
+    "use_backend",
+    "matmul",
+    "linear",
+    "grouped_matmul",
+    "einsum2d",
+    "instrument",
+    "repeat",
+    "paused",
+    "total_flops",
+    "total_bytes",
+    "summarize",
+    "DEFAULT_ENGINE",
+]
+
+ENV_VAR = "REPRO_MATMUL_BACKEND"
+
+
+# --------------------------------------------------------------------- #
+# Spec / event
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class GemmSpec:
+    """One contraction, fully described.
+
+    Attributes:
+      op: op-family name ("matmul" | "linear" | "grouped_matmul" | "einsum2d").
+      tag: einsum-style contraction tag (e.g. ``"mn,nk->mk"``).
+      m, n, k: the 2D GEMM problem per batch element per group
+        (Z[m,k] = X[m,n] @ W[n,k] — the paper's naming).
+      batch: product of leading (vmapped/broadcast) dims.
+      groups: expert-group count for grouped GEMMs (1 otherwise).
+      policy: resolved precision policy.
+      tile: explicit tile config, or None for automatic selection.
+      epilogue: fused epilogue activation name for ``linear`` (or None).
+    """
+
+    op: str
+    tag: str
+    m: int
+    n: int
+    k: int
+    batch: int = 1
+    groups: int = 1
+    policy: prec.Policy = prec.TPU_BF16
+    tile: Optional[tiling.TileConfig] = None
+    epilogue: Optional[str] = None
+    # the weight operand is shared across the batch (read once per group)
+    w_shared: bool = False
+
+    @property
+    def flops(self) -> int:
+        """MAC-derived flops of one execution (2 * B * G * M * N * K)."""
+        return 2 * self.batch * self.groups * self.m * self.n * self.k
+
+    @property
+    def bytes(self) -> int:
+        """HBM-side operand + result bytes of one execution.
+
+        When ``w_shared`` the weight operand is read once per group, not
+        once per batch element (weight GEMMs: one (N, K) matrix serves the
+        whole batch)."""
+        cb = jnp.dtype(self.policy.compute_dtype).itemsize
+        ob = jnp.dtype(self.policy.out_dtype).itemsize
+        bg = self.batch * self.groups
+        w_copies = self.groups if self.w_shared else bg
+        return (bg * (self.m * self.n * cb + self.m * self.k * ob)
+                + w_copies * self.n * self.k * cb)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmEvent:
+    """One engine dispatch, as observed by :func:`instrument`.
+
+    ``count`` is the trace-context multiplicity (see :func:`repeat`):
+    a GEMM traced inside a 28-layer ``lax.scan`` body appears once with
+    ``count=28``.
+    """
+
+    spec: GemmSpec
+    backend: str
+
+    count: int = 1
+
+    @property
+    def flops(self) -> int:
+        return self.spec.flops
+
+    @property
+    def bytes(self) -> int:
+        return self.spec.bytes
+
+    @property
+    def total_flops(self) -> int:
+        return self.spec.flops * self.count
+
+    @property
+    def total_bytes(self) -> int:
+        return self.spec.bytes * self.count
+
+
+def total_flops(events: Sequence[GemmEvent]) -> int:
+    return sum(ev.total_flops for ev in events)
+
+
+def total_bytes(events: Sequence[GemmEvent]) -> int:
+    return sum(ev.total_bytes for ev in events)
+
+
+def summarize(events: Sequence[GemmEvent]) -> Dict[str, Dict[str, float]]:
+    """Per-op totals plus a grand total (for CLI printouts)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for ev in events:
+        d = out.setdefault(ev.spec.op, {"calls": 0, "flops": 0, "bytes": 0})
+        d["calls"] += ev.count
+        d["flops"] += ev.total_flops
+        d["bytes"] += ev.total_bytes
+    out["total"] = {
+        "calls": sum(d["calls"] for d in out.values()),
+        "flops": total_flops(events),
+        "bytes": total_bytes(events),
+    }
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Backend registry
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """A registered backend: ``fn(x, w, *, spec) -> array``.
+
+    ``fn`` receives operands already cast to ``spec.policy.compute_dtype``
+    with ``x: (..., M, N)`` and ``w: (N, K)`` or broadcast-compatible
+    ``(..., N, K)``; it returns ``(..., M, K)`` in any float dtype (the
+    engine downcasts to ``spec.policy.out_dtype``).
+    """
+
+    name: str
+    fn: Callable[..., jax.Array]
+    available: Union[bool, Callable[[], bool]] = True
+    description: str = ""
+
+    def is_available(self) -> bool:
+        a = self.available
+        return bool(a()) if callable(a) else bool(a)
+
+
+_REGISTRY: Dict[str, BackendSpec] = {}
+
+
+def register_backend(
+    name: str,
+    fn: Callable[..., jax.Array],
+    *,
+    available: Union[bool, Callable[[], bool]] = True,
+    description: str = "",
+) -> BackendSpec:
+    """Register (or replace) a GEMM backend under ``name``.
+
+    Third-party backends plug in here at runtime; no edits to core are
+    needed for a new backend to be dispatchable by name through
+    :func:`matmul` and friends."""
+    if not name or not isinstance(name, str):
+        raise ValueError(f"backend name must be a non-empty string, got {name!r}")
+    spec = BackendSpec(name=name, fn=fn, available=available,
+                       description=description)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def registered_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str) -> BackendSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {registered_backends()}"
+        ) from e
+
+
+def backend_available(name: str) -> bool:
+    return get_backend(name).is_available()
+
+
+# --------------------------------------------------------------------- #
+# Thread-local state: backend override, instrumentation, repeat scopes
+# --------------------------------------------------------------------- #
+_state = threading.local()
+
+
+def _thread_backend() -> Optional[str]:
+    return getattr(_state, "backend", None)
+
+
+def _collectors() -> List[List[GemmEvent]]:
+    c = getattr(_state, "collectors", None)
+    if c is None:
+        c = _state.collectors = []
+    return c
+
+
+def _repeat_multiplier() -> int:
+    stack = getattr(_state, "repeat", None)
+    if not stack:
+        return 1
+    m = 1
+    for n in stack:
+        m *= n
+    return m
+
+
+def default_backend() -> str:
+    """Thread-local context > env var (validated here) > platform default."""
+    b = _thread_backend()
+    if b is not None:
+        return b
+    b = os.environ.get(ENV_VAR)
+    if b:
+        if b not in _REGISTRY:
+            raise ValueError(
+                f"environment variable {ENV_VAR}={b!r} names an unknown "
+                f"backend; registered backends: {registered_backends()}")
+        return b
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def set_default_backend(backend: Optional[str]) -> None:
+    if backend is not None:
+        get_backend(backend)  # validate against the registry
+    _state.backend = backend
+
+
+@contextlib.contextmanager
+def use_backend(backend: str):
+    """Thread-locally pin the default backend within the context."""
+    old = _thread_backend()
+    set_default_backend(backend)
+    try:
+        yield
+    finally:
+        set_default_backend(old)
+
+
+@contextlib.contextmanager
+def instrument() -> Iterator[List[GemmEvent]]:
+    """Collect every engine dispatch traced in this thread.
+
+        with engine.instrument() as events:
+            logits, _, _ = transformer.forward(params, cfg, batch)
+        print(engine.summarize(events))
+
+    Nested collectors each observe all events.  Events are emitted at trace
+    time — wrap the *tracing* call (first invocation, ``.lower()`` or
+    ``jax.eval_shape``), not a cached jit re-execution."""
+    events: List[GemmEvent] = []
+    stack = _collectors()
+    stack.append(events)
+    try:
+        yield events
+    finally:
+        # remove by identity: equal-but-distinct lists (e.g. two empty
+        # nested collectors) must not be confused by list.remove()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is events:
+                del stack[i]
+                break
+
+
+@contextlib.contextmanager
+def paused():
+    """Suppress event emission within the context.
+
+    For shape probes and oracle re-traces that would otherwise double-count
+    dispatches inside an active :func:`instrument` collector."""
+    prev = getattr(_state, "paused", False)
+    _state.paused = True
+    try:
+        yield
+    finally:
+        _state.paused = prev
+
+
+@contextlib.contextmanager
+def repeat(n: int):
+    """Mark a region whose traced dispatches execute ``n`` times.
+
+    Wrap ``lax.scan``/``fori_loop`` calls whose body contains engine ops:
+    the body is traced once but runs ``n`` times, so events inside get
+    ``count`` multiplied by ``n``.  Nesting multiplies."""
+    stack = getattr(_state, "repeat", None)
+    if stack is None:
+        stack = _state.repeat = []
+    stack.append(int(n))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def _emit(spec: GemmSpec, backend: str) -> None:
+    stack = _collectors()
+    if not stack or getattr(_state, "paused", False):
+        return
+    ev = GemmEvent(spec=spec, backend=backend, count=_repeat_multiplier())
+    for events in stack:
+        events.append(ev)
+
+
+# --------------------------------------------------------------------- #
+# Built-in backends
+# --------------------------------------------------------------------- #
+def _xla_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec) -> jax.Array:
+    """``lax.dot_general`` with the engine's accumulation policy."""
+    policy = spec.policy
+    if xc.ndim > 2 and wc.ndim == 2:
+        # weight GEMM: single dot over collapsed leading dims
+        return jax.lax.dot_general(
+            xc, wc,
+            (((xc.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=policy.accum_dtype,
+        )
+    x_batch = tuple(range(xc.ndim - 2)) if xc.ndim > 2 else ()
+    w_batch = tuple(range(wc.ndim - 2)) if wc.ndim > 2 else ()
+    if x_batch != w_batch or xc.shape[:-2] != wc.shape[:-2]:
+        lead = np.broadcast_shapes(xc.shape[:-2], wc.shape[:-2])
+        xc = jnp.broadcast_to(xc, (*lead, *xc.shape[-2:]))
+        wc = jnp.broadcast_to(wc, (*lead, *wc.shape[-2:]))
+        x_batch = w_batch = tuple(range(len(lead)))
+    return jax.lax.dot_general(
+        xc, wc,
+        (((xc.ndim - 1,), (wc.ndim - 2,)), (x_batch, w_batch)),
+        preferred_element_type=policy.accum_dtype,
+    )
+
+
+def _pallas_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
+               interpret: bool = False) -> jax.Array:
+    """The Pallas RedMulE kernel (X-stationary, W-streamed, store-once Z)."""
+    from repro.kernels import ops  # local import: kernels depend on core
+
+    policy, tile = spec.policy, spec.tile
+    if wc.ndim == 2:
+        lead = xc.shape[:-2]
+        x2 = xc.reshape((-1, xc.shape[-1])) if lead else xc
+        z2 = ops.redmule_matmul(x2, wc, policy=policy, tile=tile,
+                                interpret=interpret)
+        return z2.reshape((*lead, xc.shape[-2], wc.shape[-1]))
+    lead = np.broadcast_shapes(xc.shape[:-2], wc.shape[:-2])
+    xb = jnp.broadcast_to(xc, (*lead, *xc.shape[-2:])).reshape(
+        (-1, *xc.shape[-2:]))
+    wb = jnp.broadcast_to(wc, (*lead, *wc.shape[-2:])).reshape(
+        (-1, *wc.shape[-2:]))
+    z = ops.redmule_matmul_batched(xb, wb, policy=policy, tile=tile,
+                                   interpret=interpret)
+    return z.reshape((*lead, xc.shape[-2], wc.shape[-1]))
+
+
+def _interpret_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec) -> jax.Array:
+    return _pallas_fn(xc, wc, spec=spec, interpret=True)
+
+
+register_backend(
+    "xla", _xla_fn,
+    description="lax.dot_general with the engine's precision policy "
+                "(production fallback; XLA:CPU dry-runs)")
+register_backend(
+    "pallas", _pallas_fn,
+    available=lambda: jax.default_backend() == "tpu",
+    description="TPU Pallas RedMulE kernel (X-stationary, W-streamed, "
+                "VMEM fp32 scratch, store-once Z)")
+register_backend(
+    "interpret", _interpret_fn,
+    description="the same Pallas kernel body in interpreter mode "
+                "(CPU CI; bit-faithful to the kernel's schedule)")
+
+
+# --------------------------------------------------------------------- #
+# Fused epilogues
+# --------------------------------------------------------------------- #
+_EPILOGUES: Dict[str, Callable[[jax.Array], jax.Array]] = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+# --------------------------------------------------------------------- #
+# The Engine
+# --------------------------------------------------------------------- #
+class Engine:
+    """Resolves :class:`GemmSpec`s to backends and dispatches them.
+
+    The default instance (:data:`DEFAULT_ENGINE`, aliased by the
+    module-level :func:`matmul` / :func:`linear` / :func:`grouped_matmul` /
+    :func:`einsum2d`) carries no overrides; custom instances can pin a
+    backend and/or precision policy for a subsystem::
+
+        fp16_engine = Engine(policy=prec.PAPER_FP16)
+        z = fp16_engine.matmul(x, w)
+    """
+
+    def __init__(self, *, backend: Optional[str] = None, policy=None):
+        self._backend = backend
+        self._policy = policy
+
+    # -- resolution ---------------------------------------------------- #
+    def resolve_backend(self, backend: Optional[str] = None) -> str:
+        b = backend or self._backend or default_backend()
+        spec = get_backend(b)
+        # an explicit per-call argument or a constructor-pinned backend is
+        # a deliberate choice — only implicitly resolved backends (context /
+        # env / platform default) are availability-gated
+        if backend is None and self._backend is None \
+                and not spec.is_available():
+            raise ValueError(
+                f"default backend {b!r} is not available on this platform "
+                f"(registered: {registered_backends()}); pass backend= "
+                f"explicitly to override")
+        return b
+
+    def resolve_policy(self, policy=None) -> prec.Policy:
+        return prec.resolve(policy if policy is not None else self._policy)
+
+    # -- dispatch core ------------------------------------------------- #
+    def _execute_raw(self, spec: GemmSpec, backend: str, x: jax.Array,
+                     w: jax.Array) -> jax.Array:
+        """Dispatch and return the backend-native result (xla: accumulation
+        dtype; pallas: the kernel's stored output dtype)."""
+        xc = x.astype(spec.policy.compute_dtype)
+        wc = w.astype(spec.policy.compute_dtype)
+        _emit(spec, backend)
+        return get_backend(backend).fn(xc, wc, spec=spec)
+
+    def _execute(self, spec: GemmSpec, backend: str, x: jax.Array,
+                 w: jax.Array) -> jax.Array:
+        return self._execute_raw(spec, backend, x, w).astype(
+            spec.policy.out_dtype)
+
+    # -- op family ----------------------------------------------------- #
+    def matmul(
+        self,
+        x: jax.Array,
+        w: jax.Array,
+        *,
+        policy=None,
+        tile: Optional[tiling.TileConfig] = None,
+        backend: Optional[str] = None,
+    ) -> jax.Array:
+        """Z = X @ W with the RedMulE dataflow.
+
+        Shapes: ``x: (..., M, N)``, ``w: (N, K)`` (weight GEMM) or
+        ``w: (..., N, K)`` with broadcast-compatible leading dims (batched
+        GEMM, e.g. attention).  Output: ``(..., M, K)`` in the policy's
+        output dtype."""
+        policy = self.resolve_policy(policy)
+        b = self.resolve_backend(backend)
+        if x.ndim < 2 or w.ndim < 2:
+            raise ValueError(f"matmul needs >=2D operands, got {x.shape} @ {w.shape}")
+        if x.shape[-1] != w.shape[-2]:
+            raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+        if w.ndim == 2:
+            lead = x.shape[:-2]
+            tag = "mn,nk->mk"
+        else:
+            lead = np.broadcast_shapes(x.shape[:-2], w.shape[:-2])
+            tag = "bmn,bnk->bmk"
+        spec = GemmSpec(
+            op="matmul", tag=tag,
+            m=x.shape[-2], n=x.shape[-1], k=w.shape[-1],
+            batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
+            policy=policy, tile=tile, w_shared=(w.ndim == 2),
+        )
+        return self._execute(spec, b, x, w)
+
+    def linear(
+        self,
+        x: jax.Array,
+        w: jax.Array,
+        b: Optional[jax.Array] = None,
+        *,
+        activation: Optional[str] = None,
+        policy=None,
+        tile: Optional[tiling.TileConfig] = None,
+        backend: Optional[str] = None,
+    ) -> jax.Array:
+        """Affine layer with a fused epilogue: ``act(x @ w + b)``.
+
+        Bias add and activation run in the policy's accumulation dtype on
+        the backend's pre-downcast result, so backends that return the
+        accumulator (e.g. "xla") see a single downcast at the end.  The
+        Pallas kernel stores its output in ``out_dtype`` (store-once), so
+        its epilogue re-widens the stored values instead."""
+        policy = self.resolve_policy(policy)
+        bk = self.resolve_backend(backend)
+        if activation is not None and activation not in _EPILOGUES:
+            raise ValueError(
+                f"unknown epilogue {activation!r}; known: {sorted(_EPILOGUES)}")
+        if x.ndim < 2 or w.ndim != 2:
+            raise ValueError(f"linear needs x>=2D, w 2D; got {x.shape} @ {w.shape}")
+        if x.shape[-1] != w.shape[0]:
+            raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+        lead = x.shape[:-2]
+        spec = GemmSpec(
+            op="linear", tag="mn,nk->mk",
+            m=x.shape[-2], n=x.shape[-1], k=w.shape[-1],
+            batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
+            policy=policy, tile=tile, epilogue=activation, w_shared=True,
+        )
+        z = self._execute_raw(spec, bk, x, w)
+        if b is not None or activation is not None:
+            za = z.astype(policy.accum_dtype)
+            if b is not None:
+                za = za + b.astype(policy.accum_dtype)
+            if activation is not None:
+                za = _EPILOGUES[activation](za)
+            z = za
+        return z.astype(policy.out_dtype)
+
+    def grouped_matmul(
+        self,
+        x: jax.Array,
+        w: jax.Array,
+        *,
+        group_sizes: Optional[jax.Array] = None,
+        policy=None,
+        tile: Optional[tiling.TileConfig] = None,
+        backend: Optional[str] = None,
+    ) -> jax.Array:
+        """Per-group GEMM: ``Z[g] = X[g] @ W[g]`` for every group at once.
+
+        Shapes: ``x: (..., G, M, N)``, ``w: (G, N, K)``; output
+        ``(..., G, M, K)``.  This is the MoE expert GEMM — all experts run
+        as one fat batched RedMulE GEMM (the paper's Fig 4d batching
+        restoration) instead of a per-expert Python loop.
+
+        ``group_sizes`` (optional, shape ``(G,)`` int) marks the number of
+        valid M rows per group for ragged workloads; output rows at or
+        beyond a group's size are zeroed."""
+        policy = self.resolve_policy(policy)
+        b = self.resolve_backend(backend)
+        if x.ndim < 3 or w.ndim != 3:
+            raise ValueError(
+                f"grouped_matmul needs x (..., G, M, N) and w (G, N, K); "
+                f"got {x.shape} @ {w.shape}")
+        if x.shape[-3] != w.shape[0]:
+            raise ValueError(
+                f"group mismatch: x has {x.shape[-3]} groups, w has {w.shape[0]}")
+        if x.shape[-1] != w.shape[-2]:
+            raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+        lead = x.shape[:-3]
+        spec = GemmSpec(
+            op="grouped_matmul", tag="gmn,gnk->gmk",
+            m=x.shape[-2], n=x.shape[-1], k=w.shape[-1],
+            batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
+            groups=w.shape[0],
+            policy=policy, tile=tile, w_shared=True,
+        )
+        z = self._execute(spec, b, x, w)
+        if group_sizes is not None:
+            valid = (jnp.arange(spec.m)[None, :]
+                     < jnp.asarray(group_sizes)[:, None])      # (G, M)
+            z = jnp.where(valid[..., None], z, jnp.zeros((), z.dtype))
+        return z
+
+    def einsum2d(
+        self,
+        eq: str,
+        x: jax.Array,
+        w: jax.Array,
+        *,
+        policy=None,
+        tile: Optional[tiling.TileConfig] = None,
+        backend: Optional[str] = None,
+    ) -> jax.Array:
+        """Two-operand einsum lowered onto the engine's GEMM dispatch.
+
+        Supports any equation with exactly two operands, single-letter
+        axes, no repeated labels within an operand and no ellipses (e.g.
+        ``"bhsd,rhd->bhsr"``).  Shared labels absent from the output are
+        contracted; labels unique to one operand and absent from the
+        output are summed out first."""
+        policy = self.resolve_policy(policy)
+        b = self.resolve_backend(backend)
+        plan = _plan_einsum2d(eq, x.shape, w.shape)
+        (batch_l, m_l, k_l, c_l, sum_x, sum_w, a_lab, b_lab, out_lab,
+         dims) = plan
+        if sum_x:
+            x = jnp.sum(x, axis=tuple(a_lab.index(l) for l in sum_x))
+            a_lab = [l for l in a_lab if l not in sum_x]
+        if sum_w:
+            w = jnp.sum(w, axis=tuple(b_lab.index(l) for l in sum_w))
+            b_lab = [l for l in b_lab if l not in sum_w]
+        xt = jnp.transpose(x, [a_lab.index(l) for l in batch_l + m_l + c_l])
+        wt = jnp.transpose(w, [b_lab.index(l) for l in batch_l + c_l + k_l])
+        bsz = int(np.prod([dims[l] for l in batch_l], dtype=np.int64)) \
+            if batch_l else 1
+        m = int(np.prod([dims[l] for l in m_l], dtype=np.int64)) if m_l else 1
+        k = int(np.prod([dims[l] for l in k_l], dtype=np.int64)) if k_l else 1
+        c = int(np.prod([dims[l] for l in c_l], dtype=np.int64)) if c_l else 1
+        spec = GemmSpec(
+            op="einsum2d", tag=eq.replace(" ", ""),
+            m=m, n=c, k=k, batch=bsz, policy=policy, tile=tile,
+            w_shared=not batch_l,
+        )
+        if batch_l:
+            x2 = xt.reshape(bsz, m, c)
+            w2 = wt.reshape(bsz, c, k)
+        else:
+            x2 = xt.reshape(m, c)
+            w2 = wt.reshape(c, k)
+        z = self._execute(spec, b, x2, w2)
+        cur = batch_l + m_l + k_l
+        z = z.reshape([dims[l] for l in cur])
+        return jnp.transpose(z, [cur.index(l) for l in out_lab])
+
+    # expose the collectors on the instance too, for discoverability
+    instrument = staticmethod(instrument)
+    repeat = staticmethod(repeat)
+
+
+def _plan_einsum2d(eq: str, x_shape, w_shape):
+    """Parse an einsum2d equation into (batch, m, k, contract, ...) labels."""
+    e = eq.replace(" ", "")
+    if "->" not in e or "..." in e:
+        raise ValueError(f"einsum2d needs an explicit '->' and no ellipsis: {eq!r}")
+    lhs, out = e.split("->")
+    terms = lhs.split(",")
+    if len(terms) != 2:
+        raise ValueError(f"einsum2d takes exactly two operands: {eq!r}")
+    a, bt = terms
+    for t in (a, bt, out):
+        if len(set(t)) != len(t):
+            raise ValueError(f"repeated labels are not supported: {eq!r}")
+    if len(a) != len(x_shape) or len(bt) != len(w_shape):
+        raise ValueError(
+            f"equation {eq!r} does not match operand ranks "
+            f"{len(x_shape)} and {len(w_shape)}")
+    dims: Dict[str, int] = {}
+    for labels, shape in ((a, x_shape), (bt, w_shape)):
+        for lab, s in zip(labels, shape):
+            if lab in dims and dims[lab] != s:
+                raise ValueError(
+                    f"size mismatch for label {lab!r} in {eq!r}: "
+                    f"{dims[lab]} vs {s}")
+            dims[lab] = int(s)
+    for lab in out:
+        if lab not in dims:
+            raise ValueError(f"output label {lab!r} not in any operand: {eq!r}")
+    batch_l = [l for l in a if l in bt and l in out]
+    c_l = [l for l in a if l in bt and l not in out]
+    m_l = [l for l in a if l not in bt and l in out]
+    k_l = [l for l in bt if l not in a and l in out]
+    sum_x = [l for l in a if l not in bt and l not in out]
+    sum_w = [l for l in bt if l not in a and l not in out]
+    return (batch_l, m_l, k_l, c_l, sum_x, sum_w,
+            list(a), list(bt), list(out), dims)
+
+
+DEFAULT_ENGINE = Engine()
+
+
+# --------------------------------------------------------------------- #
+# Module-level conveniences (the framework-wide call surface)
+# --------------------------------------------------------------------- #
+def matmul(x, w, **kwargs) -> jax.Array:
+    return DEFAULT_ENGINE.matmul(x, w, **kwargs)
+
+
+def linear(x, w, b=None, **kwargs) -> jax.Array:
+    return DEFAULT_ENGINE.linear(x, w, b, **kwargs)
+
+
+def grouped_matmul(x, w, **kwargs) -> jax.Array:
+    return DEFAULT_ENGINE.grouped_matmul(x, w, **kwargs)
+
+
+def einsum2d(eq, x, w, **kwargs) -> jax.Array:
+    return DEFAULT_ENGINE.einsum2d(eq, x, w, **kwargs)
+
+
+matmul.__doc__ = Engine.matmul.__doc__
+linear.__doc__ = Engine.linear.__doc__
+grouped_matmul.__doc__ = Engine.grouped_matmul.__doc__
+einsum2d.__doc__ = Engine.einsum2d.__doc__

@@ -40,6 +40,10 @@ __all__ = [
     "autoencoder_report",
     "AE_DIMS",
     "TABLE1_PUBLISHED",
+    "gemms_from_events",
+    "workload_cycles_from_events",
+    "dense_forward_gemms",
+    "workload_flops",
 ]
 
 
@@ -208,6 +212,71 @@ class RedMulEModel:
 
 
 DEFAULT_MODEL = RedMulEModel()
+
+
+# ---------------------------------------------------------------------- #
+# Engine instrumentation -> machine-model workloads
+# ---------------------------------------------------------------------- #
+# The Engine (repro.core.engine) emits a GemmEvent per dispatch; instead of
+# re-deriving GEMM shapes by hand for every workload, the machine model can
+# consume a recorded event stream directly.  Events are duck-typed (anything
+# with .spec.{m,n,k,batch,groups} and .count), so there is no engine import.
+def gemms_from_events(events) -> List[Tuple[GEMM, int]]:
+    """Convert engine ``GemmEvent``s into ``(GEMM, multiplicity)`` pairs.
+
+    Each batched/grouped dispatch counts as ``batch * groups * count``
+    independent (M, N, K) problems on the accelerator."""
+    out: List[Tuple[GEMM, int]] = []
+    for ev in events:
+        s = ev.spec
+        out.append((GEMM(M=s.m, N=s.n, K=s.k),
+                    s.batch * s.groups * ev.count))
+    return out
+
+
+def workload_cycles_from_events(
+    model: RedMulEModel, events
+) -> Tuple[float, float]:
+    """(hw_cycles, sw_cycles) of an instrumented workload on ``model``."""
+    pairs = gemms_from_events(events)
+    hw = sum(model.hw_cycles(g) * c for g, c in pairs)
+    sw = sum(model.sw_cycles(g) * c for g, c in pairs)
+    return hw, sw
+
+
+def workload_flops(pairs: Sequence[Tuple[GEMM, int]]) -> int:
+    """Total flops (2 * MACs) of a ``(GEMM, multiplicity)`` workload."""
+    return sum(2 * g.macs * c for g, c in pairs)
+
+
+def dense_forward_gemms(cfg, batch: int, seq: int) -> List[Tuple[GEMM, int]]:
+    """Analytic GEMM enumeration of one dense-transformer forward pass.
+
+    The oracle the Engine's instrumentation is validated against
+    (``tests/test_engine.py``): every GEMM of a ``block_kind == "attn"``
+    GQA forward (no cache, ``seq <= q_chunk``, GLU MLP, with LM head) in
+    the Engine's (batch, M, N, K) convention.
+    """
+    if cfg.block_kind != "attn" or cfg.mla is not None:
+        raise ValueError("dense_forward_gemms covers dense GQA archs only")
+    if seq > cfg.q_chunk:
+        raise ValueError("seq > q_chunk: the q-chunk scan changes the shapes")
+    if cfg.mlp != "glu":
+        raise ValueError("dense_forward_gemms assumes the GLU MLP")
+    B, S, d = batch, seq, cfg.d_model
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    L, ff, V = cfg.n_layers, cfg.d_ff, cfg.vocab_size
+    g = hq // hkv
+    pairs: List[Tuple[GEMM, int]] = [
+        (GEMM(M=S, N=d, K=(hq + 2 * hkv) * hd), B * L),   # fused qkv
+        (GEMM(M=S, N=hd, K=S), B * hkv * g * L),          # scores  q @ k^T
+        (GEMM(M=S, N=S, K=hd), B * hkv * g * L),          # context p @ v
+        (GEMM(M=S, N=hq * hd, K=d), B * L),               # wo
+        (GEMM(M=S, N=d, K=2 * ff), B * L),                # mlp w_in (gate|up)
+        (GEMM(M=S, N=ff, K=d), B * L),                    # mlp w_out
+        (GEMM(M=S, N=d, K=V), B),                         # lm head
+    ]
+    return pairs
 
 
 # ---------------------------------------------------------------------- #

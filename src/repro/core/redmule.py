@@ -1,38 +1,40 @@
-"""RedMulE engine — the framework-wide GEMM primitive.
+"""DEPRECATED free-function GEMM surface — use :mod:`repro.core.engine`.
 
-Every dense projection, attention score/context product, MoE expert and LM
-head in this repo routes through :func:`matmul` (or its conveniences
-:func:`linear` / :func:`einsum2d`).  The engine dispatches to one of three
-backends:
+This module was the framework-wide GEMM primitive.  The surface moved to
+the first-class Engine API in :mod:`repro.core.engine`:
 
-* ``"pallas"``     — the TPU Pallas kernel (`kernels/redmule_matmul.py`):
-                     X-stationary, W-streamed, Z accumulated in a VMEM fp32
-                     scratch and stored once (the paper's dataflow).
-* ``"interpret"``  — the *same* kernel body executed in interpreter mode
-                     (CPU CI; bit-faithful to the kernel's schedule).
-* ``"xla"``        — `lax.dot_general` with the engine's precision policy.
-                     Used for the 512-device dry-run (XLA:CPU cannot lower
-                     TPU Pallas) and as the production fallback; shares the
-                     tiling policy so rooflines stay representative.
+* ``engine.matmul / linear / grouped_matmul / einsum2d`` — the op family
+  every model kernel routes through;
+* ``engine.register_backend(name, fn, ...)`` — the pluggable backend
+  registry that replaced this module's hard-coded backend tuple
+  ("pallas", "interpret" and "xla" are ordinary registered entries);
+* ``engine.instrument()`` — the thread-local GemmEvent collector the
+  roofline and perf model consume;
+* ``engine.use_backend / set_default_backend / default_backend`` — backend
+  resolution (explicit arg > context > ``REPRO_MATMUL_BACKEND`` env var,
+  validated at read time > platform default).
 
-Backend resolution: explicit argument > ``set_default_backend`` context >
-``REPRO_MATMUL_BACKEND`` env var > platform default ("pallas" on TPU, "xla"
-elsewhere).
+``redmule.matmul`` and ``redmule.linear`` remain as thin deprecation shims
+for one release: they delegate to the default Engine and emit a
+``DeprecationWarning`` on first use.  New code should import from
+``repro.core.engine`` (or ``repro.core``, which re-exports the Engine
+surface).
 """
 
 from __future__ import annotations
 
-import contextlib
-import os
-import threading
-from typing import Optional, Sequence
+import warnings
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import precision as prec
+from repro.core import engine as _engine
 from repro.core import tiling
+from repro.core.engine import (  # noqa: F401  (compat re-exports)
+    default_backend,
+    set_default_backend,
+    use_backend,
+)
 
 __all__ = [
     "matmul",
@@ -42,45 +44,18 @@ __all__ = [
     "use_backend",
 ]
 
-_VALID_BACKENDS = ("pallas", "interpret", "xla")
-_state = threading.local()
+_warned: set = set()
 
 
-def _thread_backend() -> Optional[str]:
-    return getattr(_state, "backend", None)
-
-
-def default_backend() -> str:
-    b = _thread_backend()
-    if b is not None:
-        return b
-    b = os.environ.get("REPRO_MATMUL_BACKEND")
-    if b:
-        return b
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
-
-
-def set_default_backend(backend: Optional[str]) -> None:
-    if backend is not None and backend not in _VALID_BACKENDS:
-        raise ValueError(f"backend must be one of {_VALID_BACKENDS}, got {backend!r}")
-    _state.backend = backend
-
-
-@contextlib.contextmanager
-def use_backend(backend: str):
-    old = _thread_backend()
-    set_default_backend(backend)
-    try:
-        yield
-    finally:
-        set_default_backend(old)
-
-
-def _resolve_backend(backend: Optional[str]) -> str:
-    b = backend or default_backend()
-    if b not in _VALID_BACKENDS:
-        raise ValueError(f"backend must be one of {_VALID_BACKENDS}, got {b!r}")
-    return b
+def _warn(name: str) -> None:
+    if name not in _warned:
+        _warned.add(name)
+        warnings.warn(
+            f"repro.core.redmule.{name} is deprecated; use "
+            f"repro.core.engine.{name} (the Engine API)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
 
 
 def matmul(
@@ -91,70 +66,9 @@ def matmul(
     tile: Optional[tiling.TileConfig] = None,
     backend: Optional[str] = None,
 ) -> jax.Array:
-    """Z = X @ W with the RedMulE dataflow.
-
-    Shapes: ``x: (..., M, N)``, ``w: (N, K)`` (weight GEMM) or
-    ``w: (..., N, K)`` with broadcast-compatible leading dims (batched GEMM,
-    e.g. attention).  Output: ``(..., M, K)`` in the policy's output dtype.
-    """
-    policy = prec.resolve(policy)
-    b = _resolve_backend(backend)
-
-    if x.ndim < 2 or w.ndim < 2:
-        raise ValueError(f"matmul needs >=2D operands, got {x.shape} @ {w.shape}")
-    if x.shape[-1] != w.shape[-2]:
-        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
-
-    xc = x.astype(policy.compute_dtype)
-    wc = w.astype(policy.compute_dtype)
-
-    if b == "xla":
-        out = _xla_matmul(xc, wc, policy)
-        return out.astype(policy.out_dtype)
-
-    # Pallas paths: flatten to 2D / batched-3D.
-    interpret = b == "interpret"
-    from repro.kernels import ops  # local import: kernels depend on core
-
-    if w.ndim == 2:
-        lead = x.shape[:-2]
-        x2 = xc.reshape((-1, x.shape[-1])) if lead else xc
-        z2 = ops.redmule_matmul(x2, wc, policy=policy, tile=tile, interpret=interpret)
-        return z2.reshape((*lead, x.shape[-2], w.shape[-1]))
-
-    # batched: broadcast leading dims, vmap the kernel
-    lead = np.broadcast_shapes(x.shape[:-2], w.shape[:-2])
-    xb = jnp.broadcast_to(xc, (*lead, *x.shape[-2:])).reshape((-1, *x.shape[-2:]))
-    wb = jnp.broadcast_to(wc, (*lead, *w.shape[-2:])).reshape((-1, *w.shape[-2:]))
-    z = ops.redmule_matmul_batched(xb, wb, policy=policy, tile=tile, interpret=interpret)
-    return z.reshape((*lead, x.shape[-2], w.shape[-1]))
-
-
-def _xla_matmul(xc: jax.Array, wc: jax.Array, policy: prec.Policy) -> jax.Array:
-    """dot_general with the engine's accumulation policy."""
-    nb = max(xc.ndim, wc.ndim) - 2
-    x_batch = tuple(range(xc.ndim - 2)) if xc.ndim > 2 else ()
-    w_batch = tuple(range(wc.ndim - 2)) if wc.ndim > 2 else ()
-    if xc.ndim > 2 and wc.ndim == 2:
-        # weight GEMM: single dot over collapsed leading dims
-        out = jax.lax.dot_general(
-            xc, wc,
-            (((xc.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=policy.accum_dtype,
-        )
-        return out
-    if x_batch != w_batch or xc.shape[:-2] != wc.shape[:-2]:
-        lead = np.broadcast_shapes(xc.shape[:-2], wc.shape[:-2])
-        xc = jnp.broadcast_to(xc, (*lead, *xc.shape[-2:]))
-        wc = jnp.broadcast_to(wc, (*lead, *wc.shape[-2:]))
-        nb = len(lead)
-        x_batch = w_batch = tuple(range(nb))
-    out = jax.lax.dot_general(
-        xc, wc,
-        (((xc.ndim - 1,), (wc.ndim - 2,)), (x_batch, w_batch)),
-        preferred_element_type=policy.accum_dtype,
-    )
-    return out
+    """Deprecated shim for :func:`repro.core.engine.matmul`."""
+    _warn("matmul")
+    return _engine.matmul(x, w, policy=policy, tile=tile, backend=backend)
 
 
 def linear(
@@ -166,9 +80,6 @@ def linear(
     tile: Optional[tiling.TileConfig] = None,
     backend: Optional[str] = None,
 ) -> jax.Array:
-    """Affine layer on the RedMulE engine: ``x @ w + b``."""
-    policy = prec.resolve(policy)
-    z = matmul(x, w, policy=policy, tile=tile, backend=backend)
-    if b is not None:
-        z = (z.astype(policy.accum_dtype) + b.astype(policy.accum_dtype)).astype(policy.out_dtype)
-    return z
+    """Deprecated shim for :func:`repro.core.engine.linear`."""
+    _warn("linear")
+    return _engine.linear(x, w, b, policy=policy, tile=tile, backend=backend)

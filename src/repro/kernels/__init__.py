@@ -1,8 +1,22 @@
-"""Pallas TPU kernels for the paper's compute hot-spots.
+"""Pallas TPU kernels — the Engine's accelerator backends.
+
+The GEMM surface lives in :mod:`repro.core.engine`; this package provides
+the kernel bodies the registered "pallas" and "interpret" backends execute
+(the registry entry, not this package, is the dispatch point — third-party
+backends register alongside these without touching kernel code).
 
 * redmule_matmul.py -- the paper's engine: X-stationary / W-streamed tiled
   GEMM with a VMEM scratch accumulator (store-once Z).  ops.py wraps it
   (padding, tile choice, batching); ref.py holds the pure-jnp oracles.
 * flash_attention.py -- RedMulE-tiled attention (Q-stationary, K/V streamed,
   online-softmax accumulator) for long-context prefill.
+* chunked_linear_attention.py -- VMEM-resident-state chunked recurrence
+  (mLSTM / SSD), the store-once rule applied to linear attention.
 """
+
+from jax.experimental.pallas import tpu as _pltpu
+
+# renamed TPUCompilerParams -> CompilerParams across jax releases; every
+# kernel in this package uses this one alias
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

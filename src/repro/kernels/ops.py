@@ -1,8 +1,11 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""jit'd wrappers around the Pallas GEMM kernel — the bodies behind the
+Engine's registered "pallas" / "interpret" backends.
 
 Handles padding to tile multiples (zeros are accumulation-neutral), tile
 selection via :mod:`repro.core.tiling`, and batching (vmap adds a leading
-grid dimension to the kernel).
+grid dimension to the kernel).  Model code should not call these directly:
+route through :mod:`repro.core.engine` so dispatches are instrumented and
+backend-switchable.
 """
 
 from __future__ import annotations

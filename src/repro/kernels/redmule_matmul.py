@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams as _CompilerParams
+
 from repro.core import precision as prec
 from repro.core import tiling
 
@@ -85,7 +87,7 @@ def redmule_matmul_pallas(
         out_specs=pl.BlockSpec((tile.bm, tile.bk), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, K), policy.out_dtype),
         scratch_shapes=[pltpu.VMEM((tile.bm, tile.bk), policy.accum_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -18,13 +18,14 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
+from repro.core import engine
 from repro.launch import mesh as mesh_lib
 from repro.launch import serve as serve_lib
 from repro.launch import train as train_lib
 from repro.models import transformer
 from repro.optim import AdamW
 from repro.roofline import analysis as roofline_lib
-from repro.runtime import sharding
+from repro.runtime import compat, sharding
 
 __all__ = ["dryrun_cell", "main"]
 
@@ -97,7 +98,9 @@ def dryrun_cell(
     t0 = time.time()
     specs = configs.input_specs(cfg, shape)
 
-    with jax.set_mesh(mesh):
+    # every GEMM dispatched while the cell is traced lands in gemm_events;
+    # the roofline consumes them instead of re-deriving shapes by hand
+    with compat.set_mesh(mesh), engine.instrument() as gemm_events:
         if shape.kind == "train":
             rules = sharding.Rules(fsdp=fsdp, sequence_parallel=sequence_parallel)
             opt = AdamW(lr=1e-4)
@@ -162,7 +165,8 @@ def dryrun_cell(
     report = roofline_lib.roofline(
         compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
         n_devices=n_dev,
-        model_flops_val=roofline_lib.model_flops(cfg, shape), hlo_text=hlo)
+        model_flops_val=roofline_lib.model_flops(cfg, shape), hlo_text=hlo,
+        gemm_events=gemm_events)
     rec = report.to_json()
     rec.update(
         lower_s=round(t_lower, 2),

@@ -15,14 +15,15 @@ from typing import Tuple
 
 import jax
 
+from repro.runtime import compat
+
 __all__ = ["make_production_mesh", "data_axes", "make_host_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> Tuple[str, ...]:
@@ -32,6 +33,4 @@ def data_axes(mesh) -> Tuple[str, ...]:
 
 def make_host_mesh():
     """A 1-device mesh for CPU smoke tests (same axis names as single-pod)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))

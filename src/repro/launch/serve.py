@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
+from repro.core import engine
 from repro.models import transformer
 from repro.runtime import sharding
 
@@ -138,6 +139,9 @@ def main(argv=None):
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--instrument", action="store_true",
+                   help="trace prefill + one decode step under "
+                        "engine.instrument() and print the GEMM summary")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -146,6 +150,27 @@ def main(argv=None):
     params = transformer.init_params(rng, cfg)
     prompts = jax.random.randint(
         rng, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
+    if args.instrument:
+        max_len = args.prompt_len + args.gen
+        cache_abs = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, args.batch, max_len))
+        tok_abs = jax.ShapeDtypeStruct((args.batch, 1), jnp.int32)
+        phases = {
+            "prefill": lambda: jax.eval_shape(
+                lambda p_, b_: transformer.prefill(p_, cfg, b_, max_len),
+                params, {"inputs": prompts}),
+            "decode": lambda: jax.eval_shape(
+                lambda p_, c_, t_: transformer.serve_step(
+                    p_, cfg, t_, c_, jnp.int32(args.prompt_len)),
+                params, cache_abs, tok_abs),
+        }
+        for phase, trace in phases.items():
+            with engine.instrument() as events:
+                trace()
+            for op, d in engine.summarize(events).items():
+                print(f"[engine] {phase} {op}: calls={d['calls']} "
+                      f"gflops={d['flops']/1e9:.3f} "
+                      f"gbytes={d['bytes']/1e9:.3f}")
     t0 = time.perf_counter()
     seqs = generate(params, cfg, prompts, args.gen)
     jax.block_until_ready(seqs)

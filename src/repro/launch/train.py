@@ -29,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.checkpoint import CheckpointManager
+from repro.core import engine
 from repro.data import Prefetcher, SyntheticLM
 from repro.models import layers as L
 from repro.models import transformer
@@ -108,11 +109,13 @@ def build_train_step(
 
                 g0 = jax.tree.map(
                     lambda x: jnp.zeros(x.shape, jnp.float32), state.params)
-                m0 = jax.eval_shape(
-                    lambda: jax.value_and_grad(lf, has_aux=True)(
-                        state.params, jax.tree.map(lambda x: x[0], mb))[0][1])
+                with engine.paused():  # shape probe: don't double-count GEMMs
+                    m0 = jax.eval_shape(
+                        lambda: jax.value_and_grad(lf, has_aux=True)(
+                            state.params, jax.tree.map(lambda x: x[0], mb))[0][1])
                 m0 = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), m0)
-                (grads, metrics), _ = jax.lax.scan(mb_body, (g0, m0), mb)
+                with engine.repeat(grad_accum):  # microbatch scan
+                    (grads, metrics), _ = jax.lax.scan(mb_body, (g0, m0), mb)
                 inv = 1.0 / grad_accum
                 grads = jax.tree.map(lambda g: g * inv, grads)
                 metrics = jax.tree.map(lambda x: x * inv, metrics)
@@ -267,6 +270,9 @@ def main(argv=None):
     p.add_argument("--save-every", type=int, default=50)
     p.add_argument("--fp16-scale", action="store_true",
                    help="pure-FP16 compute with dynamic loss scaling")
+    p.add_argument("--instrument", action="store_true",
+                   help="trace one step under engine.instrument() and print "
+                        "the per-op GEMM flop/byte summary before training")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -285,6 +291,14 @@ def main(argv=None):
         seed=args.seed,
         embed_dim=cfg.d_model if cfg.input_mode == "embeddings" else 0)
     batches = Prefetcher(iter(ds), depth=2)
+
+    if args.instrument:
+        # abstract trace only — events are emitted at trace time
+        with engine.instrument() as events:
+            jax.eval_shape(step, state, ds.batch(0))
+        for op, d in engine.summarize(events).items():
+            print(f"[engine] {op}: calls={d['calls']} "
+                  f"gflops={d['flops']/1e9:.3f} gbytes={d['bytes']/1e9:.3f}")
 
     if args.ckpt_dir:
         ckpt = CheckpointManager(args.ckpt_dir, keep=2)

@@ -19,7 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import matmul
+from repro.core import engine
 from repro.core import precision as prec
 from repro.models import layers
 from repro.models.layers import Param
@@ -147,10 +147,10 @@ def chunked_attention(
 
     def block(q_blk: jax.Array, rows: jax.Array) -> jax.Array:
         q_blk = c(q_blk, "batch", "kv_heads", None, None, None)
-        s = matmul(q_blk, kt, policy=scores_policy) * scale
+        s = engine.matmul(q_blk, kt, policy=scores_policy) * scale
         s = c(s, "batch", "kv_heads", None, None, "kv_seq")
         p = _masked_softmax_block(s, rows, kv_valid, causal, window)
-        out = matmul(p.astype(policy.compute_dtype), vb, policy=policy)
+        out = engine.matmul(p.astype(policy.compute_dtype), vb, policy=policy)
         return c(out, "batch", "kv_heads", None, None, None)
 
     if S <= q_chunk:
@@ -167,7 +167,8 @@ def chunked_attention(
         rows = q_offset + idx * q_chunk + jnp.arange(q_chunk)
         return None, block(q_blk, rows)
 
-    _, out = jax.lax.scan(step, None, (qs, jnp.arange(n)))
+    with engine.repeat(n):  # body traced once, runs n q-chunks
+        _, out = jax.lax.scan(step, None, (qs, jnp.arange(n)))
     out = jnp.moveaxis(out, 0, 3).reshape(B, Hkv, G, n * q_chunk, -1)
     return out[:, :, :, :S]
 
@@ -190,7 +191,7 @@ def gqa_attention(
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = hq // hkv
 
-    qkv = matmul(x, params["wqkv"], policy=policy)
+    qkv = engine.matmul(x, params["wqkv"], policy=policy)
     if "bqkv" in params:
         qkv = qkv + params["bqkv"].astype(qkv.dtype)
     q, kk, vv = jnp.split(qkv, [hq * hd, (hq + hkv) * hd], axis=-1)
@@ -240,7 +241,7 @@ def gqa_attention(
     )
     o = o.reshape(B, hq, S, hd).transpose(0, 2, 1, 3).reshape(B, S, hq * hd)
     o = sharding.constrain(o, "batch", None, "heads")
-    out = matmul(o, params["wo"], policy=policy)
+    out = engine.matmul(o, params["wo"], policy=policy)
     return out, new_cache
 
 
@@ -262,11 +263,11 @@ def mla_attention(
     hq = cfg.n_heads
     dn, dr, dv, r = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
 
-    q = matmul(x, params["wq"], policy=policy).reshape(B, S, hq, dn + dr)
+    q = engine.matmul(x, params["wq"], policy=policy).reshape(B, S, hq, dn + dr)
     q = q.transpose(0, 2, 1, 3)  # (B, Hq, S, dn+dr)
     qn, qr = q[..., :dn], q[..., dn:]
 
-    dkv = matmul(x, params["wdkv"], policy=policy)  # (B, S, r + dr)
+    dkv = engine.matmul(x, params["wdkv"], policy=policy)  # (B, S, r + dr)
     ckv, kr = dkv[..., :r], dkv[..., r:]
     ckv = layers.rmsnorm(ckv, params["kv_norm"])
 
@@ -303,33 +304,31 @@ def mla_attention(
         # per-step (T, Hq*dn) k/v re-expansion (saves a factor of dn=128
         # on the T-dependent FLOPs; this was the useful~0 diagnosis of the
         # MLA decode cells in EXPERIMENTS.md §Roofline).
-        acc = jnp.float32
-        wuk = params["wuk"].reshape(r, hq, dn).astype(policy.compute_dtype)
-        wuv = params["wuv"].reshape(r, hq, dv).astype(policy.compute_dtype)
-        q_abs = jnp.einsum("bhsd,rhd->bhsr", qn.astype(policy.compute_dtype),
-                           wuk, preferred_element_type=acc)
-        s = jnp.einsum("bhsr,btr->bhst", q_abs.astype(policy.compute_dtype),
-                       ckv_all, preferred_element_type=acc)
-        s = s + jnp.einsum("bhsd,btd->bhst",
-                           qr.astype(policy.compute_dtype), kr_all,
-                           preferred_element_type=acc)
-        s = s.astype(jnp.float32) * (dn + dr) ** -0.5
+        # fp32-out engine policy: every absorbed contraction accumulates
+        # (and is returned) in fp32, exactly like the old preferred_element_type
+        abs_policy = prec.Policy(
+            policy.name + "_absorbed", policy.compute_dtype,
+            jnp.float32, jnp.float32)
+        wuk = params["wuk"].reshape(r, hq, dn)
+        wuv = params["wuv"].reshape(r, hq, dv)
+        q_abs = engine.einsum2d("bhsd,rhd->bhsr", qn, wuk, policy=abs_policy)
+        s = engine.einsum2d("bhsr,btr->bhst", q_abs, ckv_all, policy=abs_policy)
+        s = s + engine.einsum2d("bhsd,btd->bhst", qr, kr_all, policy=abs_policy)
+        s = s * (dn + dr) ** -0.5
         mask = jnp.arange(T)[None, None, None, :] < kv_valid
         s = jnp.where(mask, s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
-        ctx = jnp.einsum("bhst,btr->bhsr", p.astype(policy.compute_dtype),
-                         ckv_all, preferred_element_type=acc)
-        o = jnp.einsum("bhsr,rhd->bhsd", ctx.astype(policy.compute_dtype),
-                       wuv, preferred_element_type=acc)
+        ctx = engine.einsum2d("bhst,btr->bhsr", p, ckv_all, policy=abs_policy)
+        o = engine.einsum2d("bhsr,rhd->bhsd", ctx, wuv, policy=abs_policy)
         o = o.astype(policy.compute_dtype)
         o = o.transpose(0, 2, 1, 3).reshape(B, S, hq * dv)
         o = sharding.constrain(o, "batch", None, "heads")
-        return matmul(o, params["wo"], policy=policy), new_cache
+        return engine.matmul(o, params["wo"], policy=policy), new_cache
 
     # Prefill/train: re-expand the compressed cache (the MLA trade:
     # small cache, extra GEMM)
-    kn = matmul(ckv_all, params["wuk"], policy=policy).reshape(B, T, hq, dn)
-    vv = matmul(ckv_all, params["wuv"], policy=policy).reshape(B, T, hq, dv)
+    kn = engine.matmul(ckv_all, params["wuk"], policy=policy).reshape(B, T, hq, dn)
+    vv = engine.matmul(ckv_all, params["wuv"], policy=policy).reshape(B, T, hq, dv)
     kn = kn.transpose(0, 2, 1, 3)  # (B, Hq, T, dn)
     vv = vv.transpose(0, 2, 1, 3)
     k_full = jnp.concatenate(
@@ -343,5 +342,5 @@ def mla_attention(
     )
     o = o[:, :, 0].transpose(0, 2, 1, 3).reshape(B, S, hq * dv)
     o = sharding.constrain(o, "batch", None, "heads")
-    out = matmul(o, params["wo"], policy=policy)
+    out = engine.matmul(o, params["wo"], policy=policy)
     return out, new_cache

@@ -13,7 +13,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import linear
+from repro.core import engine
 from repro.core import precision as prec
 from repro.core.perf_model import AE_DIMS
 from repro.models.layers import Param, init_tree
@@ -53,7 +53,7 @@ def ae_forward(params, x: jax.Array, *, policy: prec.Policy = prec.PAPER_FP16,
     n = len(AE_DIMS) - 1
     for i in range(n):
         p = params[f"fc{i}"]
-        h = linear(h, p["w"], p["b"], policy=policy, backend=backend)
+        h = engine.linear(h, p["w"], p["b"], policy=policy, backend=backend)
         if i != n - 1:
             hf = h.astype(jnp.float32)
             mu = hf.mean(axis=0, keepdims=True)

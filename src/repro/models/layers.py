@@ -9,7 +9,7 @@ drift apart):
   * ``spec_tree``  — the matching pytree of ``PartitionSpec`` for pjit;
   * ``abstract_tree`` — ShapeDtypeStructs for the AOT dry-run.
 
-All GEMMs route through :func:`repro.core.matmul` (the RedMulE engine).
+All GEMMs route through the RedMulE Engine (:mod:`repro.core.engine`).
 """
 
 from __future__ import annotations
@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
-from repro.core import matmul
+from repro.core import engine
 from repro.runtime import sharding
 
 __all__ = [
@@ -184,11 +184,11 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
 def mlp_glu(params: Dict[str, jax.Array], x: jax.Array, *, act: str, policy) -> jax.Array:
     """Gated MLP: (act(x @ w_gate) * (x @ w_up)) @ w_down.  ``w_in`` fuses
     gate+up as (d, 2*ff) — one fat RedMulE GEMM instead of two."""
-    h = matmul(x, params["w_in"], policy=policy)
+    h = engine.matmul(x, params["w_in"], policy=policy)
     gate, up = jnp.split(h, 2, axis=-1)
     h = activation(gate, act) * up
     h = sharding.constrain(h, "batch", None, "ff")
-    return matmul(h, params["w_out"], policy=policy)
+    return engine.matmul(h, params["w_out"], policy=policy)
 
 
 # --------------------------------------------------------------------- #

@@ -24,11 +24,11 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import matmul
+from repro.core import engine
 from repro.core import precision as prec
 from repro.models import layers
 from repro.models.layers import Param
-from repro.runtime import sharding
+from repro.runtime import compat, sharding
 
 __all__ = ["moe_schema", "moe_forward"]
 
@@ -100,7 +100,7 @@ def moe_forward(
     x = sharding.constrain_both(x, "batch", None, None)
 
     # ---- router (fp32 logits — routing decisions want full precision) ----
-    logits = matmul(
+    logits = engine.matmul(
         x, params["router"],
         policy=prec.Policy("router", policy.compute_dtype, jnp.float32, jnp.float32),
     )                                                     # (B, S, E) fp32
@@ -129,12 +129,12 @@ def moe_forward(
     bufs = sharding.constrain_fb(
         bufs, ("batch", "experts", None, None), ("batch", None, None, None))
 
-    # ---- all experts as ONE batched RedMulE GEMM (fat-GEMM restoration) ----
-    h = matmul(bufs, params["w_in"][None], policy=policy)   # (B, E, C, 2f)
+    # ---- all experts as ONE grouped RedMulE GEMM (fat-GEMM restoration) ----
+    h = engine.grouped_matmul(bufs, params["w_in"], policy=policy)  # (B, E, C, 2f)
     g_, u_ = jnp.split(h, 2, axis=-1)
     h = layers.activation(g_, cfg.act) * u_
     h = sharding.constrain(h, "batch", "experts", None, "expert_ff")
-    out = matmul(h, params["w_out"][None], policy=policy)   # (B, E, C, d)
+    out = engine.grouped_matmul(h, params["w_out"], policy=policy)  # (B, E, C, d)
     # return all-to-all: expert-sharded -> batch-local BEFORE the combine
     # gather, else GSPMD lowers the gather-from-sharded as fp32 partial
     # all-reduces of the full (S*k, d) slot tensor (7x the traffic)
@@ -188,7 +188,7 @@ def moe_forward_shard_map(
     Requires: mesh with a "model" axis dividing n_routed; tokens already
     batch-sharded.  Falls back to ``moe_forward`` outside a mesh.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.current_abstract_mesh()
     dp_size = 1
     if mesh is not None and not mesh.empty:
         for a in ("pod", "data"):
@@ -217,7 +217,7 @@ def moe_forward_shard_map(
         rows = Bfull // ep
         x_l = jax.lax.dynamic_slice_in_dim(x_full, mi * rows, rows, axis=0)
         Bl = x_l.shape[0]
-        logits = matmul(
+        logits = engine.matmul(
             x_l, router_w,
             policy=prec.Policy("router", policy.compute_dtype,
                                jnp.float32, jnp.float32))
@@ -239,10 +239,11 @@ def moe_forward_shard_map(
                                tiled=True)                 # axis0 now = source peer
         t = jnp.moveaxis(t, 2, 0)                          # (E/ep, ep, Bl, C, d)
 
-        h = matmul(t.reshape(E // ep, -1, d), w_in_l, policy=policy)
+        h = engine.grouped_matmul(
+            t.reshape(E // ep, -1, d), w_in_l, policy=policy)
         g_, u_ = jnp.split(h, 2, axis=-1)
         h = layers.activation(g_, cfg.act) * u_
-        out = matmul(h, w_out_l, policy=policy)            # (E/ep, ep*Bl*C, d)
+        out = engine.grouped_matmul(h, w_out_l, policy=policy)  # (E/ep, ep*Bl*C, d)
 
         out = out.reshape(E // ep, ep, Bl, C, d)
         out = jnp.moveaxis(out, 0, 2)                      # (ep, Bl, E/ep, C, d)
@@ -283,10 +284,17 @@ def moe_forward_shard_map(
         P(dp, None, None),        # x
     )
     out_specs = (P(dp, None, None), P(), P(), P())
-    y, aux, z, drop = shard_map(
-        local_fn, mesh, in_specs=in_specs, out_specs=out_specs,
-        check_rep=False,
-    )(params["w_in"], params["w_out"], params["router"], x)
+    # instrumentation: local_fn is traced once with per-shard shapes but
+    # executes once per (dp x model) shard — the axes in_specs partitions
+    # over — so carry that count as the event multiplier; engine_flops
+    # stays a *global* count, consistent with the globally-shaped GEMMs
+    # traced outside shard_map
+    n_shards = dp_size * ep
+    with engine.repeat(n_shards):
+        y, aux, z, drop = shard_map(
+            local_fn, mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )(params["w_in"], params["w_out"], params["router"], x)
 
     if "shared" in params:
         y = y + layers.mlp_glu(params["shared"], x, act=cfg.act, policy=policy)

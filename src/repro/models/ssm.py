@@ -20,7 +20,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import matmul
+from repro.core import engine
 from repro.core import precision as prec
 from repro.models import layers
 from repro.models.layers import Param
@@ -101,18 +101,19 @@ def chunked_linear_attention(
         # intra-chunk: A_ij = exp(L_i - L_j) for i >= j
         D = L[..., :, None] - L[..., None, :]
         A = jnp.where(causal[None, None], jnp.exp(D), 0.0)
-        s = matmul(qc, jnp.swapaxes(kc, -1, -2), policy=_F32) * A   # (B,H,c,c)
-        out = matmul(s, vc, policy=_F32)
+        s = engine.einsum2d("bhik,bhjk->bhij", qc, kc, policy=_F32) * A
+        out = engine.matmul(s, vc, policy=_F32)
         # inter-chunk: q_i decayed from chunk start against carried state
-        out = out + matmul(qc * jnp.exp(L)[..., None], S_prev, policy=_F32)
+        out = out + engine.matmul(qc * jnp.exp(L)[..., None], S_prev, policy=_F32)
         # state update: S' = exp(Ltot) S + sum_j exp(Ltot - L_j) k_j v_j
         kdec = kc * jnp.exp(Ltot - L)[..., None]
-        S_new = jnp.exp(Ltot)[..., None] * S_prev + matmul(
+        S_new = jnp.exp(Ltot)[..., None] * S_prev + engine.matmul(
             jnp.swapaxes(kdec, -1, -2), vc, policy=_F32)
         return S_new, out
 
     xs = tuple(jnp.moveaxis(a, 2, 0) for a in (qf, kf, vf, gf))
-    state, outs = jax.lax.scan(step, state, xs)
+    with engine.repeat(n):  # chunk scan: body traced once, runs n times
+        state, outs = jax.lax.scan(step, state, xs)
     out = jnp.moveaxis(outs, 0, 2).reshape(B, H, n * chunk, dv)[:, :, :S]
     return out, state
 
@@ -170,15 +171,15 @@ def mlstm_block(
     di = cfg.ssm.mlstm_proj_factor * d
     hd = di // H
 
-    u = matmul(x, params["w_up"], policy=policy)
+    u = engine.matmul(x, params["w_up"], policy=policy)
     xin, z = jnp.split(u, 2, axis=-1)
     xh = xin.reshape(B, S, H, hd).transpose(2, 0, 1, 3).reshape(H, B * S, hd)
-    qkv = matmul(xh, params["w_qkv"], policy=policy)      # (H, B*S, 3hd)
+    qkv = engine.matmul(xh, params["w_qkv"], policy=policy)  # (H, B*S, 3hd)
     qkv = qkv.reshape(H, B, S, 3 * hd).transpose(1, 0, 2, 3)
     q, k, v = jnp.split(qkv, 3, axis=-1)                  # (B, H, S, hd)
     q = q * hd**-0.5
 
-    gates = matmul(xin, params["w_if"], policy=_F32) + params["b_if"].astype(jnp.float32)
+    gates = engine.matmul(xin, params["w_if"], policy=_F32) + params["b_if"].astype(jnp.float32)
     i_raw, f_raw = jnp.split(gates, 2, axis=-1)          # (B, S, H)
     log_f = -jax.nn.softplus(-(f_raw + 3.0))             # log sigmoid(f+3) <= 0
     i_gate = jax.nn.sigmoid(i_raw)
@@ -196,7 +197,7 @@ def mlstm_block(
     o = o.transpose(0, 2, 1, 3).reshape(B, S, di).astype(x.dtype)
     o = _per_head_rmsnorm(o, params["norm"], H)
     o = o * jax.nn.silu(z)
-    return matmul(o, params["w_down"], policy=policy), state
+    return engine.matmul(o, params["w_down"], policy=policy), state
 
 
 # --------------------------------------------------------------------- #
@@ -227,7 +228,7 @@ def slstm_block(
     H = cfg.n_heads
     hd = d // H
 
-    wx = matmul(x, params["w_gates"], policy=policy)     # (B, S, 4d) — one GEMM
+    wx = engine.matmul(x, params["w_gates"], policy=policy)  # (B, S, 4d) — one GEMM
     wx = wx.reshape(B, S, 4, H, hd).astype(jnp.float32)
     if state is None:
         zeros = jnp.zeros((B, H, hd), jnp.float32)
@@ -283,9 +284,9 @@ def mamba_mixer(
     di = cfg.ssm.mamba_expand * d
     P = di // H
 
-    xz = matmul(x, params["w_xz"], policy=policy)
+    xz = engine.matmul(x, params["w_xz"], policy=policy)
     xin, z = jnp.split(xz, 2, axis=-1)
-    bcdt = matmul(x, params["w_bcdt"], policy=_F32)      # (B, S, 2N + H)
+    bcdt = engine.matmul(x, params["w_bcdt"], policy=_F32)   # (B, S, 2N + H)
     bmat, cmat, dt = jnp.split(bcdt, [N, 2 * N], axis=-1)
     dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
     a = -jnp.exp(params["a_log"].astype(jnp.float32))
@@ -308,4 +309,4 @@ def mamba_mixer(
     o = o.transpose(0, 2, 1, 3).reshape(B_, S, di).astype(x.dtype)
     o = _per_head_rmsnorm(o, params["norm"], H)
     o = o * jax.nn.silu(z)
-    return matmul(o, params["w_out"], policy=policy), state
+    return engine.matmul(o, params["w_out"], policy=policy), state

@@ -22,7 +22,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import matmul
+from repro.core import engine
 from repro.core import precision as prec
 from repro.models import attention, layers, moe, ssm
 from repro.models.layers import Param
@@ -202,8 +202,9 @@ def _attn_block(p, h, cfg, *, pos, cache, window, policy, d_ff=None):
     if cfg.mlp == "glu":
         m = layers.mlp_glu(p["mlp"], _norm(cfg, h, p["ln2"]), act=cfg.act, policy=policy)
     else:
-        hh = matmul(_norm(cfg, h, p["ln2"]), p["mlp"]["w_in"], policy=policy)
-        m = matmul(layers.activation(hh, cfg.act), p["mlp"]["w_out"], policy=policy)
+        hh = engine.linear(_norm(cfg, h, p["ln2"]), p["mlp"]["w_in"],
+                           activation=cfg.act, policy=policy)
+        m = engine.matmul(hh, p["mlp"]["w_out"], policy=policy)
     return h + m, cache, {}
 
 
@@ -244,7 +245,9 @@ def _xlstm_super_block(p, h, cfg, *, cache, policy):
             out, _ = ssm.mlstm_block(
                 lp["cell"], _norm(cfg, hh, lp["ln"]), cfg, policy=policy)
             return hh + out, 0
-        h, m_states = jax.lax.scan(m_body, h, p["mlstm"])
+        n_m = jax.tree_util.tree_leaves(p["mlstm"])[0].shape[0]
+        with engine.repeat(n_m):
+            h, m_states = jax.lax.scan(m_body, h, p["mlstm"])
         m_states = None
     else:
         def m_body(hh, xs):
@@ -252,7 +255,9 @@ def _xlstm_super_block(p, h, cfg, *, cache, policy):
             out, st_new = ssm.mlstm_block(
                 lp["cell"], _norm(cfg, hh, lp["ln"]), cfg, policy=policy, state=st)
             return hh + out, st_new
-        h, m_states = jax.lax.scan(m_body, h, (p["mlstm"], m_cache))
+        n_m = jax.tree_util.tree_leaves(p["mlstm"])[0].shape[0]
+        with engine.repeat(n_m):
+            h, m_states = jax.lax.scan(m_body, h, (p["mlstm"], m_cache))
 
     s_cache = None if cache is None else cache["slstm"]
     out, s_state = ssm.slstm_block(
@@ -304,7 +309,9 @@ def _scan_stack(cfg, block_fn, stack_params, h, cache_stack, windows):
         xs = xs + (cache_stack,)
     if has_win:
         xs = xs + (windows,)
-    (h, aux), new_cache = jax.lax.scan(_remat(cfg, body), (h, aux0), xs)
+    n_layers = jax.tree_util.tree_leaves(stack_params)[0].shape[0]
+    with engine.repeat(n_layers):  # body traced once, runs n_layers times
+        (h, aux), new_cache = jax.lax.scan(_remat(cfg, body), (h, aux0), xs)
     return h, (new_cache if has_cache else None), aux
 
 
@@ -374,7 +381,7 @@ def forward(
     if not head:
         return h, (new_cache if cache is not None else None), aux
     w_head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = matmul(h, w_head, policy=policy)
+    logits = engine.matmul(h, w_head, policy=policy)
     logits = sharding.constrain(logits, "batch", "seq_sharded", "vocab")
     return logits, (new_cache if cache is not None else None), aux
 
@@ -398,7 +405,7 @@ def _chunked_ce(params, cfg, h, labels) -> Tuple[jax.Array, Dict[str, jax.Array]
 
     @jax.checkpoint
     def chunk(h_c, y_c):
-        logits = matmul(h_c, w_head, policy=policy)
+        logits = engine.matmul(h_c, w_head, policy=policy)
         logits = sharding.constrain(logits, "batch", "seq_sharded", "vocab")
         lf = logits.astype(jnp.float32)
         lse = jax.nn.logsumexp(lf, axis=-1)
@@ -414,7 +421,9 @@ def _chunked_ce(params, cfg, h, labels) -> Tuple[jax.Array, Dict[str, jax.Array]
 
     hs = h.reshape(n, c, *h.shape[1:])
     ys = labels.reshape(n, c, labels.shape[1])
-    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ys))
+    with engine.repeat(n):  # CE chunks: body traced once, runs n times
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.float32(0), jnp.float32(0)), (hs, ys))
     loss = tot / jnp.maximum(cnt, 1.0)
     return loss, {"loss": loss, "ntokens": cnt}
 

@@ -36,7 +36,7 @@ from typing import Dict, List, Optional, Tuple
 __all__ = [
     "PEAK_FLOPS", "HBM_BW", "ICI_BW",
     "CollectiveOp", "parse_collectives", "collective_bytes_per_device",
-    "RooflineReport", "roofline", "model_flops",
+    "RooflineReport", "roofline", "model_flops", "flops_from_events",
 ]
 
 PEAK_FLOPS = 197e12   # bf16 per chip, TPU v5e
@@ -138,8 +138,10 @@ _COLL_RE = re.compile(
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start)?\(([^\n]*)")
 _DONE_RE = re.compile(r"(all-reduce|all-gather|all-to-all|collective-permute)-done")
+# the while operand may carry an inline tuple type (one nested paren level)
 _WHILE_RE = re.compile(
-    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)([^\n]*)")
+    r"while\((?:[^()]|\([^()]*\))*\),\s*condition=%?([\w.\-]+),"
+    r"\s*body=%?([\w.\-]+)([^\n]*)")
 _TRIP_RE = re.compile(r"known_trip_count\\?\":\{\\?\"n\\?\":\\?\"(\d+)")
 _CALL_RE = re.compile(r"(?:calls|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
 
@@ -215,7 +217,10 @@ def collective_bytes_per_device(hlo: str) -> float:
 _INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^=]*?\)|[\w\[\]{},.]+))\s+([\w\-]+)\(",
     re.M)
-_DOT_OPS_RE = re.compile(r"dot\(%([\w.\-]+),\s*%([\w.\-]+)\)")
+# operands may be printed bare ("dot(%a, %b)") or typed
+# ("dot(f32[8,4]{1,0} %a, ...)") depending on the XLA version
+_DOT_OPS_RE = re.compile(
+    r"dot\((?:[\w\[\]{},]+\s+)?%([\w.\-]+),\s*(?:[\w\[\]{},]+\s+)?%([\w.\-]+)\)")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _PLUMBING = {
     "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
@@ -353,6 +358,10 @@ class RooflineReport:
     model_flops: float
     collectives: Dict[str, float]
     memory_analysis: Dict[str, float]
+    # global GEMM flops observed by the Engine's instrument() collector
+    # while the program was traced (forward dispatches; autodiff transposes
+    # are not engine calls).  0.0 when no events were supplied.
+    engine_flops: float = 0.0
 
     @property
     def dominant(self) -> str:
@@ -383,6 +392,15 @@ class RooflineReport:
         return d
 
 
+def flops_from_events(events) -> float:
+    """Total traced GEMM flops from Engine instrumentation events.
+
+    The Engine emits one ``GemmEvent`` per dispatch at trace time (with a
+    ``count`` multiplier for scan bodies), so this is the GEMM-only
+    analytic flop count of the traced program — no HLO re-derivation."""
+    return float(sum(ev.flops * ev.count for ev in events))
+
+
 def roofline(
     compiled,
     *,
@@ -392,8 +410,11 @@ def roofline(
     n_devices: int,
     model_flops_val: float,
     hlo_text: Optional[str] = None,
+    gemm_events=None,
 ) -> RooflineReport:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
     xla_flops = float(ca.get("flops", 0.0))
     xla_bytes = float(ca.get("bytes accessed", 0.0))
     hlo = hlo_text if hlo_text is not None else compiled.as_text()
@@ -426,6 +447,7 @@ def roofline(
         model_flops=model_flops_val,
         collectives=per_kind,
         memory_analysis=mem,
+        engine_flops=flops_from_events(gemm_events) if gemm_events else 0.0,
     )
 
 

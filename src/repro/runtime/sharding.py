@@ -29,6 +29,8 @@ from typing import Dict, Optional, Tuple
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime import compat
+
 __all__ = [
     "Rules",
     "use_rules",
@@ -199,7 +201,7 @@ def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     rules = current_rules()
     if rules is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.current_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     spec = sanitize_spec(logical_spec(axes, rules), x.shape, mesh)

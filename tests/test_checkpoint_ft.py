@@ -132,8 +132,9 @@ def test_elastic_reshard_across_meshes(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=1)
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     mgr.save(1, tree)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.runtime import compat
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     restored, _ = mgr.restore(1, jax.tree.map(np.asarray, tree))
     placed = reshard(restored, mesh, {"w": P("data", None)})
     np.testing.assert_allclose(np.asarray(placed["w"]), np.asarray(tree["w"]))

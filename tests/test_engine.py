@@ -1,0 +1,362 @@
+"""Engine API: backend registry/resolution, grouped GEMM, instrumentation.
+
+Covers the redesign's contract:
+  * resolution precedence (explicit arg > use_backend context > env var >
+    platform default) and thread-locality of the context;
+  * REPRO_MATMUL_BACKEND validated at read time with a helpful error;
+  * runtime-registered backends dispatch by name with no core edits;
+  * grouped_matmul == per-expert loop oracle (PAPER_FP16 / TPU_BF16),
+    dense and ragged;
+  * linear's fused bias+activation epilogue;
+  * einsum2d == jnp.einsum for the contraction family the models use;
+  * instrument(): a transformer forward's summed GemmEvent flops match the
+    perf model's analytic enumeration to within 1%;
+  * the repro.core.redmule shims still work (with a DeprecationWarning).
+"""
+
+import threading
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import engine, perf_model
+from repro.core import precision as prec
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+# ------------------------------------------------------------------ #
+# Backend resolution
+# ------------------------------------------------------------------ #
+def test_platform_default_backend(monkeypatch):
+    monkeypatch.delenv(engine.ENV_VAR, raising=False)
+    want = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert engine.default_backend() == want
+
+
+def test_env_var_beats_platform_default(monkeypatch):
+    monkeypatch.setenv(engine.ENV_VAR, "interpret")
+    assert engine.default_backend() == "interpret"
+
+
+def test_context_beats_env_var(monkeypatch):
+    monkeypatch.setenv(engine.ENV_VAR, "interpret")
+    with engine.use_backend("xla"):
+        assert engine.default_backend() == "xla"
+    assert engine.default_backend() == "interpret"
+
+
+def test_explicit_arg_beats_context():
+    seen = []
+
+    def recorder(x, w, *, spec):
+        seen.append(spec)
+        return jnp.zeros((*x.shape[:-1], w.shape[-1]), jnp.float32)
+
+    engine.register_backend("recorder", recorder)
+    try:
+        with engine.use_backend("xla"):
+            engine.matmul(_rand((4, 8)), _rand((8, 4)), backend="recorder")
+    finally:
+        engine.unregister_backend("recorder")
+    assert len(seen) == 1 and seen[0].op == "matmul"
+
+
+def test_invalid_env_var_names_source_and_backends(monkeypatch):
+    monkeypatch.setenv(engine.ENV_VAR, "not-a-backend")
+    with pytest.raises(ValueError) as ei:
+        engine.default_backend()
+    msg = str(ei.value)
+    assert "REPRO_MATMUL_BACKEND" in msg and "xla" in msg
+
+
+def test_invalid_explicit_backend_lists_registry():
+    with pytest.raises(ValueError, match="registered"):
+        engine.matmul(_rand((4, 8)), _rand((8, 4)), backend="nope")
+
+
+def test_set_default_backend_validates():
+    with pytest.raises(ValueError):
+        engine.set_default_backend("nope")
+    engine.set_default_backend(None)  # clearing is always allowed
+
+
+def test_use_backend_is_thread_local(monkeypatch):
+    monkeypatch.delenv(engine.ENV_VAR, raising=False)
+    base = engine.default_backend()
+    results = {}
+
+    def child():
+        results["before"] = engine.default_backend()
+        with engine.use_backend("interpret"):
+            results["inside"] = engine.default_backend()
+        results["after"] = engine.default_backend()
+
+    with engine.use_backend("xla"):
+        t = threading.Thread(target=child)
+        t.start()
+        t.join()
+        assert engine.default_backend() == "xla"
+    # the child never saw the parent's context, and its own context
+    # neither leaked out nor persisted
+    assert results == {"before": base, "inside": "interpret", "after": base}
+    assert engine.default_backend() == base
+
+
+# ------------------------------------------------------------------ #
+# Runtime-pluggable backends (no edits to core/engine.py)
+# ------------------------------------------------------------------ #
+def test_runtime_registered_backend_dispatches_by_name():
+    xla_fn = engine.get_backend("xla").fn
+    calls = []
+
+    def dummy(x, w, *, spec):
+        calls.append((spec.op, spec.m, spec.n, spec.k))
+        return xla_fn(x, w, spec=spec)
+
+    engine.register_backend("dummy-xla", dummy, description="test-only")
+    try:
+        assert "dummy-xla" in engine.registered_backends()
+        x, w = _rand((8, 16)), _rand((16, 8))
+        z = engine.matmul(x, w, policy=prec.TPU_BF16, backend="dummy-xla")
+        z_ref = engine.matmul(x, w, policy=prec.TPU_BF16, backend="xla")
+        np.testing.assert_allclose(np.asarray(z, np.float32),
+                                   np.asarray(z_ref, np.float32))
+        # the same name also resolves through the context path
+        with engine.use_backend("dummy-xla"):
+            engine.linear(x, w, policy=prec.FP32)
+    finally:
+        engine.unregister_backend("dummy-xla")
+    assert calls == [("matmul", 8, 16, 8), ("linear", 8, 16, 8)]
+    assert "dummy-xla" not in engine.registered_backends()
+
+
+def test_unavailable_backend_rejected_when_implicit():
+    engine.register_backend("never", lambda x, w, *, spec: x,
+                            available=False)
+    try:
+        with engine.use_backend("never"):
+            with pytest.raises(ValueError, match="not available"):
+                engine.matmul(_rand((4, 4)), _rand((4, 4)))
+        # explicit selection is the escape hatch (caller takes the risk) —
+        # both per-call and pinned on an Engine instance
+        z = engine.matmul(_rand((2, 2)), _rand((2, 2)), backend="never")
+        assert z.shape == (2, 2)
+        pinned = engine.Engine(backend="never")
+        assert pinned.matmul(_rand((2, 2)), _rand((2, 2))).shape == (2, 2)
+    finally:
+        engine.unregister_backend("never")
+
+
+# ------------------------------------------------------------------ #
+# grouped_matmul vs the per-expert loop oracle
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("policy", [prec.PAPER_FP16, prec.TPU_BF16],
+                         ids=lambda p: p.name)
+def test_grouped_matmul_matches_per_expert_loop(policy):
+    G, M, N, K = 4, 16, 48, 24
+    x = _rand((G, M, N), policy.compute_dtype)
+    w = _rand((G, N, K), policy.compute_dtype)
+    z = engine.grouped_matmul(x, w, policy=policy, backend="interpret")
+    z_loop = jnp.stack([
+        engine.matmul(x[g], w[g], policy=policy, backend="interpret")
+        for g in range(G)
+    ])
+    assert z.dtype == policy.out_dtype
+    np.testing.assert_allclose(np.asarray(z, np.float32),
+                               np.asarray(z_loop, np.float32),
+                               rtol=2e-3, atol=2e-2)
+
+
+@pytest.mark.parametrize("policy", [prec.PAPER_FP16, prec.TPU_BF16],
+                         ids=lambda p: p.name)
+def test_grouped_matmul_ragged_matches_loop(policy):
+    G, M, N, K = 3, 8, 32, 16
+    sizes = jnp.asarray([5, 0, 8])
+    x = _rand((G, M, N), policy.compute_dtype)
+    w = _rand((G, N, K), policy.compute_dtype)
+    z = engine.grouped_matmul(x, w, group_sizes=sizes, policy=policy,
+                              backend="xla")
+    zf = np.asarray(z, np.float32)
+    for g in range(G):
+        s = int(sizes[g])
+        ref = engine.matmul(x[g, :s], w[g], policy=policy, backend="xla")
+        np.testing.assert_allclose(zf[g, :s], np.asarray(ref, np.float32),
+                                   rtol=2e-3, atol=2e-2)
+        assert np.all(zf[g, s:] == 0.0)  # rows beyond the group size
+
+
+def test_grouped_matmul_with_leading_batch():
+    B, G, M, N, K = 2, 3, 4, 8, 5
+    x = _rand((B, G, M, N))
+    w = _rand((G, N, K))
+    z = engine.grouped_matmul(x, w, policy=prec.FP32)
+    ref = jnp.einsum("bgmn,gnk->bgmk", x, w)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# linear: fused epilogue
+# ------------------------------------------------------------------ #
+def test_linear_fused_bias_activation():
+    x, w = _rand((8, 16)), _rand((16, 8))
+    b = _rand((8,))
+    z = engine.linear(x, w, b, activation="relu", policy=prec.FP32)
+    ref = jax.nn.relu(jnp.dot(x, w) + b)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="epilogue"):
+        engine.linear(x, w, activation="not-an-act")
+
+
+# ------------------------------------------------------------------ #
+# einsum2d
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("eq,xs,ws", [
+    ("mn,nk->mk", (6, 5), (5, 4)),
+    ("bij,bjk->bik", (2, 6, 5), (2, 5, 4)),
+    ("ms,ns->mn", (6, 5), (4, 5)),          # transposed weight
+    ("bhsd,rhd->bhsr", (2, 3, 5, 7), (4, 3, 7)),   # MLA absorbed q
+    ("bhsr,btr->bhst", (2, 3, 5, 7), (2, 6, 7)),   # MLA absorbed scores
+    ("bhik,bhjk->bhij", (2, 3, 5, 7), (2, 3, 6, 7)),  # SSM intra-chunk
+    ("abc,cd->abd", (2, 3, 4), (4, 5)),
+], ids=lambda v: v if isinstance(v, str) else str(v))
+def test_einsum2d_matches_jnp_einsum(eq, xs, ws):
+    x, w = _rand(xs), _rand(ws)
+    z = engine.einsum2d(eq, x, w, policy=prec.FP32)
+    ref = jnp.einsum(eq, x, w)
+    assert z.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_einsum2d_rejects_bad_equations():
+    x, w = _rand((4, 4)), _rand((4, 4))
+    for eq in ("mn,nk", "mn,nk,kl->ml", "mm,mk->mk", "mn,nk->mq"):
+        with pytest.raises(ValueError):
+            engine.einsum2d(eq, x, w)
+
+
+# ------------------------------------------------------------------ #
+# Instrumentation
+# ------------------------------------------------------------------ #
+def test_instrument_transformer_forward_matches_perf_model():
+    """Acceptance: summed GemmEvent flops over one transformer forward ==
+    the machine model's analytic enumeration, within 1%."""
+    from repro.models import transformer
+
+    cfg = configs.get_reduced("yi-9b")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 64
+    batch = {"inputs": jnp.zeros((B, S), jnp.int32)}
+    with engine.instrument() as events:
+        jax.eval_shape(lambda p, b: transformer.forward(p, cfg, b)[0],
+                       params, batch)
+    assert events, "no GemmEvents collected"
+    got = engine.total_flops(events)
+    want = perf_model.workload_flops(perf_model.dense_forward_gemms(cfg, B, S))
+    assert want > 0
+    assert abs(got - want) / want < 0.01, (got, want)
+    # scanned layers carry the layer-count multiplier, not n_layers copies
+    assert all(ev.count in (1, cfg.n_layers) for ev in events)
+    # and the event stream drives the machine model directly
+    hw, sw = perf_model.workload_cycles_from_events(
+        perf_model.DEFAULT_MODEL, events)
+    assert hw > 0 and sw > hw
+
+
+def test_instrument_collects_thread_locally():
+    other = {}
+
+    def child():
+        with engine.instrument() as ev:
+            engine.matmul(_rand((4, 4)), _rand((4, 4)), policy=prec.FP32)
+        other["n"] = len(ev)
+
+    with engine.instrument() as events:
+        t = threading.Thread(target=child)
+        t.start()
+        t.join()
+    assert events == []          # the child's dispatch stayed in its thread
+    assert other["n"] == 1
+
+
+def test_nested_empty_collectors_unwind_by_identity():
+    # two equal (empty) lists: exiting the inner context must not remove
+    # the outer collector from the stack
+    with engine.instrument() as outer:
+        with engine.instrument() as inner:
+            pass
+        engine.matmul(_rand((4, 4)), _rand((4, 4)), policy=prec.FP32)
+    assert len(outer) == 1 and inner == []
+
+
+def test_paused_suppresses_emission():
+    with engine.instrument() as events:
+        with engine.paused():
+            engine.matmul(_rand((4, 4)), _rand((4, 4)), policy=prec.FP32)
+        engine.matmul(_rand((4, 4)), _rand((4, 4)), policy=prec.FP32)
+    assert len(events) == 1
+
+
+def test_weight_gemm_bytes_not_scaled_by_batch():
+    B, S, d, k = 8, 16, 32, 64
+    with engine.instrument() as events:
+        # weight GEMM: (B, S, d) @ (d, k) — w is read once, not B times
+        engine.matmul(_rand((B, S, d)), _rand((d, k)), policy=prec.FP32)
+    (ev,) = events
+    itm = 4  # fp32
+    want = B * (S * d + S * k) * itm + d * k * itm
+    assert ev.bytes == want
+
+
+def test_repeat_multiplies_counts():
+    with engine.instrument() as events:
+        with engine.repeat(3), engine.repeat(4):
+            engine.matmul(_rand((4, 4)), _rand((4, 4)), policy=prec.FP32)
+    (ev,) = events
+    assert ev.count == 12
+    assert ev.total_flops == 12 * ev.flops
+
+
+def test_summarize_shape():
+    with engine.instrument() as events:
+        engine.matmul(_rand((4, 4)), _rand((4, 4)), policy=prec.FP32)
+        engine.linear(_rand((4, 4)), _rand((4, 4)), policy=prec.FP32)
+    s = engine.summarize(events)
+    assert set(s) == {"matmul", "linear", "total"}
+    assert s["total"]["flops"] == engine.total_flops(events)
+
+
+# ------------------------------------------------------------------ #
+# Deprecation shims
+# ------------------------------------------------------------------ #
+def test_redmule_shim_warns_and_matches():
+    from repro.core import redmule
+
+    redmule._warned.clear()
+    x, w = _rand((8, 16)), _rand((16, 8))
+    with pytest.warns(DeprecationWarning):
+        z = redmule.matmul(x, w, policy=prec.FP32)
+    np.testing.assert_allclose(
+        np.asarray(z), np.asarray(engine.matmul(x, w, policy=prec.FP32)))
+    with pytest.warns(DeprecationWarning):
+        zl = redmule.linear(x, w, _rand((8,)), policy=prec.FP32)
+    assert zl.shape == (8, 8)
+
+
+def test_old_core_import_path_still_works():
+    from repro.core import linear, matmul  # the documented one-release path
+
+    z = matmul(_rand((4, 8)), _rand((8, 4)), policy=prec.FP32)
+    zl = linear(_rand((4, 8)), _rand((8, 4)), policy=prec.FP32)
+    assert z.shape == (4, 4) and zl.shape == (4, 4)

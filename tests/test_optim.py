@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.optim import (AdamW, SGD, Compressor, adjust, clip_by_global_norm,
                          global_norm, init_scale, scale_loss,
@@ -169,16 +168,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import configs
 from repro.launch.train import build_compressed_dp_train_step
 from repro.optim import AdamW, Compressor
+from repro.runtime import compat
 
 cfg = configs.get_reduced("qwen3-1.7b")
-mesh = jax.make_mesh((4, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((4, 1), ("data", "model"))
 opt = AdamW(lr=1e-3)
 toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)
 batch = {"inputs": toks, "labels": toks}
 
 results = {}
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     for kind in ("none", "fp16"):
         comp = Compressor(kind)
         step, init_fn = build_compressed_dp_train_step(cfg, opt, mesh, comp)

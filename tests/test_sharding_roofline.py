@@ -7,18 +7,16 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.roofline import analysis as A
-from repro.runtime import sharding
+from repro.runtime import compat, sharding
 
 
 def _mesh(shape=(1, 1), axes=("data", "model")):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def _abstract_mesh(shape=(2, 2), axes=("data", "model")):
     """Shape-only mesh stand-in (tests run on 1 CPU device)."""
-    return jax.sharding.AbstractMesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.abstract_mesh(shape, axes)
 
 
 # ------------------------------------------------------------------ #
@@ -72,7 +70,7 @@ def test_constrain_inside_jit_applies():
         with sharding.use_rules(rules):
             return sharding.constrain(x * 1.0, "batch", "ff")
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         txt = jax.jit(f).lower(jax.ShapeDtypeStruct((4, 4), jnp.float32)).as_text()
     assert "sharding" in txt.lower()
 
@@ -88,7 +86,7 @@ def test_constrain_fb_grad_path():
             y = sharding.constrain_fb(v * 2.0, ("batch",), (None,))
             return jnp.sum(y ** 2)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         g = jax.jit(jax.grad(f))(x)
     np.testing.assert_allclose(np.asarray(g), np.asarray(8.0 * x))
 
@@ -164,11 +162,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.roofline import analysis as A
-mesh = jax.make_mesh((1, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.runtime import compat
+mesh = compat.make_mesh((1, 2), ("data", "model"))
 def f(x, w):
     return jnp.sum((x @ w).astype(jnp.float32))
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     c = jax.jit(f,
         in_shardings=(NamedSharding(mesh, P(None, None)),
                       NamedSharding(mesh, P(None, "model"))),
@@ -196,7 +194,7 @@ def test_structural_costs_count_dot_flops():
     def f(x, w):
         return x @ w
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         c = jax.jit(f).lower(
             jax.ShapeDtypeStruct((M, N), jnp.float32),
             jax.ShapeDtypeStruct((N, K), jnp.float32)).compile()
@@ -217,7 +215,7 @@ def test_structural_costs_scan_trip_multiplier():
         h, _ = jax.lax.scan(body, x, ws)
         return h
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         c = jax.jit(f).lower(
             jax.ShapeDtypeStruct((L, D, D), jnp.float32),
             jax.ShapeDtypeStruct((D, D), jnp.float32)).compile()

@@ -1,31 +1,42 @@
 """Tile-selection invariants (hypothesis property tests)."""
 
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal install (requirements-dev.txt)
+    st = None
 
 from repro.core import tiling
 
 
-@settings(max_examples=60, deadline=None)
-@given(
-    m=st.integers(1, 100_000),
-    n=st.integers(1, 100_000),
-    k=st.integers(1, 300_000),
-    dtype=st.sampled_from([jnp.bfloat16, jnp.float16, jnp.float32]),
-)
-def test_choose_tiles_invariants(m, n, k, dtype):
-    t = tiling.choose_tiles(m, n, k, compute_dtype=dtype)
-    # MXU alignment
-    assert t.bk % tiling.MXU_LANE == 0
-    assert t.bn % tiling.MXU_LANE == 0
-    assert t.bm % tiling.sublane(dtype) == 0
-    # VMEM budget respected
-    assert tiling.vmem_bytes(t, dtype, jnp.float32) <= tiling.DEFAULT_VMEM_BUDGET
-    # grid covers the problem
-    gm, gk, gn = t.grid(m, n, k)
-    assert gm * t.bm >= m and gk * t.bk >= k and gn * t.bn >= n
-    # no grossly-oversized tiles (max one padding tile per dim)
-    assert (gm - 1) * t.bm < m and (gk - 1) * t.bk < k and (gn - 1) * t.bn < n
+if st is None:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_choose_tiles_invariants():
+        pass
+else:
+    @settings(max_examples=60, deadline=None)
+    @given(
+        m=st.integers(1, 100_000),
+        n=st.integers(1, 100_000),
+        k=st.integers(1, 300_000),
+        dtype=st.sampled_from([jnp.bfloat16, jnp.float16, jnp.float32]),
+    )
+    def test_choose_tiles_invariants(m, n, k, dtype):
+        t = tiling.choose_tiles(m, n, k, compute_dtype=dtype)
+        # MXU alignment
+        assert t.bk % tiling.MXU_LANE == 0
+        assert t.bn % tiling.MXU_LANE == 0
+        assert t.bm % tiling.sublane(dtype) == 0
+        # VMEM budget respected
+        assert tiling.vmem_bytes(t, dtype, jnp.float32) \
+            <= tiling.DEFAULT_VMEM_BUDGET
+        # grid covers the problem
+        gm, gk, gn = t.grid(m, n, k)
+        assert gm * t.bm >= m and gk * t.bk >= k and gn * t.bn >= n
+        # no grossly-oversized tiles (max one padding tile per dim)
+        assert (gm - 1) * t.bm < m and (gk - 1) * t.bk < k \
+            and (gn - 1) * t.bn < n
 
 
 def test_large_gemm_gets_fat_tiles():
