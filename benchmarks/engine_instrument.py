@@ -15,17 +15,44 @@ The point: the perf model consumes what actually ran, not a re-derivation.
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row
+from benchmarks.common import Row, time_us
 from repro import configs
-from repro.core import engine
+from repro.core import autotune, engine
 from repro.core import perf_model
 from repro.core import precision as prec
 from repro.data import SyntheticAE
 from repro.models import autoencoder, transformer
 
 
+def _linear_hotpath_row() -> Row:
+    """Autotuned fused-linear hot path: tune the tile for one affine-layer
+    shape (wall-clock on TPU, roofline cost model on CPU), then time
+    ``engine.linear`` with the tuned tile on the default backend.  The
+    chosen TileConfig rides in the derived column (and, via the resolved
+    ``GemmSpec.tile``, on the GemmEvents run.py records)."""
+    pol = prec.TPU_BF16
+    M, N, K = 512, 2048, 512
+    res = autotune.autotune_gemm(M, N, K, policy=pol, epilogue="gelu",
+                                 with_bias=True)
+    key = jax.random.PRNGKey(0)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (M, N), pol.compute_dtype)
+    w = jax.random.normal(kw, (N, K), pol.compute_dtype)
+    b = jax.random.normal(kb, (K,), jnp.float32)
+
+    fn = jax.jit(lambda xx, ww, bb: engine.linear(
+        xx, ww, bb, activation="gelu", policy=pol, tile=res.tile))
+    us = time_us(fn, x, w, b)
+    t = res.tile
+    return (
+        f"engine/linear_fused_{M}x{N}x{K}", us,
+        f"tile={t.bm}x{t.bn}x{t.bk} tuned={res.source} "
+        f"tuned_us={res.us:.1f} candidates={res.n_candidates} "
+        f"backend={engine.default_backend()}")
+
+
 def run() -> list[Row]:
-    rows: list[Row] = []
+    rows: list[Row] = [_linear_hotpath_row()]
     m = perf_model.DEFAULT_MODEL
 
     # --- AE forward: recorded events vs the paper's analytic enumeration ---

@@ -1,23 +1,94 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Measured numbers are the host's
-software-counterpart timings; derived numbers come from the calibrated
-RedMulE machine model (Table I / Figs 3-4) and from the dry-run roofline
-artifacts (beyond-paper §Roofline).
+Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
+``BENCH_engine.json`` next to it: one record per CSV row, annotated with
+the Engine instrumentation observed while the module ran (GEMM flops and
+the resolved TileConfigs), so the perf trajectory of the hot path is
+diffable across commits.  Measured numbers are the host's software-
+counterpart timings; derived numbers come from the calibrated RedMulE
+machine model (Table I / Figs 3-4) and from the dry-run roofline artifacts
+(beyond-paper §Roofline).
+
+CLI:
+
+    python -m benchmarks.run                  # everything
+    python -m benchmarks.run --only engine    # modules whose name contains
+                                              # "engine" (repeatable; CI's
+                                              # cheap subset)
+    python -m benchmarks.run --json out.json  # alternate JSON path ("" off)
 """
+
+import argparse
+import json
+from typing import List, Optional
 
 from benchmarks import (engine_instrument, fig3_energy_throughput,
                         fig4a_hw_vs_sw, fig4b_area_sweep, fig4cd_autoencoder,
                         roofline_report, table1_soa)
 from benchmarks.common import emit
+from repro.core import engine
+
+MODULES = [
+    ("table1_soa", table1_soa),
+    ("fig3_energy_throughput", fig3_energy_throughput),
+    ("fig4a_hw_vs_sw", fig4a_hw_vs_sw),
+    ("fig4b_area_sweep", fig4b_area_sweep),
+    ("fig4cd_autoencoder", fig4cd_autoencoder),
+    ("engine_instrument", engine_instrument),
+    ("roofline_report", roofline_report),
+]
+
+DEFAULT_JSON = "BENCH_engine.json"
 
 
-def main() -> None:
+def _select(only: Optional[List[str]]):
+    if not only:
+        return MODULES
+    chosen = [(n, m) for n, m in MODULES
+              if any(pat in n for pat in only)]
+    if not chosen:
+        names = ", ".join(n for n, _ in MODULES)
+        raise SystemExit(f"--only matched no benchmark module; known: {names}")
+    return chosen
+
+
+def run_benchmarks(only: Optional[List[str]] = None) -> List[dict]:
+    """Run the selected modules, print the CSV, return the JSON records."""
+    records: List[dict] = []
     print("name,us_per_call,derived")
-    for mod in (table1_soa, fig3_energy_throughput, fig4a_hw_vs_sw,
-                fig4b_area_sweep, fig4cd_autoencoder, engine_instrument,
-                roofline_report):
-        emit(mod.run())
+    for mod_name, mod in _select(only):
+        with engine.instrument() as events:
+            rows = mod.run()
+        emit(rows)
+        flops = engine.total_flops(events)
+        tiles = sorted({(ev.spec.tile.bm, ev.spec.tile.bn, ev.spec.tile.bk)
+                        for ev in events if ev.spec.tile is not None})
+        for name, us, derived in rows:
+            records.append({
+                "name": name,
+                "us_per_call": round(float(us), 3),
+                "derived": derived,
+                "module": mod_name,
+                "engine_flops": int(flops),
+                "tiles": [list(t) for t in tiles],
+            })
+    return records
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--only", action="append", metavar="NAME",
+        help="run only modules whose name contains NAME (repeatable)")
+    ap.add_argument(
+        "--json", default=DEFAULT_JSON, metavar="PATH",
+        help=f"machine-readable output path (default {DEFAULT_JSON}; "
+             "'' disables)")
+    args = ap.parse_args(argv)
+    records = run_benchmarks(args.only)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"benchmarks": records}, fh, indent=2)
 
 
 if __name__ == "__main__":

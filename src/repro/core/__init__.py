@@ -2,15 +2,22 @@
 
 * :mod:`repro.core.engine`    -- the first-class GEMM Engine: op family
   (matmul / linear / grouped_matmul / einsum2d), pluggable backend
-  registry, per-dispatch GemmEvent instrumentation.
+  registry with capability flags, per-dispatch GemmEvent instrumentation.
 * :mod:`repro.core.tiling`    -- VMEM/MXU tile selection (H/L/P analogue).
+* :mod:`repro.core.autotune`  -- measured per-spec tile autotuning with a
+  persistent cache (the Fig. 4b sweep, run against the real memory system).
+* :mod:`repro.core.epilogues` -- the fusable activation registry shared by
+  the Engine and the Pallas kernels.
 * :mod:`repro.core.precision` -- FP16/BF16/FP32 precision policies.
 * :mod:`repro.core.perf_model` -- calibrated machine model of the silicon.
-* :mod:`repro.core.redmule`   -- deprecated free-function shims (one
-  release); new code uses the Engine surface.
+
+GEMM entry points live on the Engine surface: import them from
+:mod:`repro.core.engine` (``engine.matmul`` / ``engine.linear`` / ...).
+The PR-1 deprecation window is over — ``repro.core.redmule`` and the
+``repro.core.matmul`` / ``repro.core.linear`` re-exports are gone.
 """
 
-from repro.core import engine, perf_model, precision, redmule, tiling
+from repro.core import autotune, engine, epilogues, perf_model, precision, tiling
 from repro.core.engine import (
     Engine,
     GemmEvent,
@@ -18,8 +25,6 @@ from repro.core.engine import (
     einsum2d,
     grouped_matmul,
     instrument,
-    linear,
-    matmul,
     register_backend,
     registered_backends,
     set_default_backend,
@@ -29,10 +34,10 @@ from repro.core.precision import FP32, PAPER_FP16, TPU_BF16, TPU_FP16, Policy
 from repro.core.tiling import TileConfig, choose_tiles
 
 __all__ = [
-    "engine", "perf_model", "precision", "redmule", "tiling",
+    "autotune", "engine", "epilogues", "perf_model", "precision", "tiling",
     "Engine", "GemmSpec", "GemmEvent",
     "Policy", "PAPER_FP16", "TPU_FP16", "TPU_BF16", "FP32",
-    "matmul", "linear", "grouped_matmul", "einsum2d",
+    "grouped_matmul", "einsum2d",
     "register_backend", "registered_backends", "instrument",
     "set_default_backend", "use_backend",
     "TileConfig", "choose_tiles",

@@ -1,0 +1,443 @@
+"""Per-spec GEMM autotuning — measured tile selection for the Engine hot path.
+
+RedMulE sizes its (H, L, P) buffer geometry against the memory system once,
+at design time, by sweeping the area/port trade-off (paper Fig. 4b) and
+ships the point that keeps the array 98.8% utilized.  A TPU program faces
+the same trade at trace time: the :class:`~repro.core.tiling.TileConfig`
+fixes the VMEM working set and the DMA-per-FLOP ratio, and the static
+``choose_tiles`` heuristic never *measures* anything.  This module closes
+that loop:
+
+* :func:`candidate_tiles` enumerates MXU-aligned tile configs under the
+  VMEM budget (the heuristic's pick is always among them);
+* :func:`autotune_gemm` scores each candidate — wall-clock on a real TPU,
+  or the deterministic :func:`predicted_cost_us` roofline cost model on CPU
+  (where timing the Pallas *interpreter* would measure Python, not the
+  schedule) — and records the winner;
+* results are keyed on a canonicalized GEMM spec (:func:`canonical_key`:
+  shape buckets, dtypes, epilogue, backend) and persisted through a
+  two-level cache — an in-process LRU in front of a JSON file named by the
+  ``REPRO_AUTOTUNE_CACHE`` env var — so one tuning run serves every later
+  process.
+
+Engine tile resolution consults this module on every dispatch:
+explicit ``tile=`` arg > :func:`cached_tile` > the ``choose_tiles``
+heuristic.  Lookups are cheap (dict hit); *tuning* only happens when
+:func:`autotune_gemm` is called explicitly (benchmarks, CI smoke, a user
+warming a cache for a deployment).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision as prec
+from repro.core import tiling
+
+__all__ = [
+    "ENV_VAR",
+    "AutotuneKey",
+    "AutotuneResult",
+    "canonical_key",
+    "candidate_tiles",
+    "predicted_cost_us",
+    "measured_cost_us",
+    "autotune_gemm",
+    "cached_tile",
+    "record_tile",
+    "clear_cache",
+    "cache_stats",
+]
+
+ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+
+# roofline constants for the cost model (TPU v5e, same as roofline/analysis)
+_PEAK_FLOPS = 197e12
+_HBM_BW = 819e9
+# fixed cost per grid step (DMA issue + pipeline bubble), calibrated loosely;
+# it only needs to penalize absurdly fine grids, not predict absolute time
+_STEP_OVERHEAD_S = 1.5e-6
+
+_LRU_CAPACITY = 512
+
+
+# --------------------------------------------------------------------- #
+# Canonical keys
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AutotuneKey:
+    """A canonicalized GEMM spec — the unit of autotune reuse.
+
+    Shapes are bucketed (:func:`bucket_dim`) so e.g. every decode step of a
+    ragged batch hits one entry; dtypes, epilogue and backend are part of
+    the key because they change the working set, the store path and the
+    kernel being timed."""
+
+    m: int
+    n: int
+    k: int
+    compute: str
+    accum: str
+    out: str
+    epilogue: str      # "" when the GEMM has no fused epilogue
+    backend: str
+
+    def to_str(self) -> str:
+        ep = self.epilogue or "none"
+        return (f"m{self.m}-n{self.n}-k{self.k}-{self.compute}-{self.accum}"
+                f"-{self.out}-{ep}-{self.backend}")
+
+
+def bucket_dim(v: int) -> int:
+    """Round a problem dim up to its bucket: the next power of two below
+    512, then the next multiple of 512 (the tile caps in ``choose_tiles``
+    make finer distinctions irrelevant above that)."""
+    v = max(int(v), 1)
+    if v >= 512:
+        return -(-v // 512) * 512
+    b = 1
+    while b < v:
+        b *= 2
+    return b
+
+
+def canonical_key(
+    m: int, n: int, k: int, *,
+    policy: prec.Policy,
+    backend: str,
+    epilogue: Optional[str] = None,
+) -> AutotuneKey:
+    return AutotuneKey(
+        m=bucket_dim(m), n=bucket_dim(n), k=bucket_dim(k),
+        compute=jnp.dtype(policy.compute_dtype).name,
+        accum=jnp.dtype(policy.accum_dtype).name,
+        out=jnp.dtype(policy.out_dtype).name,
+        epilogue=epilogue or "",
+        backend=backend,
+    )
+
+
+# --------------------------------------------------------------------- #
+# Two-level cache: in-process LRU over a JSON file (REPRO_AUTOTUNE_CACHE)
+# --------------------------------------------------------------------- #
+_lock = threading.Lock()
+_lru: "collections.OrderedDict[str, tiling.TileConfig]" = collections.OrderedDict()
+_disk_path: Optional[str] = None
+_disk_mtime: Optional[float] = None
+_hits = 0
+_misses = 0
+
+
+def _cache_path() -> Optional[str]:
+    return os.environ.get(ENV_VAR) or None
+
+
+def _load_disk_locked(path: str) -> None:
+    """(Re)load the JSON cache into the LRU when the file is new or changed."""
+    global _disk_path, _disk_mtime
+    try:
+        mtime = os.stat(path).st_mtime
+    except OSError:
+        _disk_path, _disk_mtime = path, None
+        return
+    if path == _disk_path and mtime == _disk_mtime:
+        return
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except (OSError, ValueError):
+        _disk_path, _disk_mtime = path, None
+        return
+    for key_str, entry in data.items():
+        try:
+            t = tiling.TileConfig(bm=int(entry["bm"]), bn=int(entry["bn"]),
+                                  bk=int(entry["bk"]))
+        except (KeyError, TypeError, ValueError):
+            continue
+        _lru[key_str] = t
+        _lru.move_to_end(key_str)
+    while len(_lru) > _LRU_CAPACITY:
+        _lru.popitem(last=False)
+    _disk_path, _disk_mtime = path, mtime
+
+
+def _write_disk_locked(path: str, key: AutotuneKey, tile: tiling.TileConfig,
+                       *, source: str, us: Optional[float]) -> None:
+    """Read-modify-write the JSON file atomically (tempfile + rename)."""
+    global _disk_path, _disk_mtime
+    data: Dict[str, dict] = {}
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except (OSError, ValueError):
+        pass
+    entry = {"bm": tile.bm, "bn": tile.bn, "bk": tile.bk, "source": source}
+    if us is not None:
+        entry["us"] = round(float(us), 3)
+    data[key.to_str()] = entry
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(data, fh, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    _disk_path, _disk_mtime = path, os.stat(path).st_mtime
+
+
+def cached_tile(
+    m: int, n: int, k: int, *,
+    policy: prec.Policy,
+    backend: str,
+    epilogue: Optional[str] = None,
+) -> Optional[tiling.TileConfig]:
+    """Cache-only lookup (LRU, then the JSON file).  Never tunes."""
+    global _hits, _misses
+    key = canonical_key(m, n, k, policy=policy, backend=backend,
+                        epilogue=epilogue).to_str()
+    with _lock:
+        t = _lru.get(key)
+        if t is None:
+            path = _cache_path()
+            if path:
+                _load_disk_locked(path)
+                t = _lru.get(key)
+        if t is not None:
+            _lru.move_to_end(key)
+            _hits += 1
+            return t
+        _misses += 1
+        return None
+
+
+def record_tile(
+    key: AutotuneKey, tile: tiling.TileConfig, *,
+    source: str = "manual",
+    us: Optional[float] = None,
+) -> None:
+    """Store a tile under ``key`` — LRU write-through to the JSON file."""
+    with _lock:
+        _lru[key.to_str()] = tile
+        _lru.move_to_end(key.to_str())
+        while len(_lru) > _LRU_CAPACITY:
+            _lru.popitem(last=False)
+        path = _cache_path()
+        if path:
+            _write_disk_locked(path, key, tile, source=source, us=us)
+
+
+def clear_cache(*, memory_only: bool = True) -> None:
+    """Drop the in-process LRU (tests; the JSON file is left alone unless
+    ``memory_only=False``)."""
+    global _disk_path, _disk_mtime, _hits, _misses
+    with _lock:
+        _lru.clear()
+        _disk_path = _disk_mtime = None
+        _hits = _misses = 0
+        if not memory_only:
+            path = _cache_path()
+            if path and os.path.exists(path):
+                os.unlink(path)
+
+
+def cache_stats() -> Dict[str, int]:
+    with _lock:
+        return {"entries": len(_lru), "hits": _hits, "misses": _misses}
+
+
+# --------------------------------------------------------------------- #
+# Candidate generation
+# --------------------------------------------------------------------- #
+_round_up = tiling._round_up
+
+
+def candidate_tiles(
+    m: int, n: int, k: int, *,
+    policy: prec.Policy,
+    vmem_budget: int = tiling.DEFAULT_VMEM_BUDGET,
+    max_candidates: int = 16,
+) -> List[tiling.TileConfig]:
+    """MXU-aligned tile candidates that fit the VMEM budget.
+
+    Never tiles beyond the aligned problem (at most one padding tile per
+    dim), always includes the ``choose_tiles`` heuristic pick, and returns
+    at most ``max_candidates`` ordered by the cost model (cheapest first)
+    so a truncated sweep still looks at the most promising configs."""
+    sl = tiling.sublane(policy.compute_dtype)
+    m_cap = _round_up(max(int(m), 1), sl)
+    n_cap = _round_up(max(int(n), 1), tiling.MXU_LANE)
+    k_cap = _round_up(max(int(k), 1), tiling.MXU_LANE)
+
+    bms = sorted({min(_round_up(c, sl), m_cap)
+                  for c in (sl, 64, 128, 256, 512)})
+    bns = sorted({min(c, n_cap) for c in (128, 256, 512, 1024, 2048)})
+    bks = sorted({min(c, k_cap) for c in (128, 256, 512, 1024)})
+
+    seen = set()
+    out: List[tiling.TileConfig] = []
+
+    def _add(t: tiling.TileConfig) -> None:
+        key = (t.bm, t.bn, t.bk)
+        if key in seen:
+            return
+        if tiling.vmem_bytes(t, policy.compute_dtype,
+                             policy.accum_dtype) > vmem_budget:
+            return
+        seen.add(key)
+        out.append(t)
+
+    _add(tiling.choose_tiles(m, n, k, compute_dtype=policy.compute_dtype,
+                             accum_dtype=policy.accum_dtype,
+                             vmem_budget=vmem_budget))
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                _add(tiling.TileConfig(bm=bm, bn=bn, bk=bk))
+    out.sort(key=lambda t: predicted_cost_us(m, n, k, t, policy=policy))
+    return out[:max_candidates]
+
+
+# --------------------------------------------------------------------- #
+# Scoring: analytic cost model (CPU) and wall clock (TPU)
+# --------------------------------------------------------------------- #
+def predicted_cost_us(
+    m: int, n: int, k: int,
+    tile: tiling.TileConfig, *,
+    policy: prec.Policy,
+) -> float:
+    """Deterministic roofline cost model of one kernel launch, in µs.
+
+    Models the kernel's actual schedule on the *padded* problem (so tiles
+    that over-pad a ragged shape pay for their wasted MACs): every grid
+    step streams one X and one W tile from HBM, the Z tile is written once
+    per (i, j), and each step carries a fixed issue overhead.  This is the
+    CPU fallback — on CPU the Pallas interpreter's wall clock measures
+    Python, not the schedule, exactly like timing RedMulE's RTL simulator
+    would measure the simulator."""
+    mp = _round_up(max(int(m), 1), tile.bm)
+    np_ = _round_up(max(int(n), 1), tile.bn)
+    kp = _round_up(max(int(k), 1), tile.bk)
+    gm, gn, gk = mp // tile.bm, np_ // tile.bn, kp // tile.bk
+    steps = gm * gk * gn
+    cb = jnp.dtype(policy.compute_dtype).itemsize
+    ob = jnp.dtype(policy.out_dtype).itemsize
+    hbm_bytes = (steps * (tile.bm * tile.bn + tile.bn * tile.bk) * cb
+                 + gm * gk * tile.bm * tile.bk * ob)
+    flops = 2.0 * mp * np_ * kp
+    t = max(hbm_bytes / _HBM_BW, flops / _PEAK_FLOPS) + steps * _STEP_OVERHEAD_S
+    return t * 1e6
+
+
+def measured_cost_us(
+    m: int, n: int, k: int,
+    tile: tiling.TileConfig, *,
+    policy: prec.Policy,
+    epilogue: Optional[str] = None,
+    with_bias: bool = False,
+    warmup: int = 1,
+    iters: int = 3,
+    interpret: Optional[bool] = None,
+) -> float:
+    """Wall-clock one compiled kernel launch (µs).  Only meaningful on a
+    real accelerator backend — see :func:`predicted_cost_us` for CPU
+    (``interpret`` defaults to True off-TPU so the call still *runs*, but
+    then it times the Pallas interpreter, not the schedule)."""
+    from repro.kernels import ops  # local import: kernels depend on core
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    key = jax.random.PRNGKey(0)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (m, n), policy.compute_dtype)
+    w = jax.random.normal(kw, (n, k), policy.compute_dtype)
+    bias = (jax.random.normal(kb, (k,), policy.accum_dtype)
+            if with_bias else None)
+
+    def run():
+        return ops.redmule_matmul(x, w, policy=policy, tile=tile,
+                                  bias=bias, epilogue=epilogue,
+                                  interpret=interpret)
+
+    for _ in range(warmup):
+        jax.block_until_ready(run())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(run())
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# --------------------------------------------------------------------- #
+# The tuner
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AutotuneResult:
+    key: AutotuneKey
+    tile: tiling.TileConfig
+    us: float            # winning score (wall-clock µs or model µs)
+    source: str          # "measured" | "model"
+    n_candidates: int
+    scores: Tuple[Tuple[Tuple[int, int, int], float], ...] = ()
+
+
+def autotune_gemm(
+    m: int, n: int, k: int, *,
+    policy=None,
+    backend: str = "pallas",
+    epilogue: Optional[str] = None,
+    with_bias: bool = False,
+    vmem_budget: int = tiling.DEFAULT_VMEM_BUDGET,
+    max_candidates: int = 16,
+    mode: Optional[str] = None,
+    record: bool = True,
+) -> AutotuneResult:
+    """Tune one GEMM shape and (by default) record the winner in the cache.
+
+    ``mode``: "measured" forces wall-clock timing, "model" forces the
+    analytic cost model; None picks "measured" exactly when the program is
+    actually running on a TPU (anything else would time the interpreter)."""
+    policy = prec.resolve(policy)
+    if mode is None:
+        mode = ("measured" if jax.default_backend() == "tpu"
+                and backend == "pallas" else "model")
+    if mode not in ("measured", "model"):
+        raise ValueError(f"unknown autotune mode {mode!r}")
+
+    cands = candidate_tiles(m, n, k, policy=policy, vmem_budget=vmem_budget,
+                            max_candidates=max_candidates)
+    scores: List[Tuple[Tuple[int, int, int], float]] = []
+    best: Optional[tiling.TileConfig] = None
+    best_us = float("inf")
+    for t in cands:
+        if mode == "measured":
+            us = measured_cost_us(m, n, k, t, policy=policy,
+                                  epilogue=epilogue, with_bias=with_bias)
+        else:
+            us = predicted_cost_us(m, n, k, t, policy=policy)
+        scores.append(((t.bm, t.bn, t.bk), us))
+        if us < best_us:
+            best, best_us = t, us
+    assert best is not None, "no tile candidates fit the VMEM budget"
+
+    key = canonical_key(m, n, k, policy=policy, backend=backend,
+                        epilogue=epilogue)
+    if record:
+        record_tile(key, best, source=mode, us=best_us)
+    return AutotuneResult(key=key, tile=best, us=best_us, source=mode,
+                          n_candidates=len(cands), scores=tuple(scores))

@@ -15,16 +15,26 @@ engine as an API:
 * a **backend registry** — :func:`register_backend` replaces the old
   hard-coded backend tuple; "pallas", "interpret" and "xla" are ordinary
   registered entries and third-party/GPU backends plug in at runtime without
-  editing this module.
+  editing this module.  Each entry carries a set of **capability flags**:
+  ``"fused_epilogue"`` means the backend applies bias+activation inside its
+  kernel's store step (one HBM write per affine layer — see
+  :meth:`Engine.linear`); ``"tiled"`` means it consumes ``spec.tile``.
 * **instrumentation** — every dispatch emits a :class:`GemmEvent` (flops,
-  bytes, tile, backend, policy) into the thread-local :func:`instrument`
-  collector; :mod:`repro.roofline.analysis` and :mod:`repro.core.perf_model`
-  consume these instead of re-deriving shapes by hand.
+  bytes, the *resolved* tile, backend, policy) into the thread-local
+  :func:`instrument` collector; :mod:`repro.roofline.analysis` and
+  :mod:`repro.core.perf_model` consume these instead of re-deriving shapes
+  by hand.
 
 Backend resolution precedence: explicit ``backend=`` argument >
 :func:`use_backend` context (thread-local) > ``REPRO_MATMUL_BACKEND`` env
 var (validated at read time) > platform default ("pallas" on TPU, "xla"
 elsewhere).
+
+Tile resolution precedence (per dispatch): explicit ``tile=`` argument >
+the :mod:`repro.core.autotune` cache (measured-or-modeled winners keyed on
+the canonicalized spec, persisted via ``REPRO_AUTOTUNE_CACHE``) > the
+:func:`repro.core.tiling.choose_tiles` heuristic (memoized).  The resolved
+tile rides on the emitted :class:`GemmEvent`.
 
 Events are emitted at *trace* time: under ``jax.jit`` a cached executable
 re-runs without re-tracing, so wrap the tracing call (``.lower()``,
@@ -46,6 +56,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import autotune
+from repro.core import epilogues as epi
 from repro.core import precision as prec
 from repro.core import tiling
 
@@ -59,6 +71,7 @@ __all__ = [
     "registered_backends",
     "get_backend",
     "backend_available",
+    "backend_supports",
     "default_backend",
     "set_default_backend",
     "use_backend",
@@ -93,7 +106,9 @@ class GemmSpec:
       batch: product of leading (vmapped/broadcast) dims.
       groups: expert-group count for grouped GEMMs (1 otherwise).
       policy: resolved precision policy.
-      tile: explicit tile config, or None for automatic selection.
+      tile: the resolved tile config (explicit arg > autotune cache >
+        ``choose_tiles`` heuristic; the Engine resolves it before emitting
+        the event, so instrumentation always sees the real block geometry).
       epilogue: fused epilogue activation name for ``linear`` (or None).
     """
 
@@ -196,16 +211,32 @@ class BackendSpec:
     with ``x: (..., M, N)`` and ``w: (N, K)`` or broadcast-compatible
     ``(..., N, K)``; it returns ``(..., M, K)`` in any float dtype (the
     engine downcasts to ``spec.policy.out_dtype``).
+
+    ``capabilities`` is a frozenset of opt-in flags:
+
+    * ``"fused_epilogue"`` — ``fn`` additionally accepts
+      ``fn(x, w, *, spec, bias=None, fuse_epilogue=False)``.  When the
+      engine passes ``fuse_epilogue=True`` the backend must apply
+      ``spec.epilogue`` (and ``bias``, an accum-dtype ``(K,)`` row when not
+      None) to the accumulator *before* its single output store; the
+      engine then skips its own post-op epilogue pass.
+    * ``"tiled"`` — ``fn`` honors ``spec.tile`` as its block geometry (the
+      engine resolves a tile for every dispatch regardless, for
+      instrumentation; untiled backends simply ignore it).
     """
 
     name: str
     fn: Callable[..., jax.Array]
     available: Union[bool, Callable[[], bool]] = True
     description: str = ""
+    capabilities: frozenset = frozenset()
 
     def is_available(self) -> bool:
         a = self.available
         return bool(a()) if callable(a) else bool(a)
+
+    def supports(self, capability: str) -> bool:
+        return capability in self.capabilities
 
 
 _REGISTRY: Dict[str, BackendSpec] = {}
@@ -217,16 +248,24 @@ def register_backend(
     *,
     available: Union[bool, Callable[[], bool]] = True,
     description: str = "",
+    capabilities=(),
 ) -> BackendSpec:
     """Register (or replace) a GEMM backend under ``name``.
 
     Third-party backends plug in here at runtime; no edits to core are
     needed for a new backend to be dispatchable by name through
-    :func:`matmul` and friends."""
+    :func:`matmul` and friends.  ``capabilities`` declares the optional
+    contracts the backend implements (see :class:`BackendSpec`); an empty
+    set gets the baseline pure-GEMM treatment (the engine applies
+    epilogues itself, post-op)."""
     if not name or not isinstance(name, str):
         raise ValueError(f"backend name must be a non-empty string, got {name!r}")
+    caps = frozenset(capabilities)
+    unknown = caps - {"fused_epilogue", "tiled"}
+    if unknown:
+        raise ValueError(f"unknown backend capabilities: {sorted(unknown)}")
     spec = BackendSpec(name=name, fn=fn, available=available,
-                       description=description)
+                       description=description, capabilities=caps)
     _REGISTRY[name] = spec
     return spec
 
@@ -250,6 +289,10 @@ def get_backend(name: str) -> BackendSpec:
 
 def backend_available(name: str) -> bool:
     return get_backend(name).is_available()
+
+
+def backend_supports(name: str, capability: str) -> bool:
+    return get_backend(name).supports(capability)
 
 
 # --------------------------------------------------------------------- #
@@ -404,17 +447,31 @@ def _xla_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec) -> jax.Array:
 
 
 def _pallas_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
-               interpret: bool = False) -> jax.Array:
-    """The Pallas RedMulE kernel (X-stationary, W-streamed, store-once Z)."""
+               interpret: bool = False, bias: Optional[jax.Array] = None,
+               fuse_epilogue: bool = False) -> jax.Array:
+    """The Pallas RedMulE kernel (X-stationary, W-streamed, store-once Z).
+
+    With ``fuse_epilogue=True`` the bias row and ``spec.epilogue`` are
+    folded into the kernel's store-once step (the "fused_epilogue"
+    capability contract)."""
     from repro.kernels import ops  # local import: kernels depend on core
 
     policy, tile = spec.policy, spec.tile
     if wc.ndim == 2:
         lead = xc.shape[:-2]
         x2 = xc.reshape((-1, xc.shape[-1])) if lead else xc
-        z2 = ops.redmule_matmul(x2, wc, policy=policy, tile=tile,
-                                interpret=interpret)
+        z2 = ops.redmule_matmul(
+            x2, wc, policy=policy, tile=tile,
+            bias=bias if fuse_epilogue else None,
+            epilogue=spec.epilogue if fuse_epilogue else None,
+            interpret=interpret)
         return z2.reshape((*lead, xc.shape[-2], wc.shape[-1]))
+    if fuse_epilogue:
+        # the batched-grid kernel carries no bias operand yet (linear is
+        # 2D-weight only); failing loudly beats silently dropping the
+        # epilogue the capability flag promises
+        raise NotImplementedError(
+            "fused epilogue is not implemented for batched (3D) weights")
     lead = np.broadcast_shapes(xc.shape[:-2], wc.shape[:-2])
     xb = jnp.broadcast_to(xc, (*lead, *xc.shape[-2:])).reshape(
         (-1, *xc.shape[-2:]))
@@ -425,34 +482,36 @@ def _pallas_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
     return z.reshape((*lead, xc.shape[-2], wc.shape[-1]))
 
 
-def _interpret_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec) -> jax.Array:
-    return _pallas_fn(xc, wc, spec=spec, interpret=True)
+def _interpret_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
+                  bias: Optional[jax.Array] = None,
+                  fuse_epilogue: bool = False) -> jax.Array:
+    return _pallas_fn(xc, wc, spec=spec, interpret=True, bias=bias,
+                      fuse_epilogue=fuse_epilogue)
 
 
 register_backend(
     "xla", _xla_fn,
     description="lax.dot_general with the engine's precision policy "
-                "(production fallback; XLA:CPU dry-runs)")
+                "(production fallback; XLA:CPU dry-runs; epilogues applied "
+                "post-op by the engine)")
 register_backend(
     "pallas", _pallas_fn,
     available=lambda: jax.default_backend() == "tpu",
+    capabilities=("fused_epilogue", "tiled"),
     description="TPU Pallas RedMulE kernel (X-stationary, W-streamed, "
-                "VMEM fp32 scratch, store-once Z)")
+                "VMEM fp32 scratch, store-once Z with the bias+activation "
+                "epilogue fused into the store)")
 register_backend(
     "interpret", _interpret_fn,
+    capabilities=("fused_epilogue", "tiled"),
     description="the same Pallas kernel body in interpreter mode "
-                "(CPU CI; bit-faithful to the kernel's schedule)")
+                "(CPU CI; bit-faithful to the kernel's schedule, fused "
+                "epilogue included)")
 
 
-# --------------------------------------------------------------------- #
-# Fused epilogues
-# --------------------------------------------------------------------- #
-_EPILOGUES: Dict[str, Callable[[jax.Array], jax.Array]] = {
-    "relu": jax.nn.relu,
-    "gelu": jax.nn.gelu,
-    "silu": jax.nn.silu,
-    "tanh": jnp.tanh,
-}
+# Fused epilogue registry — shared with the kernels (repro.core.epilogues)
+# so the in-kernel and post-op paths can never drift apart.
+_EPILOGUES: Dict[str, Callable[[jax.Array], jax.Array]] = epi.EPILOGUES
 
 
 # --------------------------------------------------------------------- #
@@ -491,6 +550,33 @@ class Engine:
 
     def resolve_policy(self, policy=None) -> prec.Policy:
         return prec.resolve(policy if policy is not None else self._policy)
+
+    def resolve_tile(
+        self,
+        tile: Optional[tiling.TileConfig],
+        *,
+        m: int,
+        n: int,
+        k: int,
+        policy: prec.Policy,
+        backend: str,
+        epilogue: Optional[str] = None,
+    ) -> tiling.TileConfig:
+        """Tile precedence: explicit arg > autotune cache > heuristic.
+
+        Runs for every dispatch (so the emitted :class:`GemmEvent` always
+        carries the tile the kernel would use); both fallbacks are cheap —
+        the autotune lookup is a dict hit and ``choose_tiles`` is memoized.
+        """
+        if tile is not None:
+            return tile
+        t = autotune.cached_tile(m, n, k, policy=policy, backend=backend,
+                                 epilogue=epilogue)
+        if t is not None:
+            return t
+        return tiling.choose_tiles(
+            m, n, k, compute_dtype=policy.compute_dtype,
+            accum_dtype=policy.accum_dtype)
 
     # -- dispatch core ------------------------------------------------- #
     def _execute_raw(self, spec: GemmSpec, backend: str, x: jax.Array,
@@ -535,9 +621,11 @@ class Engine:
         else:
             lead = np.broadcast_shapes(x.shape[:-2], w.shape[:-2])
             tag = "bmn,bnk->bmk"
+        m, n, k = x.shape[-2], x.shape[-1], w.shape[-1]
+        tile = self.resolve_tile(tile, m=m, n=n, k=k, policy=policy,
+                                 backend=b)
         spec = GemmSpec(
-            op="matmul", tag=tag,
-            m=x.shape[-2], n=x.shape[-1], k=w.shape[-1],
+            op="matmul", tag=tag, m=m, n=n, k=k,
             batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
             policy=policy, tile=tile, w_shared=(w.ndim == 2),
         )
@@ -554,31 +642,56 @@ class Engine:
         tile: Optional[tiling.TileConfig] = None,
         backend: Optional[str] = None,
     ) -> jax.Array:
-        """Affine layer with a fused epilogue: ``act(x @ w + b)``.
+        """Affine layer with a *fused* epilogue: ``act(x @ w + b)``.
 
-        Bias add and activation run in the policy's accumulation dtype on
-        the backend's pre-downcast result, so backends that return the
-        accumulator (e.g. "xla") see a single downcast at the end.  The
-        Pallas kernel stores its output in ``out_dtype`` (store-once), so
-        its epilogue re-widens the stored values instead."""
+        On backends with the ``"fused_epilogue"`` capability ("pallas",
+        "interpret") the bias add and activation execute inside the GEMM
+        kernel, on the accumulator in the policy's accumulation dtype,
+        immediately before the store-once HBM write — the affine layer
+        costs exactly one output pass.  Other backends ("xla") fall back
+        to the post-op path: the epilogue runs in the accumulation dtype
+        on the backend's result, then one downcast.
+
+        Numerics: under ``paper_fp16`` (accum == out dtype) the two paths
+        are bitwise identical for bias-only and relu epilogues;
+        transcendental epilogues (gelu/silu/tanh) may differ by ~2 ulp
+        because XLA rounds fp16 transcendentals differently inside a
+        compiled kernel than in an eager post-op pass.  Under fp32-accum
+        policies the fused path additionally applies the epilogue *before*
+        the out-dtype rounding while the unfused path re-widens the
+        already-rounded store — results agree to ~2 ulp of the output
+        dtype (the fused value is the more accurate one).  The equivalence
+        suite in tests/test_engine.py pins exactly this contract."""
         policy = self.resolve_policy(policy)
         bk = self.resolve_backend(backend)
-        if activation is not None and activation not in _EPILOGUES:
-            raise ValueError(
-                f"unknown epilogue {activation!r}; known: {sorted(_EPILOGUES)}")
+        epi.validate_epilogue(activation)
         if x.ndim < 2 or w.ndim != 2:
             raise ValueError(f"linear needs x>=2D, w 2D; got {x.shape} @ {w.shape}")
         if x.shape[-1] != w.shape[0]:
             raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+        if b is not None and b.shape != (w.shape[-1],):
+            raise ValueError(
+                f"bias must have shape ({w.shape[-1]},), got {b.shape}")
         lead = x.shape[:-2]
+        m, n, k = x.shape[-2], x.shape[-1], w.shape[-1]
+        tile = self.resolve_tile(tile, m=m, n=n, k=k, policy=policy,
+                                 backend=bk, epilogue=activation)
         spec = GemmSpec(
-            op="linear", tag="mn,nk->mk",
-            m=x.shape[-2], n=x.shape[-1], k=w.shape[-1],
+            op="linear", tag="mn,nk->mk", m=m, n=n, k=k,
             batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
             policy=policy, tile=tile, epilogue=activation, w_shared=True,
         )
+        has_epilogue = b is not None or activation is not None
+        if has_epilogue and get_backend(bk).supports("fused_epilogue"):
+            xc = x.astype(policy.compute_dtype)
+            wc = w.astype(policy.compute_dtype)
+            bc = None if b is None else b.astype(policy.accum_dtype)
+            _emit(spec, bk)
+            z = get_backend(bk).fn(xc, wc, spec=spec, bias=bc,
+                                   fuse_epilogue=True)
+            return z.astype(policy.out_dtype)
         z = self._execute_raw(spec, bk, x, w)
-        if b is not None or activation is not None:
+        if has_epilogue:
             za = z.astype(policy.accum_dtype)
             if b is not None:
                 za = za + b.astype(policy.accum_dtype)
@@ -619,9 +732,11 @@ class Engine:
         if x.shape[-1] != w.shape[-2]:
             raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
         lead = x.shape[:-3]
+        m, n, k = x.shape[-2], x.shape[-1], w.shape[-1]
+        tile = self.resolve_tile(tile, m=m, n=n, k=k, policy=policy,
+                                 backend=b)
         spec = GemmSpec(
-            op="grouped_matmul", tag="gmn,gnk->gmk",
-            m=x.shape[-2], n=x.shape[-1], k=w.shape[-1],
+            op="grouped_matmul", tag="gmn,gnk->gmk", m=m, n=n, k=k,
             batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
             groups=w.shape[0],
             policy=policy, tile=tile, w_shared=True,
@@ -668,6 +783,8 @@ class Engine:
         m = int(np.prod([dims[l] for l in m_l], dtype=np.int64)) if m_l else 1
         k = int(np.prod([dims[l] for l in k_l], dtype=np.int64)) if k_l else 1
         c = int(np.prod([dims[l] for l in c_l], dtype=np.int64)) if c_l else 1
+        tile = self.resolve_tile(tile, m=m, n=c, k=k, policy=policy,
+                                 backend=b)
         spec = GemmSpec(
             op="einsum2d", tag=eq.replace(" ", ""),
             m=m, n=c, k=k, batch=bsz, policy=policy, tile=tile,

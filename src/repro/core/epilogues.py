@@ -1,0 +1,49 @@
+"""The Engine's epilogue registry — activations fusable into the GEMM store.
+
+RedMulE's follow-up engine work (arXiv:2301.03904) draws the line between a
+GEMM *unit* and a GEMM-*layer* unit at exactly this point: whether the
+``act(Z + b)`` tail runs inside the accumulation datapath or as a separate
+pass over HBM.  This module is the single source of truth for which
+epilogues exist, shared by :mod:`repro.core.engine` (post-op fallback path)
+and :mod:`repro.kernels.redmule_matmul` (in-kernel fused path) so the two
+paths can never drift apart.
+
+Every function here is built from plain ``jnp``/``jax.nn`` primitives that
+lower inside a Pallas TPU kernel body (VPU element-wise ops only — no
+reductions, no reshapes), which is what makes in-kernel fusion possible.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["EPILOGUES", "epilogue_names", "apply_epilogue", "validate_epilogue"]
+
+# name -> element-wise fn, applied in the accumulation dtype
+EPILOGUES: Dict[str, Callable[[jax.Array], jax.Array]] = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+def epilogue_names() -> tuple:
+    return tuple(sorted(EPILOGUES))
+
+
+def validate_epilogue(name) -> None:
+    """Raise ValueError for an unknown epilogue name (None is allowed)."""
+    if name is not None and name not in EPILOGUES:
+        raise ValueError(
+            f"unknown epilogue {name!r}; known: {sorted(EPILOGUES)}")
+
+
+def apply_epilogue(name, z: jax.Array) -> jax.Array:
+    """Apply epilogue ``name`` (or pass through when None)."""
+    if name is None:
+        return z
+    return EPILOGUES[name](z)

@@ -19,6 +19,7 @@ the array full" rule:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax.numpy as jnp
@@ -99,7 +100,24 @@ def choose_tiles(
          N-runs amortize the accumulator's fill latency, exactly like the
          paper's H*(P+1)-cycle pipeline fill;
       4. shrink in the order bn -> bk -> bm until the working set fits.
+
+    The Engine resolves a tile for every dispatch, at every trace, so the
+    search is memoized on the canonicalized arguments (the returned
+    TileConfig is frozen — sharing one instance across call sites is safe).
     """
+    # degenerate (empty) dims still get a valid minimum tile — zero-size
+    # operands pad up to one block and slice back to nothing
+    return _choose_tiles_cached(
+        max(int(M), 1), max(int(N), 1), max(int(K), 1),
+        jnp.dtype(compute_dtype).name, jnp.dtype(accum_dtype).name,
+        int(vmem_budget))
+
+
+@functools.lru_cache(maxsize=4096)
+def _choose_tiles_cached(
+    M: int, N: int, K: int,
+    compute_dtype: str, accum_dtype: str, vmem_budget: int,
+) -> TileConfig:
     sl = sublane(compute_dtype)
     m_cap = _round_up(min(M, 512), sl)
     k_cap = _round_up(min(K, 512), MXU_LANE)

@@ -6,8 +6,10 @@ the kernel bodies the registered "pallas" and "interpret" backends execute
 backends register alongside these without touching kernel code).
 
 * redmule_matmul.py -- the paper's engine: X-stationary / W-streamed tiled
-  GEMM with a VMEM scratch accumulator (store-once Z).  ops.py wraps it
-  (padding, tile choice, batching); ref.py holds the pure-jnp oracles.
+  GEMM with a VMEM scratch accumulator (store-once Z), the bias+activation
+  epilogue fused into the store step, and a leading batch grid dimension
+  for batched operands.  ops.py wraps it (padding, tile choice, epilogue
+  plumbing); ref.py holds the pure-jnp oracles.
 * flash_attention.py -- RedMulE-tiled attention (Q-stationary, K/V streamed,
   online-softmax accumulator) for long-context prefill.
 * chunked_linear_attention.py -- VMEM-resident-state chunked recurrence

@@ -1,16 +1,18 @@
 """jit'd wrappers around the Pallas GEMM kernel — the bodies behind the
 Engine's registered "pallas" / "interpret" backends.
 
-Handles padding to tile multiples (zeros are accumulation-neutral), tile
-selection via :mod:`repro.core.tiling`, and batching (vmap adds a leading
-grid dimension to the kernel).  Model code should not call these directly:
+Handles padding to tile multiples (zeros are accumulation-neutral and the
+registered epilogues all map 0 -> finite values that the final slice
+discards), tile selection via :mod:`repro.core.tiling`, the fused
+bias+activation epilogue, and batching (a leading batch grid dimension
+inside the kernel — not a ``vmap`` wrapper — so the tile choice sees the
+true per-core working set).  Model code should not call these directly:
 route through :mod:`repro.core.engine` so dispatches are instrumented and
 backend-switchable.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -18,7 +20,8 @@ import jax.numpy as jnp
 
 from repro.core import precision as prec
 from repro.core import tiling
-from repro.kernels.redmule_matmul import redmule_matmul_pallas
+from repro.kernels.redmule_matmul import (redmule_matmul_batched_pallas,
+                                          redmule_matmul_pallas)
 
 __all__ = ["redmule_matmul", "redmule_matmul_batched"]
 
@@ -42,11 +45,28 @@ def redmule_matmul(
     *,
     policy: prec.Policy,
     tile: Optional[tiling.TileConfig] = None,
+    bias: Optional[jax.Array] = None,
+    epilogue: Optional[str] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """2D Z = X @ W on the RedMulE kernel (pads, runs, slices)."""
+    """2D Z = act(X @ W + bias) on the RedMulE kernel (pads, runs, slices).
+
+    ``bias`` (optional, shape ``(K,)`` or ``(1, K)``) and ``epilogue``
+    (optional activation name) are fused into the kernel's store-once step
+    in the accumulation dtype — the affine layer costs one HBM write."""
     M, N = x.shape
     K = w.shape[1]
+    if M == 0 or K == 0 or N == 0:
+        # degenerate GEMM (e.g. an empty ragged group): an empty — or, for
+        # N == 0, all-zero — result with no kernel launch.  The fused
+        # epilogue still applies (act(0 + bias) for N == 0).
+        z = jnp.zeros((M, K), policy.accum_dtype)
+        if bias is not None:
+            z = z + bias.reshape(1, K).astype(policy.accum_dtype)
+        if epilogue is not None:
+            from repro.core import epilogues as epi
+            z = epi.apply_epilogue(epilogue, z)
+        return z.astype(policy.out_dtype)
     if tile is None:
         tile = tiling.choose_tiles(
             M, N, K, compute_dtype=policy.compute_dtype, accum_dtype=policy.accum_dtype
@@ -54,7 +74,11 @@ def redmule_matmul(
     Mp, Np, Kp = _padded_dims(M, N, K, tile)
     xp = _pad_to(x, Mp, Np)
     wp = _pad_to(w, Np, Kp)
-    z = redmule_matmul_pallas(xp, wp, tile=tile, policy=policy, interpret=interpret)
+    bp = None
+    if bias is not None:
+        bp = _pad_to(bias.reshape(1, K).astype(policy.accum_dtype), 1, Kp)
+    z = redmule_matmul_pallas(xp, wp, bp, tile=tile, policy=policy,
+                              epilogue=epilogue, interpret=interpret)
     return z[:M, :K]
 
 
@@ -66,9 +90,15 @@ def redmule_matmul_batched(
     tile: Optional[tiling.TileConfig] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Batched Z[b] = X[b] @ W[b]; x: (B, M, N), w: (B, N, K)."""
+    """Batched Z[b] = X[b] @ W[b]; x: (B, M, N), w: (B, N, K).
+
+    The batch rides as the kernel's leading grid dimension (one tile set
+    live at a time), not as a ``vmap`` that would multiply the VMEM
+    working set by B behind the tile chooser's back."""
     B, M, N = x.shape
     K = w.shape[2]
+    if B == 0 or M == 0 or K == 0 or N == 0:
+        return jnp.zeros((B, M, K), policy.out_dtype)
     if tile is None:
         tile = tiling.choose_tiles(
             M, N, K, compute_dtype=policy.compute_dtype, accum_dtype=policy.accum_dtype
@@ -76,8 +106,6 @@ def redmule_matmul_batched(
     Mp, Np, Kp = _padded_dims(M, N, K, tile)
     xp = _pad_to(x, Mp, Np)
     wp = _pad_to(w, Np, Kp)
-    run = functools.partial(
-        redmule_matmul_pallas, tile=tile, policy=policy, interpret=interpret
-    )
-    z = jax.vmap(run)(xp, wp)
+    z = redmule_matmul_batched_pallas(xp, wp, tile=tile, policy=policy,
+                                      interpret=interpret)
     return z[:, :M, :K]

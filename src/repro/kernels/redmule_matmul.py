@@ -13,7 +13,17 @@ The paper's dataflow (§II-B/C), re-derived for the TPU memory hierarchy
   store-once rule);
 * the accumulator is fp32 by default (MXU-native) or fp16 re-rounded per
   N-block in ``paper_faithful`` mode (the binary16 in-pipeline accumulation
-  error model).
+  error model);
+* the **epilogue is fused**: when a bias row and/or activation name is
+  given, ``act(acc + bias)`` is applied to the accumulator *in the
+  accumulation dtype* inside the store-once step, so an affine layer costs
+  exactly one HBM write — the GEMM-*layer* datapath of the follow-up
+  RedMule engine paper (arXiv:2301.03904), not a GEMM unit plus a separate
+  HBM round-trip;
+* batched operands get a leading **batch grid dimension**
+  (:func:`redmule_matmul_batched_pallas`) instead of a ``vmap`` wrapper, so
+  the tile choice and the Pallas pipeline see the true per-core working set
+  (one X/W/Z tile set, not B concurrent copies).
 
 Shapes must be pre-padded to tile multiples by ``ops.py``.
 """
@@ -30,13 +40,27 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import CompilerParams as _CompilerParams
 
+from repro.core import epilogues as epi
 from repro.core import precision as prec
 from repro.core import tiling
 
-__all__ = ["redmule_matmul_pallas"]
+__all__ = ["redmule_matmul_pallas", "redmule_matmul_batched_pallas"]
 
 
-def _kernel(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype):
+def _store_value(acc, bias, *, epilogue, out_dtype):
+    """The fused store-once epilogue: ``act(acc + bias)`` in the accumulator
+    dtype, then a single downcast to the stored dtype.
+
+    In ``paper_faithful`` mode the accumulator is fp16, so the epilogue runs
+    in binary16 too — the whole layer stays inside the paper's datapath."""
+    if bias is not None:
+        acc = acc + bias.astype(acc.dtype)
+    acc = epi.apply_epilogue(epilogue, acc)
+    return acc.astype(out_dtype)
+
+
+def _kernel(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype,
+            epilogue: Optional[str]):
     """One (bm, bk) Z tile; invoked n_tiles times along the reduction."""
 
     @pl.when(pl.program_id(2) == 0)
@@ -53,37 +77,78 @@ def _kernel(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype):
 
     @pl.when(pl.program_id(2) == n_tiles - 1)
     def _store_once():
-        z_ref[...] = acc_ref[...].astype(out_dtype)
+        z_ref[...] = _store_value(acc_ref[...], None, epilogue=epilogue,
+                                  out_dtype=out_dtype)
+
+
+def _kernel_bias(x_ref, w_ref, bias_ref, z_ref, acc_ref, *, n_tiles: int,
+                 out_dtype, epilogue: Optional[str]):
+    """Same schedule with a (1, bk) bias tile folded into the store."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=acc_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == n_tiles - 1)
+    def _store_once():
+        z_ref[...] = _store_value(acc_ref[...], bias_ref[...],
+                                  epilogue=epilogue, out_dtype=out_dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("tile", "policy", "interpret"),
+    static_argnames=("tile", "policy", "epilogue", "interpret"),
 )
 def redmule_matmul_pallas(
     x: jax.Array,
     w: jax.Array,
+    bias: Optional[jax.Array] = None,
     *,
     tile: tiling.TileConfig,
     policy: prec.Policy,
+    epilogue: Optional[str] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Z = X @ W for 2D operands already padded to tile multiples."""
+    """Z = act(X @ W + bias) for 2D operands already padded to tile multiples.
+
+    ``bias`` (optional) is a ``(1, K)`` row in the accumulation dtype;
+    ``epilogue`` (optional) names an activation from
+    :mod:`repro.core.epilogues`.  Both are applied inside the kernel's
+    store-once step (no extra HBM pass)."""
     M, N = x.shape
     N2, K = w.shape
     assert N == N2, (x.shape, w.shape)
     assert M % tile.bm == 0 and N % tile.bn == 0 and K % tile.bk == 0, (
         f"shapes {(M, N, K)} not padded to tiles {tile}"
     )
+    if bias is not None:
+        assert bias.shape == (1, K), (bias.shape, K)
     grid = (M // tile.bm, K // tile.bk, N // tile.bn)
 
+    in_specs = [
+        pl.BlockSpec((tile.bm, tile.bn), lambda i, j, k: (i, k)),
+        pl.BlockSpec((tile.bn, tile.bk), lambda i, j, k: (k, j)),
+    ]
+    operands = [x, w]
+    if bias is None:
+        kernel = functools.partial(_kernel, n_tiles=grid[2],
+                                   out_dtype=policy.out_dtype,
+                                   epilogue=epilogue)
+    else:
+        kernel = functools.partial(_kernel_bias, n_tiles=grid[2],
+                                   out_dtype=policy.out_dtype,
+                                   epilogue=epilogue)
+        in_specs.append(pl.BlockSpec((1, tile.bk), lambda i, j, k: (0, j)))
+        operands.append(bias)
+
     return pl.pallas_call(
-        functools.partial(_kernel, n_tiles=grid[2], out_dtype=policy.out_dtype),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile.bm, tile.bn), lambda i, j, k: (i, k)),
-            pl.BlockSpec((tile.bn, tile.bk), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tile.bm, tile.bk), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, K), policy.out_dtype),
         scratch_shapes=[pltpu.VMEM((tile.bm, tile.bk), policy.accum_dtype)],
@@ -92,4 +157,73 @@ def redmule_matmul_pallas(
         ),
         interpret=interpret,
         name="redmule_matmul",
+    )(*operands)
+
+
+def _kernel_batched(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype,
+                    epilogue: Optional[str]):
+    """The same X-stationary schedule under a leading batch grid dim.
+
+    Block refs carry a unit batch dim ((1, bm, bn) etc.); the reduction is
+    grid axis 3."""
+
+    @pl.when(pl.program_id(3) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], w_ref[0], preferred_element_type=acc_ref.dtype
+    )
+
+    @pl.when(pl.program_id(3) == n_tiles - 1)
+    def _store_once():
+        z_ref[0] = _store_value(acc_ref[...], None, epilogue=epilogue,
+                                out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile", "policy", "epilogue", "interpret"),
+)
+def redmule_matmul_batched_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    tile: tiling.TileConfig,
+    policy: prec.Policy,
+    epilogue: Optional[str] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Z[b] = X[b] @ W[b] with the batch as a leading grid dimension.
+
+    Unlike a ``vmap`` wrapper (which multiplies the VMEM working set by B
+    and hides the batch from the scheduler), the batch here is just the
+    outermost parallel grid axis: one X/W/Z tile set is live at a time, so
+    the tile choice sees the true per-core working set."""
+    B, M, N = x.shape
+    B2, N2, K = w.shape
+    assert B == B2 and N == N2, (x.shape, w.shape)
+    assert M % tile.bm == 0 and N % tile.bn == 0 and K % tile.bk == 0, (
+        f"shapes {(M, N, K)} not padded to tiles {tile}"
+    )
+    grid = (B, M // tile.bm, K // tile.bk, N // tile.bn)
+
+    return pl.pallas_call(
+        functools.partial(_kernel_batched, n_tiles=grid[3],
+                          out_dtype=policy.out_dtype, epilogue=epilogue),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile.bm, tile.bn), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, tile.bn, tile.bk), lambda b, i, j, k: (b, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tile.bm, tile.bk),
+                               lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, M, K), policy.out_dtype),
+        scratch_shapes=[pltpu.VMEM((tile.bm, tile.bk), policy.accum_dtype)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+        name="redmule_matmul_batched",
     )(x, w)

@@ -1,0 +1,196 @@
+"""Autotuner: candidates, cost model, canonical keys, cache round-trip.
+
+The acceptance loop: cold miss -> tuned pick (cost model on CPU) -> warm
+hit from the in-memory LRU -> warm hit from the JSON file in a fresh
+cache (cross-process persistence) -> the Engine's tile resolution serves
+the tuned tile and stamps it on the GemmEvent.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, engine, tiling
+from repro.core import precision as prec
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache(monkeypatch, tmp_path):
+    """Every test gets an empty LRU and its own JSON cache file."""
+    monkeypatch.setenv(autotune.ENV_VAR, str(tmp_path / "autotune.json"))
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+# ------------------------------------------------------------------ #
+# Candidates and the cost model
+# ------------------------------------------------------------------ #
+def test_candidates_fit_budget_and_alignment():
+    pol = prec.TPU_BF16
+    budget = tiling.DEFAULT_VMEM_BUDGET
+    cands = autotune.candidate_tiles(512, 2048, 512, policy=pol,
+                                     vmem_budget=budget)
+    assert 1 < len(cands) <= 16
+    sl = tiling.sublane(pol.compute_dtype)
+    for t in cands:
+        assert tiling.vmem_bytes(t, pol.compute_dtype, pol.accum_dtype) <= budget
+        assert t.bm % sl == 0
+        assert t.bn % tiling.MXU_LANE == 0
+        assert t.bk % tiling.MXU_LANE == 0
+    # no duplicates
+    assert len({(t.bm, t.bn, t.bk) for t in cands}) == len(cands)
+
+
+def test_candidates_include_heuristic_pick():
+    pol = prec.TPU_FP16
+    h = tiling.choose_tiles(300, 700, 300, compute_dtype=pol.compute_dtype,
+                            accum_dtype=pol.accum_dtype)
+    cands = autotune.candidate_tiles(300, 700, 300, policy=pol,
+                                     max_candidates=10_000)
+    assert h in cands
+
+
+def test_cost_model_penalizes_overpadding():
+    """A ragged M=100 problem: a bm=512 tile wastes 4x the MACs of bm=128
+    and must never be scored cheaper."""
+    pol = prec.TPU_BF16
+    fat = tiling.TileConfig(bm=512, bn=512, bk=256)
+    fit = tiling.TileConfig(bm=128, bn=512, bk=256)
+    assert autotune.predicted_cost_us(100, 2048, 256, fit, policy=pol) < \
+        autotune.predicted_cost_us(100, 2048, 256, fat, policy=pol)
+
+
+def test_cost_model_penalizes_tiny_grids():
+    """Per-step overhead: shredding a big GEMM into minimum tiles must be
+    scored worse than the fat heuristic pick."""
+    pol = prec.TPU_BF16
+    tiny = tiling.TileConfig(bm=16, bn=128, bk=128)
+    fat = tiling.choose_tiles(4096, 4096, 4096,
+                              compute_dtype=pol.compute_dtype)
+    assert autotune.predicted_cost_us(4096, 4096, 4096, fat, policy=pol) < \
+        autotune.predicted_cost_us(4096, 4096, 4096, tiny, policy=pol)
+
+
+# ------------------------------------------------------------------ #
+# Canonical keys
+# ------------------------------------------------------------------ #
+def test_bucketing_pow2_below_512_coarse_above():
+    assert autotune.bucket_dim(1) == 1
+    assert autotune.bucket_dim(3) == 4
+    assert autotune.bucket_dim(100) == 128
+    assert autotune.bucket_dim(512) == 512
+    assert autotune.bucket_dim(513) == 1024
+    assert autotune.bucket_dim(1500) == 1536
+
+
+def test_key_separates_dtype_epilogue_backend():
+    mk = lambda **kw: autotune.canonical_key(
+        256, 512, 256,
+        policy=kw.pop("policy", prec.TPU_BF16),
+        backend=kw.pop("backend", "pallas"),
+        **kw)
+    base = mk()
+    assert mk() == base                       # deterministic
+    assert mk(policy=prec.PAPER_FP16) != base # dtypes in the key
+    assert mk(epilogue="gelu") != base        # epilogue in the key
+    assert mk(backend="interpret") != base    # backend in the key
+    # nearby shapes share a bucket (reuse), distant ones don't
+    near = autotune.canonical_key(250, 500, 250, policy=prec.TPU_BF16,
+                                  backend="pallas")
+    assert near == base
+    far = autotune.canonical_key(4096, 512, 256, policy=prec.TPU_BF16,
+                                 backend="pallas")
+    assert far != base
+
+
+# ------------------------------------------------------------------ #
+# The acceptance round-trip: cold miss -> tuned pick -> warm hits
+# ------------------------------------------------------------------ #
+def test_cache_roundtrip_cold_miss_pick_warm_hit():
+    pol = prec.TPU_BF16
+    look = lambda: autotune.cached_tile(256, 512, 256, policy=pol,
+                                        backend="interpret")
+    assert look() is None                                   # cold miss
+    res = autotune.autotune_gemm(256, 512, 256, policy=pol,
+                                 backend="interpret", mode="model")
+    assert res.source == "model" and res.n_candidates >= 1
+    assert look() == res.tile                               # LRU warm hit
+
+    path = os.environ[autotune.ENV_VAR]
+    data = json.load(open(path))                            # persisted
+    (entry,) = data.values()
+    assert (entry["bm"], entry["bn"], entry["bk"]) == \
+        (res.tile.bm, res.tile.bn, res.tile.bk)
+    assert entry["source"] == "model"
+
+    autotune.clear_cache()                                  # "new process"
+    assert look() == res.tile                               # disk warm hit
+    stats = autotune.cache_stats()
+    assert stats["hits"] >= 1
+
+
+def test_engine_resolution_prefers_autotuned_tile():
+    """explicit arg > autotune cache > heuristic, end to end."""
+    pol = prec.TPU_BF16
+    M, N, K = 256, 512, 256
+    x = jnp.zeros((M, N), pol.compute_dtype)
+    w = jnp.zeros((N, K), pol.compute_dtype)
+
+    def traced_tile(**kwargs):
+        with engine.instrument() as ev:
+            jax.eval_shape(lambda a, b: engine.matmul(
+                a, b, policy=pol, backend="interpret", **kwargs), x, w)
+        (event,) = ev
+        return event.spec.tile
+
+    heuristic = tiling.choose_tiles(M, N, K, compute_dtype=pol.compute_dtype,
+                                    accum_dtype=pol.accum_dtype)
+    assert traced_tile() == heuristic           # nothing tuned yet
+
+    tuned = tiling.TileConfig(bm=64, bn=256, bk=128)
+    autotune.record_tile(
+        autotune.canonical_key(M, N, K, policy=pol, backend="interpret"),
+        tuned, source="manual")
+    assert traced_tile() == tuned               # cache beats heuristic
+
+    explicit = tiling.TileConfig(bm=32, bn=128, bk=128)
+    assert traced_tile(tile=explicit) == explicit  # arg beats cache
+
+
+def test_autotuned_tile_produces_correct_result():
+    """The tuned tile is not just recorded — the kernel runs with it."""
+    pol = prec.TPU_FP16
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(100, 200)), pol.compute_dtype)
+    w = jnp.asarray(rng.normal(size=(200, 50)), pol.compute_dtype)
+    res = autotune.autotune_gemm(100, 200, 50, policy=pol,
+                                 backend="interpret", mode="model")
+    z = engine.matmul(x, w, policy=pol, backend="interpret")
+    ref = np.asarray(x, np.float32) @ np.asarray(w, np.float32)
+    np.testing.assert_allclose(np.asarray(z, np.float32), ref,
+                               rtol=2e-3, atol=5e-2)
+    assert res.tile is not None
+
+
+def test_measured_mode_times_the_kernel():
+    """measured_cost_us runs the real (interpret-mode here) kernel; it only
+    needs to return a positive wall-clock figure on tiny shapes."""
+    pol = prec.FP32
+    t = tiling.TileConfig(bm=8, bn=128, bk=128)
+    us = autotune.measured_cost_us(8, 16, 8, t, policy=pol, epilogue="relu",
+                                   with_bias=True, warmup=0, iters=1)
+    assert us > 0.0
+
+
+def test_corrupt_cache_file_is_ignored(tmp_path, monkeypatch):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    monkeypatch.setenv(autotune.ENV_VAR, str(bad))
+    autotune.clear_cache()
+    assert autotune.cached_tile(64, 64, 64, policy=prec.TPU_BF16,
+                                backend="interpret") is None

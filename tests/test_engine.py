@@ -11,11 +11,16 @@ Covers the redesign's contract:
   * einsum2d == jnp.einsum for the contraction family the models use;
   * instrument(): a transformer forward's summed GemmEvent flops match the
     perf model's analytic enumeration to within 1%;
-  * the repro.core.redmule shims still work (with a DeprecationWarning).
+  * fused-vs-unfused epilogue equivalence for every registered epilogue
+    and precision policy (the "fused_epilogue" capability contract);
+  * tile resolution (explicit > autotune cache > heuristic) and the
+    resolved tile riding on GemmEvents;
+  * the PR-1 deprecation shims (repro.core.redmule, repro.core.matmul /
+    linear re-exports) are gone now the one-release window has lapsed.
 """
 
+import contextlib
 import threading
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -205,7 +210,7 @@ def test_grouped_matmul_with_leading_batch():
 
 
 # ------------------------------------------------------------------ #
-# linear: fused epilogue
+# linear: fused epilogue (the "fused_epilogue" capability contract)
 # ------------------------------------------------------------------ #
 def test_linear_fused_bias_activation():
     x, w = _rand((8, 16)), _rand((16, 8))
@@ -216,6 +221,113 @@ def test_linear_fused_bias_activation():
                                rtol=1e-5, atol=1e-5)
     with pytest.raises(ValueError, match="epilogue"):
         engine.linear(x, w, activation="not-an-act")
+    with pytest.raises(ValueError, match="bias"):
+        engine.linear(x, w, _rand((4,)))
+
+
+def test_backend_capability_flags():
+    for name in ("pallas", "interpret"):
+        assert engine.backend_supports(name, "fused_epilogue")
+        assert engine.backend_supports(name, "tiled")
+    assert not engine.backend_supports("xla", "fused_epilogue")
+    with pytest.raises(ValueError, match="capabilities"):
+        engine.register_backend("bad-caps", lambda x, w, *, spec: x,
+                                capabilities=("warp_drive",))
+
+
+@contextlib.contextmanager
+def _unfused_interpret():
+    """The same Pallas kernel, registered WITHOUT the fused_epilogue
+    capability — forces the engine's post-op fallback path."""
+    fn = engine.get_backend("interpret").fn
+
+    def plain(x, w, *, spec):
+        return fn(x, w, spec=spec)   # never receives bias/fuse_epilogue
+
+    engine.register_backend("interpret-unfused", plain,
+                            capabilities=("tiled",))
+    try:
+        yield "interpret-unfused"
+    finally:
+        engine.unregister_backend("interpret-unfused")
+
+
+@pytest.mark.parametrize("policy", [prec.PAPER_FP16, prec.TPU_BF16],
+                         ids=lambda p: p.name)
+@pytest.mark.parametrize("act", [None, "relu", "gelu", "silu", "tanh"])
+def test_linear_fused_matches_unfused_every_epilogue(policy, act):
+    """Acceptance: in-kernel epilogue == post-op epilogue on the same
+    kernel, for every registered epilogue and both precision policies.
+
+    Documented tolerance (see linear's docstring): under paper_fp16
+    (accum dtype == out dtype) bias-only and relu are *bitwise* identical;
+    transcendental epilogues (gelu/silu/tanh) may differ by ~2 ulp because
+    XLA rounds fp16 transcendentals differently inside a compiled kernel
+    than in the eager post-op pass (jax.jit(gelu) vs gelu shows the same
+    delta with no Pallas involved).  Under fp32-accum policies the fused
+    path additionally applies the epilogue before the out-dtype rounding,
+    so agreement is to ~2 ulp of the output dtype."""
+    rng = np.random.default_rng(hash((policy.name, act)) % 2**32)
+    x = jnp.asarray(rng.normal(size=(33, 70)), policy.compute_dtype)
+    w = jnp.asarray(rng.normal(size=(70, 40)), policy.compute_dtype)
+    b = jnp.asarray(rng.normal(size=(40,)), policy.compute_dtype)
+    z_fused = engine.linear(x, w, b, activation=act, policy=policy,
+                            backend="interpret")
+    with _unfused_interpret() as unfused:
+        z_post = engine.linear(x, w, b, activation=act, policy=policy,
+                               backend=unfused)
+    assert z_fused.dtype == policy.out_dtype == z_post.dtype
+    zf = np.asarray(z_fused, np.float32)
+    zp = np.asarray(z_post, np.float32)
+    exact = (policy.accum_dtype == policy.out_dtype
+             and act in (None, "relu"))
+    if exact:
+        np.testing.assert_array_equal(zf, zp)     # bitwise
+    else:
+        eps = {"float16": 1e-3, "bfloat16": 8e-3}[
+            jnp.dtype(policy.out_dtype).name]
+        denom = max(np.abs(zp).max(), 1.0)
+        assert np.max(np.abs(zf - zp)) / denom < 2 * eps
+
+
+@pytest.mark.parametrize("policy", [prec.PAPER_FP16, prec.TPU_BF16],
+                         ids=lambda p: p.name)
+def test_linear_fused_matches_xla_reference(policy):
+    """Cross-backend: the fused kernel tracks the xla post-op path within
+    the policies' accumulation tolerance (different accumulators)."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(16, 64)), policy.compute_dtype)
+    w = jnp.asarray(rng.normal(size=(64, 24)), policy.compute_dtype)
+    b = jnp.asarray(rng.normal(size=(24,)), policy.compute_dtype)
+    zi = engine.linear(x, w, b, activation="gelu", policy=policy,
+                       backend="interpret")
+    zx = engine.linear(x, w, b, activation="gelu", policy=policy,
+                       backend="xla")
+    np.testing.assert_allclose(np.asarray(zi, np.float32),
+                               np.asarray(zx, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("policy", [prec.PAPER_FP16, prec.TPU_BF16],
+                         ids=lambda p: p.name)
+def test_grouped_matmul_ragged_fused_backend_matches_loop(policy):
+    """grouped_matmul with ragged group_sizes on the Pallas (interpret)
+    backend — exercising the batched-grid kernel — matches the per-group
+    loop and zeroes rows beyond each group's size."""
+    G, M, N, K = 3, 8, 32, 16
+    sizes = jnp.asarray([5, 0, 8])
+    x = _rand((G, M, N), policy.compute_dtype)
+    w = _rand((G, N, K), policy.compute_dtype)
+    z = engine.grouped_matmul(x, w, group_sizes=sizes, policy=policy,
+                              backend="interpret")
+    zf = np.asarray(z, np.float32)
+    for g in range(G):
+        s = int(sizes[g])
+        ref = engine.matmul(x[g, :s], w[g], policy=policy,
+                            backend="interpret")
+        np.testing.assert_allclose(zf[g, :s], np.asarray(ref, np.float32),
+                                   rtol=2e-3, atol=2e-2)
+        assert np.all(zf[g, s:] == 0.0)
 
 
 # ------------------------------------------------------------------ #
@@ -338,25 +450,18 @@ def test_summarize_shape():
 
 
 # ------------------------------------------------------------------ #
-# Deprecation shims
+# Deprecation window closed (PR 1's one-release shims are gone)
 # ------------------------------------------------------------------ #
-def test_redmule_shim_warns_and_matches():
-    from repro.core import redmule
-
-    redmule._warned.clear()
-    x, w = _rand((8, 16)), _rand((16, 8))
-    with pytest.warns(DeprecationWarning):
-        z = redmule.matmul(x, w, policy=prec.FP32)
-    np.testing.assert_allclose(
-        np.asarray(z), np.asarray(engine.matmul(x, w, policy=prec.FP32)))
-    with pytest.warns(DeprecationWarning):
-        zl = redmule.linear(x, w, _rand((8,)), policy=prec.FP32)
-    assert zl.shape == (8, 8)
+def test_redmule_shim_module_removed():
+    with pytest.raises(ImportError):
+        from repro.core import redmule  # noqa: F401
 
 
-def test_old_core_import_path_still_works():
-    from repro.core import linear, matmul  # the documented one-release path
+def test_old_core_reexports_removed():
+    import repro.core as core
 
-    z = matmul(_rand((4, 8)), _rand((8, 4)), policy=prec.FP32)
-    zl = linear(_rand((4, 8)), _rand((8, 4)), policy=prec.FP32)
-    assert z.shape == (4, 4) and zl.shape == (4, 4)
+    # the Engine surface is the only GEMM entry point now
+    assert not hasattr(core, "matmul")
+    assert not hasattr(core, "linear")
+    with pytest.raises(ImportError):
+        from repro.core import matmul  # noqa: F401

@@ -1,0 +1,92 @@
+"""Event-driven flops regression gate (CI).
+
+The Engine emits one GemmEvent per dispatch at trace time; the roofline
+report carries their summed flops as ``RooflineReport.engine_flops``.
+These tests re-trace two fixed workloads and compare against the
+checked-in baseline (``benchmarks/baselines/engine_flops.json``) —
+**exactly**, since event flops are analytic (2*B*G*M*N*K), not measured.
+A mismatch means the GEMM workload itself changed: either a real
+regression (an op fell off the Engine, a shape drifted) or an intentional
+architecture change, in which case the baseline is updated in the same
+commit with a note.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.core import engine
+from repro.core import precision as prec
+from repro.roofline import analysis
+
+BASELINE_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "benchmarks", "baselines",
+    "engine_flops.json")
+
+with open(BASELINE_PATH) as fh:
+    BASELINE = json.load(fh)
+
+
+def _ae_events():
+    from repro.data import SyntheticAE
+    from repro.models import autoencoder
+
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    x = jnp.asarray(SyntheticAE(batch=16).sample(0))
+    with engine.instrument() as events:
+        jax.eval_shape(
+            lambda p, xx: autoencoder.ae_forward(p, xx, policy=prec.PAPER_FP16),
+            params, x)
+    return events
+
+
+def _lm_events():
+    from repro.models import transformer
+
+    cfg = configs.get_reduced("yi-9b")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"inputs": jnp.zeros((2, 64), jnp.int32)}
+    with engine.instrument() as events:
+        jax.eval_shape(lambda p, b: transformer.forward(p, cfg, b)[0],
+                       params, batch)
+    return events
+
+
+@pytest.mark.parametrize("name,collect", [
+    ("ae_fwd_B16", _ae_events),
+    ("yi-9b-reduced_fwd_B2_S64", _lm_events),
+])
+def test_engine_flops_match_baseline(name, collect):
+    events = collect()
+    assert events, "no GemmEvents collected"
+    got = analysis.flops_from_events(events)
+    want = BASELINE[name]
+    assert got == want, (
+        f"{name}: engine_flops {got} != baseline {want} "
+        f"(delta {got - want:+}). If the GEMM workload changed on purpose, "
+        f"update benchmarks/baselines/engine_flops.json in this commit.")
+
+
+def test_roofline_report_carries_engine_flops():
+    """The gate consumes RooflineReport.engine_flops — compile a small cell
+    end-to-end so the report path itself is covered, not just the summer."""
+    from repro.data import SyntheticAE
+    from repro.models import autoencoder
+
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    x = jnp.asarray(SyntheticAE(batch=16).sample(0))
+
+    fn = jax.jit(lambda p, xx: autoencoder.ae_forward(
+        p, xx, policy=prec.PAPER_FP16))
+    with engine.instrument() as events:
+        lowered = fn.lower(params, x)
+    compiled = lowered.compile()
+    report = analysis.roofline(
+        compiled, arch="ae", shape="fwd_B16", mesh_name="single",
+        n_devices=1, model_flops_val=float(BASELINE["ae_fwd_B16"]),
+        gemm_events=events)
+    assert report.engine_flops == BASELINE["ae_fwd_B16"]

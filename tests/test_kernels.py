@@ -97,6 +97,131 @@ def test_batched_matmul():
                                rtol=2e-3, atol=5e-2)
 
 
+def test_batched_grid_matches_per_slice_kernel():
+    """The leading batch *grid* dimension must be schedule-equivalent to
+    running the 2D kernel per slice (same tiles, same store order) —
+    bitwise, since both accumulate identically."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(3, 40, 200)), jnp.float16)
+    w = jnp.asarray(rng.normal(size=(3, 200, 72)), jnp.float16)
+    t = tiling.TileConfig(bm=16, bn=128, bk=128)
+    for pol in (prec.PAPER_FP16, prec.TPU_FP16):
+        zb = ops.redmule_matmul_batched(x, w, policy=pol, tile=t,
+                                        interpret=True)
+        z2 = jnp.stack([ops.redmule_matmul(x[i], w[i], policy=pol, tile=t,
+                                           interpret=True)
+                        for i in range(3)])
+        np.testing.assert_array_equal(np.asarray(zb, np.float32),
+                                      np.asarray(z2, np.float32))
+
+
+# ------------------------------------------------------------------ #
+# Fused epilogue (bias + activation inside the store-once step)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("policy", [prec.PAPER_FP16, prec.TPU_BF16],
+                         ids=lambda p: p.name)
+@pytest.mark.parametrize("act", [None, "relu", "gelu", "silu", "tanh"])
+def test_fused_epilogue_vs_oracle(policy, act):
+    """act(X @ W + b) fused into the kernel == oracle computed post-op in
+    the accumulation dtype, on a ragged (padded) shape."""
+    M, N, K = 33, 70, 40
+    x = _rand((M, N), policy.compute_dtype)
+    w = _rand((N, K), policy.compute_dtype)
+    b = _rand((K,), policy.compute_dtype)
+    z = ops.redmule_matmul(x, w, policy=policy, bias=b, epilogue=act,
+                           interpret=True)
+    assert z.shape == (M, K) and z.dtype == policy.out_dtype
+    zr = ref.matmul_ref(x, w, policy=policy).astype(policy.accum_dtype)
+    zr = zr + b.astype(policy.accum_dtype)
+    if act is not None:
+        import repro.core.epilogues as epi
+        zr = epi.apply_epilogue(act, zr)
+    zr = zr.astype(policy.out_dtype)
+    eps = {"float16": 1e-3, "bfloat16": 8e-3}[jnp.dtype(policy.out_dtype).name]
+    zf, zrf = np.asarray(z, np.float32), np.asarray(zr, np.float32)
+    denom = max(np.abs(zrf).max(), 1.0)
+    assert np.max(np.abs(zf - zrf)) / denom < 2 * eps
+
+
+def test_fused_epilogue_padding_stays_clean():
+    """Padding rows/cols never leak: a relu-fused GEMM on a ragged shape
+    must carry no trace of the padded K columns (where act(0 + bias_pad)
+    would be nonzero if the pad were kept)."""
+    M, N, K = 10, 50, 30
+    x = _rand((M, N), np.float32)
+    w = _rand((N, K), np.float32)
+    b = jnp.full((K,), 5.0, jnp.float32)  # relu(0 + 5) != 0 in the pad
+    t = tiling.TileConfig(bm=8, bn=128, bk=128)
+    z = ops.redmule_matmul(x, w, policy=prec.FP32, tile=t, bias=b,
+                           epilogue="relu", interpret=True)
+    assert z.shape == (M, K)
+    zr = jax.nn.relu(jnp.dot(x, w, preferred_element_type=jnp.float32) + b)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# Padding edge cases (zeros must be accumulation-neutral)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("shape", [(1, 1, 1), (3, 5, 7), (7, 130, 2)],
+                         ids=str)
+def test_sub_sublane_shapes(shape):
+    """Shapes below one sublane/lane tile: the kernel pads to a single
+    (minimum) tile and slices back."""
+    M, N, K = shape
+    for policy in (prec.PAPER_FP16, prec.FP32):
+        x = _rand((M, N), policy.compute_dtype)
+        w = _rand((N, K), policy.compute_dtype)
+        z = ops.redmule_matmul(x, w, policy=policy, interpret=True)
+        zr = ref.matmul_ref(x, w, policy=policy)
+        assert z.shape == (M, K)
+        np.testing.assert_allclose(np.asarray(z, np.float32),
+                                   np.asarray(zr, np.float32),
+                                   rtol=2e-3, atol=2e-2)
+
+
+def test_zero_padding_accumulation_neutral_paper_fp16():
+    """The paper-faithful fp16 accumulator re-rounds after every N-block;
+    zero blocks must be identity under that re-rounding.  Explicitly
+    extending N with zeros (one extra full reduction block) must produce
+    a bitwise-identical result."""
+    M, N, K = 32, 100, 48
+    x = _rand((M, N))
+    w = _rand((N, K))
+    t = tiling.TileConfig(bm=16, bn=128, bk=128)
+    z = ops.redmule_matmul(x, w, policy=prec.PAPER_FP16, tile=t,
+                           interpret=True)
+    # same problem with N zero-extended across a block boundary (100 -> 256:
+    # the in-block pad grows and a whole extra zero block is appended)
+    xz = jnp.pad(x, ((0, 0), (0, 156)))
+    wz = jnp.pad(w, ((0, 156), (0, 0)))
+    zz = ops.redmule_matmul(xz, wz, policy=prec.PAPER_FP16, tile=t,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(z, np.float32),
+                                  np.asarray(zz, np.float32))
+    # and the padded run still matches the faithful oracle bitwise
+    zr = ref.matmul_ref(x, w, policy=prec.PAPER_FP16, tile=t)
+    np.testing.assert_array_equal(np.asarray(z, np.float32),
+                                  np.asarray(zr, np.float32))
+
+
+def test_non_multiple_dims_every_policy():
+    """M/N/K all indivisible by their tiles, across every policy."""
+    M, N, K = 45, 333, 67
+    t = tiling.TileConfig(bm=16, bn=128, bk=128)
+    for policy in POLICIES:
+        x = _rand((M, N), policy.compute_dtype)
+        w = _rand((N, K), policy.compute_dtype)
+        z = ops.redmule_matmul(x, w, policy=policy, tile=t, interpret=True)
+        zr = ref.matmul_ref(x, w, policy=policy, tile=t)
+        assert z.shape == (M, K)
+        eps = {"float16": 1e-3, "bfloat16": 8e-3, "float32": 1e-6}[
+            jnp.dtype(policy.out_dtype).name]
+        zf, zrf = np.asarray(z, np.float32), np.asarray(zr, np.float32)
+        denom = max(np.abs(zrf).max(), 1.0)
+        assert np.max(np.abs(zf - zrf)) / denom < 2 * eps
+
+
 if st is None:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_matmul_property_any_shape_any_tile():

@@ -60,3 +60,39 @@ def test_tiny_budget_degrades_gracefully():
         and t.bn == tiling.MXU_LANE
         and t.bk == tiling.MXU_LANE
     )
+
+
+# ------------------------------------------------------------------ #
+# Memoization (the Engine resolves a tile at every trace)
+# ------------------------------------------------------------------ #
+def test_choose_tiles_is_memoized():
+    before = tiling._choose_tiles_cached.cache_info()
+    a = tiling.choose_tiles(640, 768, 320, compute_dtype=jnp.float16)
+    b = tiling.choose_tiles(640, 768, 320, compute_dtype=jnp.float16)
+    assert a is b          # lru_cache returns the same frozen instance
+    after = tiling._choose_tiles_cached.cache_info()
+    assert after.hits > before.hits
+    # dtype objects and their string names canonicalize to one entry
+    c = tiling.choose_tiles(640, 768, 320, compute_dtype="float16")
+    assert c is a
+
+
+def test_choose_tiles_dtype_still_distinguished():
+    a = tiling.choose_tiles(4096, 4096, 4096, compute_dtype=jnp.float32)
+    b = tiling.choose_tiles(4096, 4096, 4096, compute_dtype=jnp.bfloat16)
+    assert a.bm % tiling.sublane(jnp.float32) == 0
+    assert b.bm % tiling.sublane(jnp.bfloat16) == 0
+
+
+# ------------------------------------------------------------------ #
+# Degenerate shapes (below one sublane/lane, empty dims)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("shape", [(1, 1, 1), (3, 5, 7), (0, 64, 0)], ids=str)
+def test_sub_tile_shapes_get_minimum_valid_tiles(shape):
+    m, n, k = shape
+    for dtype in (jnp.float16, jnp.float32):
+        t = tiling.choose_tiles(m, n, k, compute_dtype=dtype)
+        assert t.bm == tiling.sublane(dtype)
+        assert t.bn == tiling.MXU_LANE and t.bk == tiling.MXU_LANE
+        # exactly one (padding) tile per dim
+        assert t.grid(max(m, 1), max(n, 1), max(k, 1)) == (1, 1, 1)
