@@ -7,6 +7,11 @@ analytic enumerations that predate the Engine:
 
 * the TinyMLPerf AutoEncoder forward (paper §III-B) vs
   ``perf_model.autoencoder_gemms`` — recorded flops must equal analytic;
+* the AE *train step* (``jax.value_and_grad``) vs the analytic fwd+bwd
+  enumeration — the Engine ops' custom VJP makes the backward GEMMs
+  (``matmul_dx`` / ``matmul_dw``) first-class events, so the recorded
+  fwd:bwd ratio (1:2, i.e. train = 3x inference) and the paper's Fig 4c
+  "bwd slower than fwd" cycle split both come straight from the trace;
 * a reduced dense-LM forward vs ``perf_model.dense_forward_gemms``.
 
 The point: the perf model consumes what actually ran, not a re-derivation.
@@ -22,6 +27,7 @@ from repro.core import perf_model
 from repro.core import precision as prec
 from repro.data import SyntheticAE
 from repro.models import autoencoder, transformer
+from repro.roofline import analysis
 
 
 def _linear_hotpath_row() -> Row:
@@ -74,6 +80,27 @@ def run() -> list[Row]:
         f"event_flops={got} analytic_flops={want} "
         f"match={'OK' if got == want else 'MISMATCH'} "
         f"model_speedup={sw/hw:.2f}x"))
+
+    # --- AE train step: fwd+bwd events vs the analytic enumeration ---
+    with engine.instrument() as events:
+        jax.eval_shape(
+            lambda p, xx: jax.value_and_grad(
+                lambda q: autoencoder.ae_loss(q, xx,
+                                              policy=prec.PAPER_FP16)[0])(p),
+            params, x)
+    split = analysis.flops_by_direction(events)
+    gs = perf_model.autoencoder_gemms(B)
+    want_f = perf_model.workload_flops([(g, 1) for g in gs["fwd"]])
+    want_b = perf_model.workload_flops([(g, 1) for g in gs["bwd"]])
+    cyc = perf_model.workload_cycles_by_direction(m, events)
+    ok = split["fwd"] == want_f and split["bwd"] == want_b
+    rows.append((
+        f"engine/ae_train_B{B}", 0.0,
+        f"fwd_flops={int(split['fwd'])} bwd_flops={int(split['bwd'])} "
+        f"analytic_fwd={want_f} analytic_bwd={want_b} "
+        f"match={'OK' if ok else 'MISMATCH'} "
+        f"fwd:bwd=1:{split['bwd']/split['fwd']:.2f} "
+        f"model_bwd/fwd_cycles={cyc['bwd'][0]/cyc['fwd'][0]:.2f}x"))
 
     # --- dense LM forward: recorded events vs dense_forward_gemms ---
     cfg = configs.get_reduced("yi-9b")

@@ -27,6 +27,7 @@ from benchmarks import (engine_instrument, fig3_energy_throughput,
                         roofline_report, table1_soa)
 from benchmarks.common import emit
 from repro.core import engine
+from repro.roofline import analysis
 
 MODULES = [
     ("table1_soa", table1_soa),
@@ -61,6 +62,7 @@ def run_benchmarks(only: Optional[List[str]] = None) -> List[dict]:
             rows = mod.run()
         emit(rows)
         flops = engine.total_flops(events)
+        split = analysis.flops_by_direction(events)
         tiles = sorted({(ev.spec.tile.bm, ev.spec.tile.bn, ev.spec.tile.bk)
                         for ev in events if ev.spec.tile is not None})
         for name, us, derived in rows:
@@ -70,6 +72,11 @@ def run_benchmarks(only: Optional[List[str]] = None) -> List[dict]:
                 "derived": derived,
                 "module": mod_name,
                 "engine_flops": int(flops),
+                # fwd/bwd split: the Engine's custom-VJP backward GEMMs
+                # (matmul_dx / matmul_dw) are instrumented like any other
+                # dispatch, so train-shaped modules show bwd ~ 2x fwd
+                "engine_flops_fwd": int(split["fwd"]),
+                "engine_flops_bwd": int(split["bwd"]),
                 "tiles": [list(t) for t in tiles],
             })
     return records

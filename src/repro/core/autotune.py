@@ -82,7 +82,12 @@ class AutotuneKey:
     Shapes are bucketed (:func:`bucket_dim`) so e.g. every decode step of a
     ragged batch hits one entry; dtypes, epilogue and backend are part of
     the key because they change the working set, the store path and the
-    kernel being timed."""
+    kernel being timed.  ``layout`` ("nn" | "nt" | "tn") keys the operand
+    storage: the Engine's backward dispatches (dX = dZ·Wᵀ as "nt", dW =
+    Xᵀ·dZ as "tn") run a different BlockSpec walk than a forward GEMM of
+    the same logical shape, so their tuned tiles must not collide — the
+    transposed problem shapes (m/n/k swap roles between fwd and bwd) are
+    already part of the key, the layout disambiguates the rest."""
 
     m: int
     n: int
@@ -92,11 +97,14 @@ class AutotuneKey:
     out: str
     epilogue: str      # "" when the GEMM has no fused epilogue
     backend: str
+    layout: str = "nn"
 
     def to_str(self) -> str:
         ep = self.epilogue or "none"
-        return (f"m{self.m}-n{self.n}-k{self.k}-{self.compute}-{self.accum}"
+        base = (f"m{self.m}-n{self.n}-k{self.k}-{self.compute}-{self.accum}"
                 f"-{self.out}-{ep}-{self.backend}")
+        # forward keys keep the PR-2 format so shipped caches stay valid
+        return base if self.layout == "nn" else f"{base}-{self.layout}"
 
 
 def bucket_dim(v: int) -> int:
@@ -117,6 +125,7 @@ def canonical_key(
     policy: prec.Policy,
     backend: str,
     epilogue: Optional[str] = None,
+    layout: str = "nn",
 ) -> AutotuneKey:
     return AutotuneKey(
         m=bucket_dim(m), n=bucket_dim(n), k=bucket_dim(k),
@@ -125,6 +134,7 @@ def canonical_key(
         out=jnp.dtype(policy.out_dtype).name,
         epilogue=epilogue or "",
         backend=backend,
+        layout=layout,
     )
 
 
@@ -207,11 +217,12 @@ def cached_tile(
     policy: prec.Policy,
     backend: str,
     epilogue: Optional[str] = None,
+    layout: str = "nn",
 ) -> Optional[tiling.TileConfig]:
     """Cache-only lookup (LRU, then the JSON file).  Never tunes."""
     global _hits, _misses
     key = canonical_key(m, n, k, policy=policy, backend=backend,
-                        epilogue=epilogue).to_str()
+                        epilogue=epilogue, layout=layout).to_str()
     with _lock:
         t = _lru.get(key)
         if t is None:
@@ -351,6 +362,7 @@ def measured_cost_us(
     policy: prec.Policy,
     epilogue: Optional[str] = None,
     with_bias: bool = False,
+    layout: str = "nn",
     warmup: int = 1,
     iters: int = 3,
     interpret: Optional[bool] = None,
@@ -365,15 +377,17 @@ def measured_cost_us(
         interpret = jax.default_backend() != "tpu"
     key = jax.random.PRNGKey(0)
     kx, kw, kb = jax.random.split(key, 3)
-    x = jax.random.normal(kx, (m, n), policy.compute_dtype)
-    w = jax.random.normal(kw, (n, k), policy.compute_dtype)
+    x_shape = (n, m) if layout == "tn" else (m, n)
+    w_shape = (k, n) if layout == "nt" else (n, k)
+    x = jax.random.normal(kx, x_shape, policy.compute_dtype)
+    w = jax.random.normal(kw, w_shape, policy.compute_dtype)
     bias = (jax.random.normal(kb, (k,), policy.accum_dtype)
             if with_bias else None)
 
     def run():
         return ops.redmule_matmul(x, w, policy=policy, tile=tile,
                                   bias=bias, epilogue=epilogue,
-                                  interpret=interpret)
+                                  layout=layout, interpret=interpret)
 
     for _ in range(warmup):
         jax.block_until_ready(run())
@@ -402,6 +416,7 @@ def autotune_gemm(
     backend: str = "pallas",
     epilogue: Optional[str] = None,
     with_bias: bool = False,
+    layout: str = "nn",
     vmem_budget: int = tiling.DEFAULT_VMEM_BUDGET,
     max_candidates: int = 16,
     mode: Optional[str] = None,
@@ -411,7 +426,9 @@ def autotune_gemm(
 
     ``mode``: "measured" forces wall-clock timing, "model" forces the
     analytic cost model; None picks "measured" exactly when the program is
-    actually running on a TPU (anything else would time the interpreter)."""
+    actually running on a TPU (anything else would time the interpreter).
+    ``layout`` tunes (and keys) a transpose-layout dispatch — pass "nt" /
+    "tn" to warm the cache for the Engine's backward GEMMs."""
     policy = prec.resolve(policy)
     if mode is None:
         mode = ("measured" if jax.default_backend() == "tpu"
@@ -427,7 +444,8 @@ def autotune_gemm(
     for t in cands:
         if mode == "measured":
             us = measured_cost_us(m, n, k, t, policy=policy,
-                                  epilogue=epilogue, with_bias=with_bias)
+                                  epilogue=epilogue, with_bias=with_bias,
+                                  layout=layout)
         else:
             us = predicted_cost_us(m, n, k, t, policy=policy)
         scores.append(((t.bm, t.bn, t.bk), us))
@@ -436,7 +454,7 @@ def autotune_gemm(
     assert best is not None, "no tile candidates fit the VMEM budget"
 
     key = canonical_key(m, n, k, policy=policy, backend=backend,
-                        epilogue=epilogue)
+                        epilogue=epilogue, layout=layout)
     if record:
         record_tile(key, best, source=mode, us=best_us)
     return AutotuneResult(key=key, tile=best, us=best_us, source=mode,

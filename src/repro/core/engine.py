@@ -42,12 +42,48 @@ re-runs without re-tracing, so wrap the tracing call (``.lower()``,
 that traces a loop body once but executes it N times (``lax.scan`` layer
 stacks, q-chunk loops, grad-accumulation) wraps the scan in
 :func:`repeat` so each event carries the right multiplicity.
+
+**The backward contract.**  Every op in the family carries a
+``jax.custom_vjp``, so ``jax.grad`` through an Engine op re-enters the
+Engine instead of falling back to XLA-derived ``dot_general`` transposes:
+
+* the VJP rules dispatch dX = dZ·Wᵀ and dW = Xᵀ·dZ through the same
+  backend registry, as **transpose-layout** specs (``spec.layout`` "nt" /
+  "tn") — backends with the ``"layouts"`` capability ("pallas",
+  "interpret", "xla") consume the operands in their forward storage with
+  no materialized transpose (the Pallas kernels run the same
+  X-stationary / store-once schedule with remapped BlockSpecs); for
+  backends without it the engine pre-transposes and dispatches an "nn"
+  spec;
+* backward dispatches emit :class:`GemmEvent`\\ s tagged ``op="matmul_dx"``
+  / ``"matmul_dw"`` (whatever the forward op), so instrumented training
+  traces carry the full fwd+bwd GEMM workload — three tile-stamped events
+  per affine layer;
+* **grad dtypes**: residuals (X, W, and the pre-activation for ``linear``
+  epilogues without an output-form derivative) are saved in the policy's
+  *compute* dtype; backward GEMMs run under the same policy with their
+  output held in the *accum* dtype until the final cast to the primal
+  operand's dtype.  The bias gradient is the accum-dtype row reduction of
+  the pre-activation cotangent;
+* **epilogue derivatives** (``linear``): ``ds = dZ * act'(s)`` uses the
+  derivative registry in :mod:`repro.core.epilogues`.  relu/tanh recover
+  ``act'`` from the fused output (the forward stays fully fused);
+  gelu/silu save the pre-activation, so their forward-for-grad applies
+  the activation post-op (~2 ulp from the fused inference path, same
+  bound as the documented fused-vs-unfused contract);
+* backward events inherit the :func:`repeat` multiplicity captured at
+  *forward* trace time — a GEMM traced in a scanned layer body gets the
+  same ``count`` on its dX/dW events even though JAX traces the backward
+  scan outside the ``repeat`` context.  (Known limitation: ``jax.checkpoint``
+  recompute-forward events re-emitted during the backward trace carry the
+  multiplicity live at *that* point.)
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import os
 import threading
 from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
@@ -79,6 +115,7 @@ __all__ = [
     "linear",
     "grouped_matmul",
     "einsum2d",
+    "is_backward_op",
     "instrument",
     "repeat",
     "paused",
@@ -110,6 +147,17 @@ class GemmSpec:
         ``choose_tiles`` heuristic; the Engine resolves it before emitting
         the event, so instrumentation always sees the real block geometry).
       epilogue: fused epilogue activation name for ``linear`` (or None).
+      layout: operand storage of the logical contraction — "nn" (forward),
+        "nt" (w stored transposed; the dX dispatch) or "tn" (x stored
+        transposed; the dW dispatch).  m/n/k keep their *logical* meaning
+        in every layout, so flops/bytes are layout-invariant.
+      valid_rows: for ragged grouped GEMMs, the total valid rows of the
+        ragged dimension summed over groups (``sum(min(group_sizes, dim))``)
+        when statically known — replaces ``groups * <ragged dim>`` in the
+        flops/bytes accounting so masked rows are not billed.  None means
+        dense (or the sizes were traced and unknowable at trace time).
+      ragged_dim: which logical dim ``valid_rows`` masks — "m" (forward and
+        dX: ragged output rows) or "n" (dW: ragged contraction rows).
     """
 
     op: str
@@ -124,11 +172,19 @@ class GemmSpec:
     epilogue: Optional[str] = None
     # the weight operand is shared across the batch (read once per group)
     w_shared: bool = False
+    layout: str = "nn"
+    valid_rows: Optional[int] = None
+    ragged_dim: str = "m"
 
     @property
     def flops(self) -> int:
-        """MAC-derived flops of one execution (2 * B * G * M * N * K)."""
-        return 2 * self.batch * self.groups * self.m * self.n * self.k
+        """MAC-derived flops of one execution (2 * B * G * M * N * K; for
+        ragged grouped GEMMs ``valid_rows`` replaces ``G * <ragged dim>``)."""
+        if self.valid_rows is None:
+            return 2 * self.batch * self.groups * self.m * self.n * self.k
+        if self.ragged_dim == "m":
+            return 2 * self.batch * self.valid_rows * self.n * self.k
+        return 2 * self.batch * self.m * self.valid_rows * self.k
 
     @property
     def bytes(self) -> int:
@@ -136,13 +192,26 @@ class GemmSpec:
 
         When ``w_shared`` the weight operand is read once per group, not
         once per batch element (weight GEMMs: one (N, K) matrix serves the
-        whole batch)."""
+        whole batch).  Ragged grouped GEMMs (``valid_rows``) bill only the
+        valid rows of the ragged operand(s) and — for ``ragged_dim == "m"``
+        — of the output."""
         cb = jnp.dtype(self.policy.compute_dtype).itemsize
         ob = jnp.dtype(self.policy.out_dtype).itemsize
         bg = self.batch * self.groups
-        w_copies = self.groups if self.w_shared else bg
-        return (bg * (self.m * self.n * cb + self.m * self.k * ob)
-                + w_copies * self.n * self.k * cb)
+        if self.valid_rows is None:
+            x_elems = bg * self.m * self.n
+            z_elems = bg * self.m * self.k
+            w_elems = (self.groups if self.w_shared else bg) * self.n * self.k
+        elif self.ragged_dim == "m":
+            x_elems = self.batch * self.valid_rows * self.n
+            z_elems = self.batch * self.valid_rows * self.k
+            w_elems = (self.groups if self.w_shared else bg) * self.n * self.k
+        else:  # ragged contraction rows (the dW dispatch)
+            x_elems = self.batch * self.m * self.valid_rows
+            z_elems = bg * self.m * self.k
+            w_elems = (self.groups * self.n if self.w_shared
+                       else self.batch * self.valid_rows) * self.k
+        return x_elems * cb + z_elems * ob + w_elems * cb
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +243,15 @@ class GemmEvent:
     @property
     def total_bytes(self) -> int:
         return self.spec.bytes * self.count
+
+
+def is_backward_op(op: str) -> bool:
+    """True for op tags emitted by the Engine's VJP rules (dX / dW).
+
+    The single source of truth for the fwd/bwd event split —
+    :mod:`repro.roofline.analysis` and :mod:`repro.core.perf_model` both
+    defer here."""
+    return op.endswith(("_dx", "_dw"))
 
 
 def total_flops(events: Sequence[GemmEvent]) -> int:
@@ -223,6 +301,12 @@ class BackendSpec:
     * ``"tiled"`` — ``fn`` honors ``spec.tile`` as its block geometry (the
       engine resolves a tile for every dispatch regardless, for
       instrumentation; untiled backends simply ignore it).
+    * ``"layouts"`` — ``fn`` honors ``spec.layout`` ("nn" | "nt" | "tn"):
+      operands arrive in the storage the layout names (the Engine's
+      backward dispatches pass W / X in their forward storage) and the
+      backend contracts accordingly without materializing a transpose.
+      Backends *without* this flag only ever see "nn" specs — the engine
+      pre-transposes backward operands before dispatching to them.
     """
 
     name: str
@@ -261,7 +345,7 @@ def register_backend(
     if not name or not isinstance(name, str):
         raise ValueError(f"backend name must be a non-empty string, got {name!r}")
     caps = frozenset(capabilities)
-    unknown = caps - {"fused_epilogue", "tiled"}
+    unknown = caps - {"fused_epilogue", "tiled", "layouts"}
     if unknown:
         raise ValueError(f"unknown backend capabilities: {sorted(unknown)}")
     spec = BackendSpec(name=name, fn=fn, available=available,
@@ -410,11 +494,19 @@ def repeat(n: int):
         stack.pop()
 
 
-def _emit(spec: GemmSpec, backend: str) -> None:
+def _emit(spec: GemmSpec, backend: str,
+          count: Optional[int] = None) -> None:
+    """Append one event to every active collector.
+
+    ``count`` overrides the live :func:`repeat` multiplier — backward
+    dispatches pass the multiplicity captured at *forward* trace time,
+    because JAX traces the backward of a scanned body outside the
+    ``repeat`` context that wrapped the scan."""
     stack = _collectors()
     if not stack or getattr(_state, "paused", False):
         return
-    ev = GemmEvent(spec=spec, backend=backend, count=_repeat_multiplier())
+    ev = GemmEvent(spec=spec, backend=backend,
+                   count=_repeat_multiplier() if count is None else count)
     for events in stack:
         events.append(ev)
 
@@ -423,13 +515,21 @@ def _emit(spec: GemmSpec, backend: str) -> None:
 # Built-in backends
 # --------------------------------------------------------------------- #
 def _xla_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec) -> jax.Array:
-    """``lax.dot_general`` with the engine's accumulation policy."""
+    """``lax.dot_general`` with the engine's accumulation policy.
+
+    Honors ``spec.layout`` ("layouts" capability): the contraction axis of
+    each operand moves with the storage, so transpose-layout backward
+    dispatches lower to a single ``dot_general`` — XLA fuses the transposed
+    access into the dot, no materialized transpose."""
     policy = spec.policy
-    if xc.ndim > 2 and wc.ndim == 2:
+    # per-layout contraction axis, counted from the end of each operand
+    x_coff = 2 if spec.layout == "tn" else 1   # x stored (N, M) under tn
+    w_coff = 1 if spec.layout == "nt" else 2   # w stored (K, N) under nt
+    if xc.ndim > 2 and wc.ndim == 2 and spec.layout != "tn":
         # weight GEMM: single dot over collapsed leading dims
         return jax.lax.dot_general(
             xc, wc,
-            (((xc.ndim - 1,), (0,)), ((), ())),
+            (((xc.ndim - 1,), (wc.ndim - w_coff,)), ((), ())),
             preferred_element_type=policy.accum_dtype,
         )
     x_batch = tuple(range(xc.ndim - 2)) if xc.ndim > 2 else ()
@@ -441,7 +541,7 @@ def _xla_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec) -> jax.Array:
         x_batch = w_batch = tuple(range(len(lead)))
     return jax.lax.dot_general(
         xc, wc,
-        (((xc.ndim - 1,), (wc.ndim - 2,)), (x_batch, w_batch)),
+        (((xc.ndim - x_coff,), (wc.ndim - w_coff,)), (x_batch, w_batch)),
         preferred_element_type=policy.accum_dtype,
     )
 
@@ -453,33 +553,34 @@ def _pallas_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
 
     With ``fuse_epilogue=True`` the bias row and ``spec.epilogue`` are
     folded into the kernel's store-once step (the "fused_epilogue"
-    capability contract)."""
+    capability contract) — on the 2D *and* the batched-grid kernel.
+    ``spec.layout`` selects the transpose-layout kernel entry points
+    (the "layouts" capability): backward operands stay in their forward
+    storage, the BlockSpec walk changes instead."""
     from repro.kernels import ops  # local import: kernels depend on core
 
-    policy, tile = spec.policy, spec.tile
-    if wc.ndim == 2:
+    policy, tile, layout = spec.policy, spec.tile, spec.layout
+    kw = dict(policy=policy, tile=tile, layout=layout, interpret=interpret,
+              bias=bias if fuse_epilogue else None,
+              epilogue=spec.epilogue if fuse_epilogue else None)
+    if wc.ndim == 2 and (xc.ndim == 2 or layout != "tn"):
+        # weight GEMM: collapse leading dims into rows (nn/nt store the
+        # logical M in x's second-to-last dim, so the collapse is exact)
         lead = xc.shape[:-2]
         x2 = xc.reshape((-1, xc.shape[-1])) if lead else xc
-        z2 = ops.redmule_matmul(
-            x2, wc, policy=policy, tile=tile,
-            bias=bias if fuse_epilogue else None,
-            epilogue=spec.epilogue if fuse_epilogue else None,
-            interpret=interpret)
-        return z2.reshape((*lead, xc.shape[-2], wc.shape[-1]))
-    if fuse_epilogue:
-        # the batched-grid kernel carries no bias operand yet (linear is
-        # 2D-weight only); failing loudly beats silently dropping the
-        # epilogue the capability flag promises
-        raise NotImplementedError(
-            "fused epilogue is not implemented for batched (3D) weights")
+        z2 = ops.redmule_matmul(x2, wc, **kw)
+        m = xc.shape[-1] if layout == "tn" else xc.shape[-2]
+        k = wc.shape[-2] if layout == "nt" else wc.shape[-1]
+        return z2.reshape((*lead, m, k))
     lead = np.broadcast_shapes(xc.shape[:-2], wc.shape[:-2])
     xb = jnp.broadcast_to(xc, (*lead, *xc.shape[-2:])).reshape(
         (-1, *xc.shape[-2:]))
     wb = jnp.broadcast_to(wc, (*lead, *wc.shape[-2:])).reshape(
         (-1, *wc.shape[-2:]))
-    z = ops.redmule_matmul_batched(xb, wb, policy=policy, tile=tile,
-                                   interpret=interpret)
-    return z.reshape((*lead, xc.shape[-2], wc.shape[-1]))
+    z = ops.redmule_matmul_batched(xb, wb, **kw)
+    m = xc.shape[-1] if layout == "tn" else xc.shape[-2]
+    k = wc.shape[-2] if layout == "nt" else wc.shape[-1]
+    return z.reshape((*lead, m, k))
 
 
 def _interpret_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
@@ -491,27 +592,363 @@ def _interpret_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
 
 register_backend(
     "xla", _xla_fn,
+    capabilities=("layouts",),
     description="lax.dot_general with the engine's precision policy "
                 "(production fallback; XLA:CPU dry-runs; epilogues applied "
-                "post-op by the engine)")
+                "post-op by the engine; transpose layouts fold into the "
+                "dot's dimension numbers)")
 register_backend(
     "pallas", _pallas_fn,
     available=lambda: jax.default_backend() == "tpu",
-    capabilities=("fused_epilogue", "tiled"),
+    capabilities=("fused_epilogue", "tiled", "layouts"),
     description="TPU Pallas RedMulE kernel (X-stationary, W-streamed, "
                 "VMEM fp32 scratch, store-once Z with the bias+activation "
-                "epilogue fused into the store)")
+                "epilogue fused into the store; nt/tn entry points serve "
+                "the backward pass without materialized transposes)")
 register_backend(
     "interpret", _interpret_fn,
-    capabilities=("fused_epilogue", "tiled"),
+    capabilities=("fused_epilogue", "tiled", "layouts"),
     description="the same Pallas kernel body in interpreter mode "
                 "(CPU CI; bit-faithful to the kernel's schedule, fused "
-                "epilogue included)")
+                "epilogue and transpose layouts included)")
 
 
 # Fused epilogue registry — shared with the kernels (repro.core.epilogues)
 # so the in-kernel and post-op paths can never drift apart.
 _EPILOGUES: Dict[str, Callable[[jax.Array], jax.Array]] = epi.EPILOGUES
+
+
+# --------------------------------------------------------------------- #
+# Tile resolution (module-level so the VJP rules can resolve backward
+# tiles without an Engine instance)
+# --------------------------------------------------------------------- #
+def _resolve_tile(
+    tile: Optional[tiling.TileConfig],
+    *,
+    m: int,
+    n: int,
+    k: int,
+    policy: prec.Policy,
+    backend: str,
+    epilogue: Optional[str] = None,
+    layout: str = "nn",
+) -> tiling.TileConfig:
+    """Tile precedence: explicit arg > autotune cache > heuristic."""
+    if tile is not None:
+        return tile
+    t = autotune.cached_tile(m, n, k, policy=policy, backend=backend,
+                             epilogue=epilogue, layout=layout)
+    if t is not None:
+        return t
+    return tiling.choose_tiles(
+        m, n, k, compute_dtype=policy.compute_dtype,
+        accum_dtype=policy.accum_dtype)
+
+
+# --------------------------------------------------------------------- #
+# Custom-VJP dispatch: forward AND backward GEMMs through the registry
+# --------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=None)
+def _grad_policy(policy: prec.Policy) -> prec.Policy:
+    """The backward-dispatch policy: same datapath, output held in the
+    accumulation dtype (the final cast to the primal operand dtype happens
+    once, at the custom-VJP boundary)."""
+    return dataclasses.replace(policy, name=policy.name + "+grad",
+                               output_dtype=policy.accum_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class _GradCtx:
+    """Static context threaded through a custom-VJP op (hashable: rides as
+    a ``nondiff_argnums`` argument).
+
+    ``count`` is the :func:`repeat` multiplicity captured when the engine
+    method traced the forward — backward emissions reuse it, because the
+    backward of a scanned body is traced after the scan's ``repeat``
+    context has exited."""
+
+    spec: GemmSpec
+    backend: str
+    count: int
+    x_dtype: str
+    w_dtype: str
+    b_dtype: Optional[str] = None
+    fuse: bool = False          # linear: backend runs the fused-epilogue path
+
+
+def _make_ctx(spec: GemmSpec, backend: str, x, w, b=None,
+              fuse: bool = False) -> _GradCtx:
+    return _GradCtx(
+        spec=spec, backend=backend, count=_repeat_multiplier(),
+        x_dtype=jnp.dtype(x.dtype).name, w_dtype=jnp.dtype(w.dtype).name,
+        b_dtype=None if b is None else jnp.dtype(b.dtype).name,
+        fuse=fuse)
+
+
+def _dispatch(spec: GemmSpec, backend: str, xc: jax.Array,
+              wc: jax.Array) -> jax.Array:
+    """Emit + run one pure-GEMM dispatch on compute-dtype operands; returns
+    the backend-native result (xla: accum dtype; pallas: stored dtype)."""
+    _emit(spec, backend)
+    return get_backend(backend).fn(xc, wc, spec=spec)
+
+
+def _static_valid_rows(group_sizes, m: int) -> Optional[int]:
+    """``sum(clip(group_sizes, 0, m))`` when concrete at trace time, else
+    None (a traced ragged spec falls back to the dense count)."""
+    if group_sizes is None:
+        return None
+    try:
+        sizes = np.asarray(group_sizes)
+    except Exception:
+        return None
+    return int(np.clip(sizes, 0, m).sum())
+
+
+def _unbroadcast(g: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+    """Sum a gradient down to the (possibly broadcast) primal shape."""
+    extra = g.ndim - len(shape)
+    if extra:
+        g = g.sum(axis=tuple(range(extra)))
+    axes = tuple(i for i, (gs, ss) in enumerate(zip(g.shape, shape))
+                 if ss == 1 and gs != 1)
+    if axes:
+        g = g.sum(axis=axes, keepdims=True)
+    return g
+
+
+def _grad_dispatch(spec: GemmSpec, backend: str, a: jax.Array, b: jax.Array,
+                   count: int) -> jax.Array:
+    """One backward GEMM through the registry.
+
+    ``spec`` carries a transpose layout; backends without the "layouts"
+    capability get pre-transposed operands and an equivalent "nn" spec
+    (same logical m/n/k, same event accounting)."""
+    if spec.layout != "nn" and not get_backend(backend).supports("layouts"):
+        if spec.layout == "nt":
+            b = jnp.swapaxes(b, -1, -2)
+        else:
+            a = jnp.swapaxes(a, -1, -2)
+        spec = dataclasses.replace(spec, layout="nn")
+    _emit(spec, backend, count=count)
+    out = get_backend(backend).fn(a, b, spec=spec)
+    return out.astype(spec.policy.out_dtype)   # grad policy: accum dtype
+
+
+def _bwd_gemms(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
+               dzc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """dX = dZ·Wᵀ ("nt") and dW = Xᵀ·dZ ("tn"), both Engine dispatches.
+
+    ``dzc`` is the (pre-activation) cotangent in the compute dtype; the
+    returned grads are in the *accum* dtype (the caller casts to the
+    primal dtypes)."""
+    spec = ctx.spec
+    gpol = _grad_policy(spec.policy)
+    bk = ctx.backend
+
+    if wc.ndim == 2:
+        # weight GEMM — dW collapses all leading dims into one fat
+        # contraction (the X-stationary schedule reads X in its forward
+        # storage: no materialized transpose)
+        dx_spec = GemmSpec(
+            op="matmul_dx", tag="mk,nk->mn", layout="nt",
+            m=spec.m, n=spec.k, k=spec.n, batch=spec.batch,
+            policy=gpol, w_shared=True,
+            valid_rows=spec.valid_rows, ragged_dim="m",
+            tile=_resolve_tile(None, m=spec.m, n=spec.k, k=spec.n,
+                               policy=gpol, backend=bk, layout="nt"),
+        )
+        dx = _grad_dispatch(dx_spec, bk, dzc, wc, ctx.count)
+
+        x2 = xc.reshape((-1, xc.shape[-1]))
+        dz2 = dzc.reshape((-1, dzc.shape[-1]))
+        rows = x2.shape[0]                      # batch * M
+        dw_spec = GemmSpec(
+            op="matmul_dw", tag="mn,mk->nk", layout="tn",
+            m=spec.n, n=rows, k=spec.k, batch=1,
+            policy=gpol, w_shared=False,
+            tile=_resolve_tile(None, m=spec.n, n=rows, k=spec.k,
+                               policy=gpol, backend=bk, layout="tn"),
+        )
+        dw = _grad_dispatch(dw_spec, bk, x2, dz2, ctx.count)
+        return dx, dw
+
+    # batched / grouped GEMM: both grads stay batched; broadcast leading
+    # dims are summed back down to the primal shapes afterwards
+    dx_spec = GemmSpec(
+        op="matmul_dx", tag="bmk,bnk->bmn", layout="nt",
+        m=spec.m, n=spec.k, k=spec.n, batch=spec.batch, groups=spec.groups,
+        policy=gpol, w_shared=spec.w_shared,
+        valid_rows=spec.valid_rows, ragged_dim="m",
+        tile=_resolve_tile(None, m=spec.m, n=spec.k, k=spec.n,
+                           policy=gpol, backend=bk, layout="nt"),
+    )
+    dx = _unbroadcast(_grad_dispatch(dx_spec, bk, dzc, wc, ctx.count),
+                      xc.shape)
+
+    dw_spec = GemmSpec(
+        op="matmul_dw", tag="bmn,bmk->bnk", layout="tn",
+        m=spec.n, n=spec.m, k=spec.k, batch=spec.batch, groups=spec.groups,
+        policy=gpol, w_shared=False,
+        valid_rows=spec.valid_rows,
+        ragged_dim="n" if spec.valid_rows is not None else "m",
+        tile=_resolve_tile(None, m=spec.n, n=spec.m, k=spec.k,
+                           policy=gpol, backend=bk, layout="tn"),
+    )
+    dw = _unbroadcast(_grad_dispatch(dw_spec, bk, xc, dzc, ctx.count),
+                      wc.shape)
+    return dx, dw
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _gemm_call(ctx: _GradCtx, x: jax.Array, w: jax.Array) -> jax.Array:
+    """Pure-GEMM op with a custom VJP (matmul / grouped_matmul / einsum2d
+    inner dispatch / epilogue-free linear)."""
+    pol = ctx.spec.policy
+    z = _dispatch(ctx.spec, ctx.backend, x.astype(pol.compute_dtype),
+                  w.astype(pol.compute_dtype))
+    return z.astype(pol.out_dtype)
+
+
+def _gemm_fwd(ctx: _GradCtx, x: jax.Array, w: jax.Array):
+    pol = ctx.spec.policy
+    xc = x.astype(pol.compute_dtype)
+    wc = w.astype(pol.compute_dtype)
+    z = _dispatch(ctx.spec, ctx.backend, xc, wc).astype(pol.out_dtype)
+    return z, (xc, wc)      # residuals in the compute dtype
+
+
+def _gemm_bwd(ctx: _GradCtx, res, dz: jax.Array):
+    xc, wc = res
+    dzc = dz.astype(ctx.spec.policy.compute_dtype)
+    dx, dw = _bwd_gemms(ctx, xc, wc, dzc)
+    return dx.astype(ctx.x_dtype), dw.astype(ctx.w_dtype)
+
+
+_gemm_call.defvjp(_gemm_fwd, _gemm_bwd)
+
+
+def _linear_primal(ctx: _GradCtx, x: jax.Array, w: jax.Array,
+                   b: Optional[jax.Array]) -> jax.Array:
+    """Inference-path linear: fused epilogue on capable backends, post-op
+    otherwise (exactly the PR-2 contract)."""
+    spec, bk = ctx.spec, ctx.backend
+    pol = spec.policy
+    xc = x.astype(pol.compute_dtype)
+    wc = w.astype(pol.compute_dtype)
+    has_epilogue = b is not None or spec.epilogue is not None
+    if has_epilogue and ctx.fuse:
+        bc = None if b is None else b.astype(pol.accum_dtype)
+        _emit(spec, bk)
+        z = get_backend(bk).fn(xc, wc, spec=spec, bias=bc,
+                               fuse_epilogue=True)
+        return z.astype(pol.out_dtype)
+    z = _dispatch(spec, bk, xc, wc)
+    if has_epilogue:
+        za = z.astype(pol.accum_dtype)
+        if b is not None:
+            za = za + b.astype(pol.accum_dtype)
+        za = epi.apply_epilogue(spec.epilogue, za)
+        z = za
+    return z.astype(pol.out_dtype)
+
+
+def _linear_fwd_core(ctx: _GradCtx, x: jax.Array, w: jax.Array,
+                     b: Optional[jax.Array]):
+    """Forward-for-grad: decide what to save for the epilogue derivative.
+
+    * no activation — fused/post-op forward unchanged; residual aux=None;
+    * activation with an output-form derivative (relu/tanh) — fully fused
+      forward unchanged; save the output z;
+    * otherwise (gelu/silu) — dispatch with the bias fused but the
+      activation post-op, save the pre-activation s (compute dtype).  The
+      value differs from the fused inference path by the documented ~2 ulp
+      fused-vs-post-op bound."""
+    spec, bk = ctx.spec, ctx.backend
+    pol = spec.policy
+    act = spec.epilogue
+    xc = x.astype(pol.compute_dtype)
+    wc = w.astype(pol.compute_dtype)
+    if act is None:
+        z = _linear_primal(ctx, x, w, b)
+        return z, (xc, wc, None)
+    grad = epi.epilogue_grad(act)
+    if grad.deriv_from_output is not None:
+        z = _linear_primal(ctx, x, w, b)
+        return z, (xc, wc, z)
+    # pre-activation needed: bias-fused (or post-op) GEMM, activation after
+    if ctx.fuse:
+        bc = None if b is None else b.astype(pol.accum_dtype)
+        _emit(spec, bk)
+        s = get_backend(bk).fn(
+            xc, wc, spec=dataclasses.replace(spec, epilogue=None),
+            bias=bc, fuse_epilogue=True)
+        sa = s.astype(pol.accum_dtype)
+    else:
+        s = _dispatch(spec, bk, xc, wc)
+        sa = s.astype(pol.accum_dtype)
+        if b is not None:
+            sa = sa + b.astype(pol.accum_dtype)
+    z = epi.apply_epilogue(act, sa).astype(pol.out_dtype)
+    return z, (xc, wc, sa.astype(pol.compute_dtype))
+
+
+def _linear_bwd_core(ctx: _GradCtx, res, dz: jax.Array):
+    """Shared linear backward: activation derivative, bias-grad reduction,
+    then the two backward GEMMs."""
+    xc, wc, aux = res
+    spec = ctx.spec
+    pol = spec.policy
+    act = spec.epilogue
+    dza = dz.astype(pol.accum_dtype)
+    if act is not None:
+        grad = epi.epilogue_grad(act)
+        if grad.deriv_from_output is not None:
+            dza = dza * grad.deriv_from_output(aux.astype(pol.accum_dtype))
+        else:
+            dza = dza * grad.deriv(aux.astype(pol.accum_dtype))
+    db = None
+    if ctx.b_dtype is not None:
+        # bias grad: accum-dtype reduction over every row of the cotangent
+        db = dza.sum(axis=tuple(range(dza.ndim - 1))).astype(ctx.b_dtype)
+    dx, dw = _bwd_gemms(ctx, xc, wc, dza.astype(pol.compute_dtype))
+    return dx.astype(ctx.x_dtype), dw.astype(ctx.w_dtype), db
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _linear_call(ctx: _GradCtx, x: jax.Array, w: jax.Array,
+                 b: jax.Array) -> jax.Array:
+    return _linear_primal(ctx, x, w, b)
+
+
+def _linear_call_fwd(ctx, x, w, b):
+    return _linear_fwd_core(ctx, x, w, b)
+
+
+def _linear_call_bwd(ctx, res, dz):
+    dx, dw, db = _linear_bwd_core(ctx, res, dz)
+    return dx, dw, db
+
+
+_linear_call.defvjp(_linear_call_fwd, _linear_call_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _linear_call_nobias(ctx: _GradCtx, x: jax.Array,
+                        w: jax.Array) -> jax.Array:
+    return _linear_primal(ctx, x, w, None)
+
+
+def _linear_nobias_fwd(ctx, x, w):
+    return _linear_fwd_core(ctx, x, w, None)
+
+
+def _linear_nobias_bwd(ctx, res, dz):
+    dx, dw, _ = _linear_bwd_core(ctx, res, dz)
+    return dx, dw
+
+
+_linear_call_nobias.defvjp(_linear_nobias_fwd, _linear_nobias_bwd)
 
 
 # --------------------------------------------------------------------- #
@@ -561,37 +998,18 @@ class Engine:
         policy: prec.Policy,
         backend: str,
         epilogue: Optional[str] = None,
+        layout: str = "nn",
     ) -> tiling.TileConfig:
         """Tile precedence: explicit arg > autotune cache > heuristic.
 
         Runs for every dispatch (so the emitted :class:`GemmEvent` always
         carries the tile the kernel would use); both fallbacks are cheap —
         the autotune lookup is a dict hit and ``choose_tiles`` is memoized.
-        """
-        if tile is not None:
-            return tile
-        t = autotune.cached_tile(m, n, k, policy=policy, backend=backend,
-                                 epilogue=epilogue)
-        if t is not None:
-            return t
-        return tiling.choose_tiles(
-            m, n, k, compute_dtype=policy.compute_dtype,
-            accum_dtype=policy.accum_dtype)
-
-    # -- dispatch core ------------------------------------------------- #
-    def _execute_raw(self, spec: GemmSpec, backend: str, x: jax.Array,
-                     w: jax.Array) -> jax.Array:
-        """Dispatch and return the backend-native result (xla: accumulation
-        dtype; pallas: the kernel's stored output dtype)."""
-        xc = x.astype(spec.policy.compute_dtype)
-        wc = w.astype(spec.policy.compute_dtype)
-        _emit(spec, backend)
-        return get_backend(backend).fn(xc, wc, spec=spec)
-
-    def _execute(self, spec: GemmSpec, backend: str, x: jax.Array,
-                 w: jax.Array) -> jax.Array:
-        return self._execute_raw(spec, backend, x, w).astype(
-            spec.policy.out_dtype)
+        Backward dispatches resolve their own tiles with ``layout`` "nt" /
+        "tn" and the transposed problem shape in the key."""
+        return _resolve_tile(tile, m=m, n=n, k=k, policy=policy,
+                             backend=backend, epilogue=epilogue,
+                             layout=layout)
 
     # -- op family ----------------------------------------------------- #
     def matmul(
@@ -608,7 +1026,12 @@ class Engine:
         Shapes: ``x: (..., M, N)``, ``w: (N, K)`` (weight GEMM) or
         ``w: (..., N, K)`` with broadcast-compatible leading dims (batched
         GEMM, e.g. attention).  Output: ``(..., M, K)`` in the policy's
-        output dtype."""
+        output dtype.
+
+        Differentiable end to end: ``jax.grad`` dispatches dX = dZ·Wᵀ and
+        dW = Xᵀ·dZ through the backend registry as transpose-layout specs
+        tagged ``matmul_dx`` / ``matmul_dw`` (see the module docstring's
+        backward contract)."""
         policy = self.resolve_policy(policy)
         b = self.resolve_backend(backend)
         if x.ndim < 2 or w.ndim < 2:
@@ -629,7 +1052,7 @@ class Engine:
             batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
             policy=policy, tile=tile, w_shared=(w.ndim == 2),
         )
-        return self._execute(spec, b, x, w)
+        return _gemm_call(_make_ctx(spec, b, x, w), x, w)
 
     def linear(
         self,
@@ -661,44 +1084,48 @@ class Engine:
         the out-dtype rounding while the unfused path re-widens the
         already-rounded store — results agree to ~2 ulp of the output
         dtype (the fused value is the more accurate one).  The equivalence
-        suite in tests/test_engine.py pins exactly this contract."""
+        suite in tests/test_engine.py pins exactly this contract.  Batched
+        weights ``(..., N, K)`` get the same contract on the batched-grid
+        kernel (bias row shared across the batch).
+
+        Backward (see the module docstring): ``jax.grad`` applies the
+        activation derivative (``ds = dZ·act'(s)``, registry in
+        :mod:`repro.core.epilogues`), reduces the bias grad in the accum
+        dtype, and dispatches dX/dW through the registry as
+        ``matmul_dx`` / ``matmul_dw`` transpose-layout GEMMs."""
         policy = self.resolve_policy(policy)
         bk = self.resolve_backend(backend)
         epi.validate_epilogue(activation)
-        if x.ndim < 2 or w.ndim != 2:
-            raise ValueError(f"linear needs x>=2D, w 2D; got {x.shape} @ {w.shape}")
-        if x.shape[-1] != w.shape[0]:
+        if x.ndim < 2 or w.ndim < 2:
+            raise ValueError(f"linear needs x>=2D, w>=2D; got {x.shape} @ {w.shape}")
+        if x.shape[-1] != w.shape[-2]:
             raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
         if b is not None and b.shape != (w.shape[-1],):
             raise ValueError(
                 f"bias must have shape ({w.shape[-1]},), got {b.shape}")
-        lead = x.shape[:-2]
+        if w.ndim == 2:
+            lead = x.shape[:-2]
+            tag = "mn,nk->mk"
+        else:
+            lead = np.broadcast_shapes(x.shape[:-2], w.shape[:-2])
+            tag = "bmn,bnk->bmk"
         m, n, k = x.shape[-2], x.shape[-1], w.shape[-1]
         tile = self.resolve_tile(tile, m=m, n=n, k=k, policy=policy,
                                  backend=bk, epilogue=activation)
         spec = GemmSpec(
-            op="linear", tag="mn,nk->mk", m=m, n=n, k=k,
+            op="linear", tag=tag, m=m, n=n, k=k,
             batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
-            policy=policy, tile=tile, epilogue=activation, w_shared=True,
+            policy=policy, tile=tile, epilogue=activation,
+            w_shared=(w.ndim == 2),
         )
         has_epilogue = b is not None or activation is not None
-        if has_epilogue and get_backend(bk).supports("fused_epilogue"):
-            xc = x.astype(policy.compute_dtype)
-            wc = w.astype(policy.compute_dtype)
-            bc = None if b is None else b.astype(policy.accum_dtype)
-            _emit(spec, bk)
-            z = get_backend(bk).fn(xc, wc, spec=spec, bias=bc,
-                                   fuse_epilogue=True)
-            return z.astype(policy.out_dtype)
-        z = self._execute_raw(spec, bk, x, w)
-        if has_epilogue:
-            za = z.astype(policy.accum_dtype)
-            if b is not None:
-                za = za + b.astype(policy.accum_dtype)
-            if activation is not None:
-                za = _EPILOGUES[activation](za)
-            z = za
-        return z.astype(policy.out_dtype)
+        fuse = has_epilogue and get_backend(bk).supports("fused_epilogue")
+        if not has_epilogue:
+            return _gemm_call(_make_ctx(spec, bk, x, w), x, w)
+        ctx = _make_ctx(spec, bk, x, w, b, fuse=fuse)
+        if b is None:
+            return _linear_call_nobias(ctx, x, w)
+        return _linear_call(ctx, x, w, b)
 
     def grouped_matmul(
         self,
@@ -719,7 +1146,16 @@ class Engine:
 
         ``group_sizes`` (optional, shape ``(G,)`` int) marks the number of
         valid M rows per group for ragged workloads; output rows at or
-        beyond a group's size are zeroed."""
+        beyond a group's size are zeroed.  When the sizes are statically
+        known (concrete at trace time) the emitted :class:`GemmEvent`
+        carries ``valid_rows = sum(min(size, M))`` so flops/bytes scale
+        with the *valid* work, not ``G * M`` — forward and backward alike.
+        Traced (data-dependent) sizes fall back to the dense count.
+
+        Backward: dX/dW run as batched transpose-layout dispatches per
+        group (``matmul_dx`` / ``matmul_dw`` events); the masked rows'
+        cotangent is zeroed by the ``where``'s own autodiff, so invalid
+        rows contribute nothing to dW."""
         policy = self.resolve_policy(policy)
         b = self.resolve_backend(backend)
         if x.ndim < 3 or w.ndim != 3:
@@ -740,8 +1176,9 @@ class Engine:
             batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
             groups=w.shape[0],
             policy=policy, tile=tile, w_shared=True,
+            valid_rows=_static_valid_rows(group_sizes, m), ragged_dim="m",
         )
-        z = self._execute(spec, b, x, w)
+        z = _gemm_call(_make_ctx(spec, b, x, w), x, w)
         if group_sizes is not None:
             valid = (jnp.arange(spec.m)[None, :]
                      < jnp.asarray(group_sizes)[:, None])      # (G, M)
@@ -796,7 +1233,11 @@ class Engine:
         else:
             x2 = xt.reshape(m, c)
             w2 = wt.reshape(c, k)
-        z = self._execute(spec, b, x2, w2)
+        # the custom VJP lives on the inner 2D/batched dispatch; the
+        # surrounding transposes/reshapes/sums are linear ops JAX
+        # differentiates natively, so einsum2d's backward GEMMs are
+        # matmul_dx / matmul_dw registry dispatches too
+        z = _gemm_call(_make_ctx(spec, b, x2, w2), x2, w2)
         cur = batch_l + m_l + k_l
         z = z.reshape([dims[l] for l in cur])
         return jnp.transpose(z, [cur.index(l) for l in out_lab])

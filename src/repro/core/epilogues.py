@@ -11,16 +11,42 @@ paths can never drift apart.
 Every function here is built from plain ``jnp``/``jax.nn`` primitives that
 lower inside a Pallas TPU kernel body (VPU element-wise ops only — no
 reductions, no reshapes), which is what makes in-kernel fusion possible.
+
+Alongside each activation lives its **derivative** (:data:`EPILOGUE_GRADS`),
+consumed by the Engine's custom-VJP rules for :func:`repro.core.engine.linear`:
+the backward pass needs ``act'(s)`` (``s`` the pre-activation accumulator) to
+turn the output cotangent into the pre-activation cotangent ``ds = dz *
+act'(s)`` before the two backward GEMMs.  Two flavours are registered:
+
+* ``deriv(s)`` — ``act'`` from the *pre-activation* (always present);
+* ``deriv_from_output(z)`` — ``act'`` recovered from the *post-activation*
+  output where the activation is invertible enough (relu: ``z > 0``; tanh:
+  ``1 - z**2``).  When available, the VJP forward keeps the fully fused
+  kernel (bias *and* activation in the store step) and saves only ``z``;
+  otherwise it saves the pre-activation ``s`` and applies the activation
+  post-op during the forward-for-grad trace.
+
+``relu``'s derivative takes the ``s > 0`` branch, i.e. the subgradient 0 at
+the kink — tests exclude inputs at exactly 0.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict
+import dataclasses
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["EPILOGUES", "epilogue_names", "apply_epilogue", "validate_epilogue"]
+__all__ = [
+    "EPILOGUES",
+    "EPILOGUE_GRADS",
+    "EpilogueGrad",
+    "epilogue_names",
+    "apply_epilogue",
+    "validate_epilogue",
+    "epilogue_grad",
+]
 
 # name -> element-wise fn, applied in the accumulation dtype
 EPILOGUES: Dict[str, Callable[[jax.Array], jax.Array]] = {
@@ -28,6 +54,56 @@ EPILOGUES: Dict[str, Callable[[jax.Array], jax.Array]] = {
     "gelu": jax.nn.gelu,
     "silu": jax.nn.silu,
     "tanh": jnp.tanh,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueGrad:
+    """Derivative entry for one registered epilogue.
+
+    ``deriv(s)`` returns ``act'(s)`` element-wise from the pre-activation;
+    ``deriv_from_output(z)`` (optional) returns the same from ``z = act(s)``
+    — registering it lets the Engine's linear VJP keep the fully fused
+    forward kernel and save the output instead of the pre-activation."""
+
+    deriv: Callable[[jax.Array], jax.Array]
+    deriv_from_output: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+def _relu_deriv(s: jax.Array) -> jax.Array:
+    return (s > 0).astype(s.dtype)
+
+
+def _tanh_deriv(s: jax.Array) -> jax.Array:
+    t = jnp.tanh(s)
+    return 1.0 - t * t
+
+
+def _silu_deriv(s: jax.Array) -> jax.Array:
+    sig = jax.nn.sigmoid(s)
+    return sig * (1.0 + s * (1.0 - sig))
+
+
+_GELU_C = 0.7978845608028654  # sqrt(2 / pi)
+_GELU_A = 0.044715
+
+
+def _gelu_deriv(s: jax.Array) -> jax.Array:
+    # derivative of the tanh-approximate gelu (jax.nn.gelu's default form):
+    # g(s) = 0.5 s (1 + tanh(u)),  u = sqrt(2/pi) (s + 0.044715 s^3)
+    u = _GELU_C * (s + _GELU_A * s * s * s)
+    t = jnp.tanh(u)
+    du = _GELU_C * (1.0 + 3.0 * _GELU_A * s * s)
+    return 0.5 * (1.0 + t) + 0.5 * s * (1.0 - t * t) * du
+
+
+EPILOGUE_GRADS: Dict[str, EpilogueGrad] = {
+    "relu": EpilogueGrad(deriv=_relu_deriv,
+                         deriv_from_output=lambda z: (z > 0).astype(z.dtype)),
+    "tanh": EpilogueGrad(deriv=_tanh_deriv,
+                         deriv_from_output=lambda z: 1.0 - z * z),
+    "silu": EpilogueGrad(deriv=_silu_deriv),
+    "gelu": EpilogueGrad(deriv=_gelu_deriv),
 }
 
 
@@ -47,3 +123,9 @@ def apply_epilogue(name, z: jax.Array) -> jax.Array:
     if name is None:
         return z
     return EPILOGUES[name](z)
+
+
+def epilogue_grad(name: str) -> EpilogueGrad:
+    """Derivative entry for epilogue ``name`` (KeyError if unregistered —
+    every :data:`EPILOGUES` entry must have a matching grad)."""
+    return EPILOGUE_GRADS[name]

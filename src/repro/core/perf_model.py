@@ -42,6 +42,7 @@ __all__ = [
     "TABLE1_PUBLISHED",
     "gemms_from_events",
     "workload_cycles_from_events",
+    "workload_cycles_by_direction",
     "dense_forward_gemms",
     "workload_flops",
 ]
@@ -225,7 +226,13 @@ def gemms_from_events(events) -> List[Tuple[GEMM, int]]:
     """Convert engine ``GemmEvent``s into ``(GEMM, multiplicity)`` pairs.
 
     Each batched/grouped dispatch counts as ``batch * groups * count``
-    independent (M, N, K) problems on the accelerator."""
+    independent (M, N, K) problems on the accelerator.  Backward events
+    (``matmul_dx`` / ``matmul_dw`` from the Engine's custom-VJP rules) are
+    ordinary pairs — a value_and_grad trace yields the full train-step
+    workload, fwd and bwd.  Ragged grouped events keep the dense per-group
+    shape here (an upper bound: the cycle model bills the padded tiles the
+    array would sweep; the event's own ``flops``/``bytes`` already scale
+    with ``valid_rows``)."""
     out: List[Tuple[GEMM, int]] = []
     for ev in events:
         s = ev.spec
@@ -234,14 +241,39 @@ def gemms_from_events(events) -> List[Tuple[GEMM, int]]:
     return out
 
 
+def _is_backward(ev) -> bool:
+    # lazy import: this module is pure math with no jax dependency
+    from repro.core.engine import is_backward_op
+
+    return is_backward_op(ev.spec.op)
+
+
 def workload_cycles_from_events(
     model: RedMulEModel, events
 ) -> Tuple[float, float]:
-    """(hw_cycles, sw_cycles) of an instrumented workload on ``model``."""
+    """(hw_cycles, sw_cycles) of an instrumented workload on ``model``.
+
+    Includes the backward GEMMs when the events come from a
+    ``value_and_grad`` trace — the Engine's VJP rules emit them like any
+    other dispatch (use :func:`workload_cycles_by_direction` to split)."""
     pairs = gemms_from_events(events)
     hw = sum(model.hw_cycles(g) * c for g, c in pairs)
     sw = sum(model.sw_cycles(g) * c for g, c in pairs)
     return hw, sw
+
+
+def workload_cycles_by_direction(
+    model: RedMulEModel, events
+) -> Dict[str, Tuple[float, float]]:
+    """{"fwd": (hw, sw), "bwd": (hw, sw)} — the paper's Fig 4c split
+    (bwd > fwd per layer: dX's skinny-K GEMM plus dW's fat-K GEMM),
+    straight from an instrumented train-step trace."""
+    fwd = [ev for ev in events if not _is_backward(ev)]
+    bwd = [ev for ev in events if _is_backward(ev)]
+    return {
+        "fwd": workload_cycles_from_events(model, fwd),
+        "bwd": workload_cycles_from_events(model, bwd),
+    }
 
 
 def workload_flops(pairs: Sequence[Tuple[GEMM, int]]) -> int:

@@ -4,23 +4,28 @@ Engine's registered "pallas" / "interpret" backends.
 Handles padding to tile multiples (zeros are accumulation-neutral and the
 registered epilogues all map 0 -> finite values that the final slice
 discards), tile selection via :mod:`repro.core.tiling`, the fused
-bias+activation epilogue, and batching (a leading batch grid dimension
-inside the kernel — not a ``vmap`` wrapper — so the tile choice sees the
-true per-core working set).  Model code should not call these directly:
-route through :mod:`repro.core.engine` so dispatches are instrumented and
-backend-switchable.
+bias+activation epilogue, batching (a leading batch grid dimension inside
+the kernel — not a ``vmap`` wrapper — so the tile choice sees the true
+per-core working set), and the transpose **layouts** the Engine's backward
+pass dispatches (``"nt"`` for dX = dZ·Wᵀ, ``"tn"`` for dW = Xᵀ·dZ — the
+operands stay in their forward storage, no materialized transpose; see
+:mod:`repro.kernels.redmule_matmul`).  Model code should not call these
+directly: route through :mod:`repro.core.engine` so dispatches are
+instrumented and backend-switchable.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import precision as prec
 from repro.core import tiling
-from repro.kernels.redmule_matmul import (redmule_matmul_batched_pallas,
+from repro.kernels.redmule_matmul import (_check_layout,
+                                          _logical_dims as _kernel_logical_dims,
+                                          redmule_matmul_batched_pallas,
                                           redmule_matmul_pallas)
 
 __all__ = ["redmule_matmul", "redmule_matmul_batched"]
@@ -39,6 +44,24 @@ def _padded_dims(M: int, N: int, K: int, t: tiling.TileConfig):
     return up(M, t.bm), up(N, t.bn), up(K, t.bk)
 
 
+def _logical_dims(x: jax.Array, w: jax.Array, layout: str) -> Tuple[int, int, int]:
+    """(M, N, K) of the logical Z[M,K] = Σ_N X·W from stored shapes —
+    the kernel module's mapping, applied to the trailing 2D of each
+    operand (one source of truth for what each layout stores where)."""
+    _check_layout(layout)
+    return _kernel_logical_dims(x.shape[-2:], w.shape[-2:], layout)
+
+
+def _pad_operands(x: jax.Array, w: jax.Array, layout: str,
+                  Mp: int, Np: int, Kp: int) -> Tuple[jax.Array, jax.Array]:
+    """Pad each *stored* operand so the logical dims hit (Mp, Np, Kp)."""
+    if layout == "nn":
+        return _pad_to(x, Mp, Np), _pad_to(w, Np, Kp)
+    if layout == "nt":
+        return _pad_to(x, Mp, Np), _pad_to(w, Kp, Np)
+    return _pad_to(x, Np, Mp), _pad_to(w, Np, Kp)  # tn
+
+
 def redmule_matmul(
     x: jax.Array,
     w: jax.Array,
@@ -47,15 +70,17 @@ def redmule_matmul(
     tile: Optional[tiling.TileConfig] = None,
     bias: Optional[jax.Array] = None,
     epilogue: Optional[str] = None,
+    layout: str = "nn",
     interpret: bool = False,
 ) -> jax.Array:
     """2D Z = act(X @ W + bias) on the RedMulE kernel (pads, runs, slices).
 
     ``bias`` (optional, shape ``(K,)`` or ``(1, K)``) and ``epilogue``
     (optional activation name) are fused into the kernel's store-once step
-    in the accumulation dtype — the affine layer costs one HBM write."""
-    M, N = x.shape
-    K = w.shape[1]
+    in the accumulation dtype — the affine layer costs one HBM write.
+    ``layout`` names the operand storage of the logical contraction
+    ("nn" | "nt" | "tn"); the result is always the logical ``(M, K)``."""
+    M, N, K = _logical_dims(x, w, layout)
     if M == 0 or K == 0 or N == 0:
         # degenerate GEMM (e.g. an empty ragged group): an empty — or, for
         # N == 0, all-zero — result with no kernel launch.  The fused
@@ -72,13 +97,13 @@ def redmule_matmul(
             M, N, K, compute_dtype=policy.compute_dtype, accum_dtype=policy.accum_dtype
         )
     Mp, Np, Kp = _padded_dims(M, N, K, tile)
-    xp = _pad_to(x, Mp, Np)
-    wp = _pad_to(w, Np, Kp)
+    xp, wp = _pad_operands(x, w, layout, Mp, Np, Kp)
     bp = None
     if bias is not None:
         bp = _pad_to(bias.reshape(1, K).astype(policy.accum_dtype), 1, Kp)
     z = redmule_matmul_pallas(xp, wp, bp, tile=tile, policy=policy,
-                              epilogue=epilogue, interpret=interpret)
+                              epilogue=epilogue, layout=layout,
+                              interpret=interpret)
     return z[:M, :K]
 
 
@@ -88,24 +113,40 @@ def redmule_matmul_batched(
     *,
     policy: prec.Policy,
     tile: Optional[tiling.TileConfig] = None,
+    bias: Optional[jax.Array] = None,
+    epilogue: Optional[str] = None,
+    layout: str = "nn",
     interpret: bool = False,
 ) -> jax.Array:
-    """Batched Z[b] = X[b] @ W[b]; x: (B, M, N), w: (B, N, K).
+    """Batched Z[b] = act(X[b] @ W[b] + bias); e.g. x: (B, M, N), w: (B, N, K).
 
     The batch rides as the kernel's leading grid dimension (one tile set
     live at a time), not as a ``vmap`` that would multiply the VMEM
-    working set by B behind the tile chooser's back."""
-    B, M, N = x.shape
-    K = w.shape[2]
+    working set by B behind the tile chooser's back.  ``bias`` (optional,
+    shape ``(K,)`` or ``(1, K)``, shared across the batch) and ``epilogue``
+    are fused into the store-once step like the 2D path; ``layout`` selects
+    the operand storage ("nn" | "nt" | "tn")."""
+    B = x.shape[0]
+    M, N, K = _logical_dims(x, w, layout)
     if B == 0 or M == 0 or K == 0 or N == 0:
-        return jnp.zeros((B, M, K), policy.out_dtype)
+        z = jnp.zeros((B, M, K), policy.accum_dtype)
+        if bias is not None:
+            z = z + bias.reshape(1, 1, K).astype(policy.accum_dtype)
+        if epilogue is not None:
+            from repro.core import epilogues as epi
+            z = epi.apply_epilogue(epilogue, z)
+        return z.astype(policy.out_dtype)
     if tile is None:
         tile = tiling.choose_tiles(
             M, N, K, compute_dtype=policy.compute_dtype, accum_dtype=policy.accum_dtype
         )
     Mp, Np, Kp = _padded_dims(M, N, K, tile)
-    xp = _pad_to(x, Mp, Np)
-    wp = _pad_to(w, Np, Kp)
-    z = redmule_matmul_batched_pallas(xp, wp, tile=tile, policy=policy,
+    xp, wp = _pad_operands(x, w, layout, Mp, Np, Kp)
+    bp = None
+    if bias is not None:
+        bp = _pad_to(bias.reshape(1, 1, K).astype(policy.accum_dtype),
+                     1, Kp)
+    z = redmule_matmul_batched_pallas(xp, wp, bp, tile=tile, policy=policy,
+                                      epilogue=epilogue, layout=layout,
                                       interpret=interpret)
     return z[:, :M, :K]

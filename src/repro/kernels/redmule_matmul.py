@@ -23,7 +23,16 @@ The paper's dataflow (§II-B/C), re-derived for the TPU memory hierarchy
 * batched operands get a leading **batch grid dimension**
   (:func:`redmule_matmul_batched_pallas`) instead of a ``vmap`` wrapper, so
   the tile choice and the Pallas pipeline see the true per-core working set
-  (one X/W/Z tile set, not B concurrent copies).
+  (one X/W/Z tile set, not B concurrent copies);
+* **transpose layouts** serve the backward pass without materialized
+  transposes: the logical GEMM is always ``Z[M, K] = Σ_N X·W``, and
+  ``layout`` names how the operands are *stored* — ``"nn"`` (x: (M, N),
+  w: (N, K), the forward), ``"nt"`` (w stored (K, N); dX = dZ·Wᵀ reads W
+  in its forward layout) and ``"tn"`` (x stored (N, M); dW = Xᵀ·dZ reads
+  the saved activations in their forward layout).  Only the BlockSpec
+  index maps and the in-kernel ``dot_general`` dimension numbers change;
+  the X-stationary / store-once schedule — and therefore the accumulator
+  error model — is identical in all three.
 
 Shapes must be pre-padded to tile multiples by ``ops.py``.
 """
@@ -44,7 +53,25 @@ from repro.core import epilogues as epi
 from repro.core import precision as prec
 from repro.core import tiling
 
-__all__ = ["redmule_matmul_pallas", "redmule_matmul_batched_pallas"]
+__all__ = ["redmule_matmul_pallas", "redmule_matmul_batched_pallas", "LAYOUTS"]
+
+# storage layouts of the logical Z[M,K] = X[M,N] @ W[N,K] contraction:
+#   nn: x (M, N), w (N, K)   — forward
+#   nt: x (M, N), w (K, N)   — dX = dZ @ W^T (w in forward storage)
+#   tn: x (N, M), w (N, K)   — dW = X^T @ dZ (x in forward storage)
+LAYOUTS = ("nn", "nt", "tn")
+
+# in-kernel contraction dimension numbers per layout (2D tiles)
+_DIMS = {
+    "nn": (((1,), (0,)), ((), ())),
+    "nt": (((1,), (1,)), ((), ())),
+    "tn": (((0,), (0,)), ((), ())),
+}
+
+
+def _check_layout(layout: str) -> None:
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; known: {LAYOUTS}")
 
 
 def _store_value(acc, bias, *, epilogue, out_dtype):
@@ -60,7 +87,7 @@ def _store_value(acc, bias, *, epilogue, out_dtype):
 
 
 def _kernel(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype,
-            epilogue: Optional[str]):
+            epilogue: Optional[str], layout: str):
     """One (bm, bk) Z tile; invoked n_tiles times along the reduction."""
 
     @pl.when(pl.program_id(2) == 0)
@@ -70,9 +97,11 @@ def _kernel(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype,
     # The MXU step: X tile (held steady) x streamed W tile. The partial
     # product is accumulated on-array; in faithful-fp16 mode acc_ref is
     # fp16 so the += re-rounds to binary16 every block, like the paper's
-    # FMA feedback path.
-    acc_ref[...] += jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=acc_ref.dtype
+    # FMA feedback path.  The layout only changes which operand axes
+    # contract — the schedule (and the error model) is layout-invariant.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], _DIMS[layout],
+        preferred_element_type=acc_ref.dtype,
     )
 
     @pl.when(pl.program_id(2) == n_tiles - 1)
@@ -82,15 +111,16 @@ def _kernel(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype,
 
 
 def _kernel_bias(x_ref, w_ref, bias_ref, z_ref, acc_ref, *, n_tiles: int,
-                 out_dtype, epilogue: Optional[str]):
+                 out_dtype, epilogue: Optional[str], layout: str):
     """Same schedule with a (1, bk) bias tile folded into the store."""
 
     @pl.when(pl.program_id(2) == 0)
     def _zero_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=acc_ref.dtype
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], _DIMS[layout],
+        preferred_element_type=acc_ref.dtype,
     )
 
     @pl.when(pl.program_id(2) == n_tiles - 1)
@@ -99,9 +129,34 @@ def _kernel_bias(x_ref, w_ref, bias_ref, z_ref, acc_ref, *, n_tiles: int,
                                   epilogue=epilogue, out_dtype=out_dtype)
 
 
+def _operand_specs(tile: tiling.TileConfig, layout: str):
+    """(x BlockSpec, w BlockSpec) for one layout; grid is (i, j, r) =
+    (M-tile, K-tile, reduction)."""
+    if layout == "nn":
+        return (pl.BlockSpec((tile.bm, tile.bn), lambda i, j, k: (i, k)),
+                pl.BlockSpec((tile.bn, tile.bk), lambda i, j, k: (k, j)))
+    if layout == "nt":
+        return (pl.BlockSpec((tile.bm, tile.bn), lambda i, j, k: (i, k)),
+                pl.BlockSpec((tile.bk, tile.bn), lambda i, j, k: (j, k)))
+    # tn
+    return (pl.BlockSpec((tile.bn, tile.bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((tile.bn, tile.bk), lambda i, j, k: (k, j)))
+
+
+def _logical_dims(x_shape, w_shape, layout: str):
+    """(M, N, K) of the logical contraction from stored operand shapes."""
+    if layout == "nn":
+        (M, N), (_, K) = x_shape, w_shape
+    elif layout == "nt":
+        (M, N), (K, _) = x_shape, w_shape
+    else:  # tn
+        (N, M), (_, K) = x_shape, w_shape
+    return M, N, K
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("tile", "policy", "epilogue", "interpret"),
+    static_argnames=("tile", "policy", "epilogue", "layout", "interpret"),
 )
 def redmule_matmul_pallas(
     x: jax.Array,
@@ -111,6 +166,7 @@ def redmule_matmul_pallas(
     tile: tiling.TileConfig,
     policy: prec.Policy,
     epilogue: Optional[str] = None,
+    layout: str = "nn",
     interpret: bool = False,
 ) -> jax.Array:
     """Z = act(X @ W + bias) for 2D operands already padded to tile multiples.
@@ -118,10 +174,16 @@ def redmule_matmul_pallas(
     ``bias`` (optional) is a ``(1, K)`` row in the accumulation dtype;
     ``epilogue`` (optional) names an activation from
     :mod:`repro.core.epilogues`.  Both are applied inside the kernel's
-    store-once step (no extra HBM pass)."""
-    M, N = x.shape
-    N2, K = w.shape
-    assert N == N2, (x.shape, w.shape)
+    store-once step (no extra HBM pass).  ``layout`` selects the operand
+    storage (see module docstring); the output is always ``(M, K)``."""
+    _check_layout(layout)
+    M, N, K = _logical_dims(x.shape, w.shape, layout)
+    if layout == "nn":
+        assert x.shape[1] == w.shape[0], (x.shape, w.shape)
+    elif layout == "nt":
+        assert x.shape[1] == w.shape[1], (x.shape, w.shape)
+    else:
+        assert x.shape[0] == w.shape[0], (x.shape, w.shape)
     assert M % tile.bm == 0 and N % tile.bn == 0 and K % tile.bk == 0, (
         f"shapes {(M, N, K)} not padded to tiles {tile}"
     )
@@ -129,19 +191,16 @@ def redmule_matmul_pallas(
         assert bias.shape == (1, K), (bias.shape, K)
     grid = (M // tile.bm, K // tile.bk, N // tile.bn)
 
-    in_specs = [
-        pl.BlockSpec((tile.bm, tile.bn), lambda i, j, k: (i, k)),
-        pl.BlockSpec((tile.bn, tile.bk), lambda i, j, k: (k, j)),
-    ]
+    in_specs = list(_operand_specs(tile, layout))
     operands = [x, w]
     if bias is None:
         kernel = functools.partial(_kernel, n_tiles=grid[2],
                                    out_dtype=policy.out_dtype,
-                                   epilogue=epilogue)
+                                   epilogue=epilogue, layout=layout)
     else:
         kernel = functools.partial(_kernel_bias, n_tiles=grid[2],
                                    out_dtype=policy.out_dtype,
-                                   epilogue=epilogue)
+                                   epilogue=epilogue, layout=layout)
         in_specs.append(pl.BlockSpec((1, tile.bk), lambda i, j, k: (0, j)))
         operands.append(bias)
 
@@ -156,12 +215,12 @@ def redmule_matmul_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-        name="redmule_matmul",
+        name=f"redmule_matmul_{layout}",
     )(*operands)
 
 
 def _kernel_batched(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype,
-                    epilogue: Optional[str]):
+                    epilogue: Optional[str], layout: str):
     """The same X-stationary schedule under a leading batch grid dim.
 
     Block refs carry a unit batch dim ((1, bm, bn) etc.); the reduction is
@@ -171,8 +230,9 @@ def _kernel_batched(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype,
     def _zero_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(
-        x_ref[0], w_ref[0], preferred_element_type=acc_ref.dtype
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0], _DIMS[layout],
+        preferred_element_type=acc_ref.dtype,
     )
 
     @pl.when(pl.program_id(3) == n_tiles - 1)
@@ -181,41 +241,99 @@ def _kernel_batched(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype,
                                 out_dtype=out_dtype)
 
 
+def _kernel_batched_bias(x_ref, w_ref, bias_ref, z_ref, acc_ref, *,
+                         n_tiles: int, out_dtype, epilogue: Optional[str],
+                         layout: str):
+    """Batched schedule with the shared (1, 1, bk) bias row in the store."""
+
+    @pl.when(pl.program_id(3) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0], _DIMS[layout],
+        preferred_element_type=acc_ref.dtype,
+    )
+
+    @pl.when(pl.program_id(3) == n_tiles - 1)
+    def _store_once():
+        z_ref[0] = _store_value(acc_ref[...], bias_ref[0],
+                                epilogue=epilogue, out_dtype=out_dtype)
+
+
+def _operand_specs_batched(tile: tiling.TileConfig, layout: str):
+    if layout == "nn":
+        return (pl.BlockSpec((1, tile.bm, tile.bn),
+                             lambda b, i, j, k: (b, i, k)),
+                pl.BlockSpec((1, tile.bn, tile.bk),
+                             lambda b, i, j, k: (b, k, j)))
+    if layout == "nt":
+        return (pl.BlockSpec((1, tile.bm, tile.bn),
+                             lambda b, i, j, k: (b, i, k)),
+                pl.BlockSpec((1, tile.bk, tile.bn),
+                             lambda b, i, j, k: (b, j, k)))
+    # tn
+    return (pl.BlockSpec((1, tile.bn, tile.bm),
+                         lambda b, i, j, k: (b, k, i)),
+            pl.BlockSpec((1, tile.bn, tile.bk),
+                         lambda b, i, j, k: (b, k, j)))
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("tile", "policy", "epilogue", "interpret"),
+    static_argnames=("tile", "policy", "epilogue", "layout", "interpret"),
 )
 def redmule_matmul_batched_pallas(
     x: jax.Array,
     w: jax.Array,
+    bias: Optional[jax.Array] = None,
     *,
     tile: tiling.TileConfig,
     policy: prec.Policy,
     epilogue: Optional[str] = None,
+    layout: str = "nn",
     interpret: bool = False,
 ) -> jax.Array:
-    """Z[b] = X[b] @ W[b] with the batch as a leading grid dimension.
+    """Z[b] = act(X[b] @ W[b] + bias) with the batch as a leading grid dim.
 
     Unlike a ``vmap`` wrapper (which multiplies the VMEM working set by B
     and hides the batch from the scheduler), the batch here is just the
     outermost parallel grid axis: one X/W/Z tile set is live at a time, so
-    the tile choice sees the true per-core working set."""
-    B, M, N = x.shape
-    B2, N2, K = w.shape
-    assert B == B2 and N == N2, (x.shape, w.shape)
+    the tile choice sees the true per-core working set.
+
+    ``bias`` (optional) is a ``(1, 1, K)`` row in the accumulation dtype,
+    shared across the batch, folded — with ``epilogue`` — into the
+    store-once step exactly like the 2D kernel (the PR-2 follow-up gap:
+    the batched grid fuses the full bias+activation epilogue now)."""
+    _check_layout(layout)
+    B = x.shape[0]
+    assert w.shape[0] == B, (x.shape, w.shape)
+    M, N, K = _logical_dims(x.shape[1:], w.shape[1:], layout)
     assert M % tile.bm == 0 and N % tile.bn == 0 and K % tile.bk == 0, (
         f"shapes {(M, N, K)} not padded to tiles {tile}"
     )
+    if bias is not None:
+        assert bias.shape == (1, 1, K), (bias.shape, K)
     grid = (B, M // tile.bm, K // tile.bk, N // tile.bn)
 
+    in_specs = list(_operand_specs_batched(tile, layout))
+    operands = [x, w]
+    if bias is None:
+        kernel = functools.partial(_kernel_batched, n_tiles=grid[3],
+                                   out_dtype=policy.out_dtype,
+                                   epilogue=epilogue, layout=layout)
+    else:
+        kernel = functools.partial(_kernel_batched_bias, n_tiles=grid[3],
+                                   out_dtype=policy.out_dtype,
+                                   epilogue=epilogue, layout=layout)
+        in_specs.append(pl.BlockSpec((1, 1, tile.bk),
+                                     lambda b, i, j, k: (0, 0, j)))
+        operands.append(bias)
+
     return pl.pallas_call(
-        functools.partial(_kernel_batched, n_tiles=grid[3],
-                          out_dtype=policy.out_dtype, epilogue=epilogue),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, tile.bm, tile.bn), lambda b, i, j, k: (b, i, k)),
-            pl.BlockSpec((1, tile.bn, tile.bk), lambda b, i, j, k: (b, k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tile.bm, tile.bk),
                                lambda b, i, j, k: (b, i, j)),
         out_shape=jax.ShapeDtypeStruct((B, M, K), policy.out_dtype),
@@ -225,5 +343,5 @@ def redmule_matmul_batched_pallas(
                                  "arbitrary"),
         ),
         interpret=interpret,
-        name="redmule_matmul_batched",
-    )(x, w)
+        name=f"redmule_matmul_batched_{layout}",
+    )(*operands)

@@ -14,6 +14,14 @@ synthetic data with checkpoint/restart:
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \\
         --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+``--arch ae`` trains the paper's TinyMLPerf AutoEncoder use case (§III-B)
+in pure FP16 instead of an LM arch.  With ``--instrument``, one step is
+traced under ``engine.instrument()`` first and the per-op GEMM summary is
+printed with the fwd/bwd split — the Engine ops carry a custom VJP, so the
+backward GEMMs (``matmul_dx`` / ``matmul_dw``) are counted too (the CI
+train gate pins these totals against
+``benchmarks/baselines/train_flops.json``).
 """
 
 from __future__ import annotations
@@ -257,9 +265,60 @@ def make_sharded_train_step(
 # --------------------------------------------------------------------- #
 # CLI end-to-end driver
 # --------------------------------------------------------------------- #
+def _print_instrument_summary(events):
+    """Per-op engine summary + the fwd/bwd GEMM flop split of one step."""
+    from repro.roofline import analysis
+
+    for op, d in engine.summarize(events).items():
+        print(f"[engine] {op}: calls={d['calls']} "
+              f"gflops={d['flops']/1e9:.3f} gbytes={d['bytes']/1e9:.3f}")
+    split = analysis.flops_by_direction(events)
+    fwd, bwd = split["fwd"], split["bwd"]
+    ratio = (fwd + bwd) / fwd if fwd else 0.0
+    print(f"[engine] fwd_gflops={fwd/1e9:.3f} bwd_gflops={bwd/1e9:.3f} "
+          f"train/inference={ratio:.2f}x")
+
+
+def _ae_main(args):
+    """The paper's §III-B use case on the CLI: AE training in pure FP16."""
+    from repro.core import precision as prec
+    from repro.data import SyntheticAE
+    from repro.models import autoencoder
+
+    params = autoencoder.init_ae(jax.random.PRNGKey(args.seed))
+    opt = AdamW(lr=args.lr, warmup_steps=0)
+    opt_state = opt.init(params)
+    ds = SyntheticAE(batch=args.batch, seed=args.seed)
+
+    def step(p_, s_, x):
+        (loss, _), g = jax.value_and_grad(
+            lambda q: autoencoder.ae_loss(q, x, policy=prec.PAPER_FP16),
+            has_aux=True)(p_)
+        g, _ = clip_by_global_norm(g, 1.0)
+        u, s_ = opt.update(g, s_, p_)
+        return opt.apply(p_, u), s_, loss
+
+    if args.instrument:
+        with engine.instrument() as events:
+            jax.eval_shape(step, params, opt_state,
+                           jax.ShapeDtypeStruct((args.batch, ds.dim),
+                                                jnp.float32))
+        _print_instrument_summary(events)
+
+    step = jax.jit(step, donate_argnums=(0, 1))
+    loss = None
+    for i in range(args.steps):
+        x = jnp.asarray(ds.sample(i))
+        params, opt_state, loss = step(params, opt_state, x)
+        if i % 10 == 0:
+            print(f"[{i}] mse={float(loss):.4f}")
+    print(f"final mse: {float(loss):.4f}")
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--arch", default="qwen3-1.7b", choices=configs.ARCH_IDS)
+    p.add_argument("--arch", default="qwen3-1.7b",
+                   choices=(*configs.ARCH_IDS, "ae"))
     p.add_argument("--reduced", action="store_true", default=True)
     p.add_argument("--full", dest="reduced", action="store_false")
     p.add_argument("--steps", type=int, default=100)
@@ -275,6 +334,9 @@ def main(argv=None):
                         "the per-op GEMM flop/byte summary before training")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
+
+    if args.arch == "ae":
+        return _ae_main(args)
 
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
     if args.fp16_scale:
@@ -293,12 +355,12 @@ def main(argv=None):
     batches = Prefetcher(iter(ds), depth=2)
 
     if args.instrument:
-        # abstract trace only — events are emitted at trace time
+        # abstract trace only — events are emitted at trace time; the
+        # value_and_grad inside the step makes the custom-VJP backward
+        # GEMMs (matmul_dx / matmul_dw) part of the trace too
         with engine.instrument() as events:
             jax.eval_shape(step, state, ds.batch(0))
-        for op, d in engine.summarize(events).items():
-            print(f"[engine] {op}: calls={d['calls']} "
-                  f"gflops={d['flops']/1e9:.3f} gbytes={d['bytes']/1e9:.3f}")
+        _print_instrument_summary(events)
 
     if args.ckpt_dir:
         ckpt = CheckpointManager(args.ckpt_dir, keep=2)

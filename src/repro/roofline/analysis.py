@@ -37,6 +37,7 @@ __all__ = [
     "PEAK_FLOPS", "HBM_BW", "ICI_BW",
     "CollectiveOp", "parse_collectives", "collective_bytes_per_device",
     "RooflineReport", "roofline", "model_flops", "flops_from_events",
+    "is_backward_event", "flops_by_direction",
 ]
 
 PEAK_FLOPS = 197e12   # bf16 per chip, TPU v5e
@@ -359,9 +360,14 @@ class RooflineReport:
     collectives: Dict[str, float]
     memory_analysis: Dict[str, float]
     # global GEMM flops observed by the Engine's instrument() collector
-    # while the program was traced (forward dispatches; autodiff transposes
-    # are not engine calls).  0.0 when no events were supplied.
+    # while the program was traced.  Since the Engine op family carries a
+    # custom VJP, a value_and_grad trace includes the backward GEMMs
+    # (``matmul_dx`` / ``matmul_dw`` events) — engine_flops_fwd/_bwd split
+    # the total by direction (a train step runs ~3x the inference flops:
+    # fwd + dX + dW per layer).  0.0 when no events were supplied.
     engine_flops: float = 0.0
+    engine_flops_fwd: float = 0.0
+    engine_flops_bwd: float = 0.0
 
     @property
     def dominant(self) -> str:
@@ -397,8 +403,30 @@ def flops_from_events(events) -> float:
 
     The Engine emits one ``GemmEvent`` per dispatch at trace time (with a
     ``count`` multiplier for scan bodies), so this is the GEMM-only
-    analytic flop count of the traced program — no HLO re-derivation."""
+    analytic flop count of the traced program — no HLO re-derivation.
+    Backward dispatches (the Engine ops' custom-VJP rules) are ordinary
+    events tagged ``matmul_dx`` / ``matmul_dw``, so a value_and_grad trace
+    yields the full train-step GEMM count."""
     return float(sum(ev.flops * ev.count for ev in events))
+
+
+def is_backward_event(ev) -> bool:
+    """True for events emitted by the Engine's VJP rules (dX / dW)."""
+    # lazy import: this module parses HLO text and has no engine dependency
+    from repro.core.engine import is_backward_op
+
+    return is_backward_op(ev.spec.op)
+
+
+def flops_by_direction(events) -> Dict[str, float]:
+    """{"fwd": ..., "bwd": ...} GEMM flops of an instrumented trace."""
+    fwd = bwd = 0.0
+    for ev in events:
+        if is_backward_event(ev):
+            bwd += ev.flops * ev.count
+        else:
+            fwd += ev.flops * ev.count
+    return {"fwd": fwd, "bwd": bwd}
 
 
 def roofline(
@@ -437,6 +465,8 @@ def roofline(
         "xla_flops": xla_flops,
         "xla_bytes": xla_bytes,
     }
+    direction = (flops_by_direction(gemm_events) if gemm_events
+                 else {"fwd": 0.0, "bwd": 0.0})
     return RooflineReport(
         arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
         flops_per_device=flops, bytes_per_device=byts,
@@ -448,6 +478,8 @@ def roofline(
         collectives=per_kind,
         memory_analysis=mem,
         engine_flops=flops_from_events(gemm_events) if gemm_events else 0.0,
+        engine_flops_fwd=direction["fwd"],
+        engine_flops_bwd=direction["bwd"],
     )
 
 

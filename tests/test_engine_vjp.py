@@ -1,0 +1,399 @@
+"""The Engine's backward contract: custom-VJP GEMMs through the registry.
+
+Covers the train-side half of the Engine API:
+  * jax.grad of every op family member (matmul weight/batched, linear with
+    bias+activation epilogues, grouped_matmul dense/ragged, einsum2d) on
+    the pallas-kernel "interpret" backend matches the "xla" reference
+    grads to the documented tolerance, under paper_fp16 and fp32-accum
+    policies (relu's kink at 0 excluded by construction);
+  * backward dispatches emit GemmEvents tagged matmul_dx / matmul_dw with
+    transpose layouts ("nt"/"tn"), resolved tiles, and accum-dtype grad
+    policies — three events per affine layer (fwd, dX, dW);
+  * backward events inherit the repeat() multiplicity captured at forward
+    trace time (scanned layer bodies, grad-accumulation microbatch scans);
+  * ragged grouped_matmul events carry valid_rows so flops/bytes scale
+    with sum(group_sizes), not G*M — forward and backward (the satellite
+    regression);
+  * a value_and_grad trace totals exactly 3x the inference GEMM flops for
+    a pure-GEMM model (the AE), and backends without the "layouts"
+    capability still differentiate (engine pre-transposes for them).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core import epilogues as epi
+from repro.core import precision as prec
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+def _tol(policy):
+    # fp16/bf16 compute: grads go through two half-precision GEMMs; the
+    # xla and pallas backends accumulate in different orders
+    return {"float32": (1e-5, 1e-5), "float16": (2e-2, 2e-2),
+            "bfloat16": (1e-1, 1e-1)}[jnp.dtype(policy.compute_dtype).name]
+
+
+def _assert_grads_close(got, want, policy):
+    rtol, atol = _tol(policy)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=rtol, atol=atol),
+        got, want)
+
+
+POLICIES = [prec.PAPER_FP16, prec.TPU_FP16, prec.FP32]
+
+
+# ------------------------------------------------------------------ #
+# VJP numerics: interpret (Pallas kernels) vs xla reference
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("policy", POLICIES, ids=lambda p: p.name)
+def test_matmul_weight_gemm_grads_match_xla(policy):
+    x = _rand((3, 9, 16), policy.compute_dtype, 0.3)
+    w = _rand((16, 12), policy.compute_dtype, 0.3)
+
+    def loss(p, backend):
+        z = engine.matmul(p["x"], p["w"], policy=policy, backend=backend)
+        return jnp.sum(z.astype(jnp.float32) ** 2)
+
+    p = {"x": x, "w": w}
+    g_int = jax.grad(lambda q: loss(q, "interpret"))(p)
+    g_xla = jax.grad(lambda q: loss(q, "xla"))(p)
+    assert g_int["x"].dtype == x.dtype and g_int["w"].dtype == w.dtype
+    _assert_grads_close(g_int, g_xla, policy)
+
+
+@pytest.mark.parametrize("policy", POLICIES, ids=lambda p: p.name)
+def test_matmul_batched_grads_match_xla(policy):
+    x = _rand((4, 6, 10), policy.compute_dtype, 0.3)
+    w = _rand((4, 10, 8), policy.compute_dtype, 0.3)
+
+    def loss(p, backend):
+        z = engine.matmul(p["x"], p["w"], policy=policy, backend=backend)
+        return jnp.sum(z.astype(jnp.float32) ** 2)
+
+    p = {"x": x, "w": w}
+    _assert_grads_close(jax.grad(lambda q: loss(q, "interpret"))(p),
+                        jax.grad(lambda q: loss(q, "xla"))(p), policy)
+
+
+@pytest.mark.parametrize("policy", [prec.PAPER_FP16, prec.FP32],
+                         ids=lambda p: p.name)
+@pytest.mark.parametrize("act", [None, "relu", "gelu", "silu", "tanh"])
+def test_linear_epilogue_grads_match_xla(policy, act):
+    # inputs bounded away from 0 pre-activation so relu's kink (where the
+    # two backends may legitimately disagree) is excluded
+    x = _rand((8, 24), policy.compute_dtype, 0.5)
+    w = _rand((24, 16), policy.compute_dtype, 0.5)
+    b = _rand((16,), policy.compute_dtype, 0.5)
+    if act == "relu":
+        s = np.asarray(x, np.float32) @ np.asarray(w, np.float32) \
+            + np.asarray(b, np.float32)
+        assert np.abs(s).min() > 1e-3, "test inputs landed on the relu kink"
+
+    def loss(p, backend):
+        z = engine.linear(p["x"], p["w"], p["b"], activation=act,
+                          policy=policy, backend=backend)
+        return jnp.sum(z.astype(jnp.float32) ** 2)
+
+    p = {"x": x, "w": w, "b": b}
+    g_int = jax.grad(lambda q: loss(q, "interpret"))(p)
+    g_xla = jax.grad(lambda q: loss(q, "xla"))(p)
+    assert g_int["b"].dtype == b.dtype
+    _assert_grads_close(g_int, g_xla, policy)
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "silu", "tanh"])
+def test_epilogue_derivative_registry_matches_autodiff(act):
+    """The closed-form derivatives (and output-form variants) equal
+    jax.grad of the registered activation, pointwise."""
+    s = jnp.linspace(-3.0, 3.0, 101)
+    s = s[jnp.abs(s) > 1e-6]  # exclude the relu kink
+    fn = epi.EPILOGUES[act]
+    want = jax.vmap(jax.grad(fn))(s)
+    grad = epi.epilogue_grad(act)
+    np.testing.assert_allclose(np.asarray(grad.deriv(s)), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    if grad.deriv_from_output is not None:
+        np.testing.assert_allclose(np.asarray(grad.deriv_from_output(fn(s))),
+                                   np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("policy", [prec.PAPER_FP16, prec.FP32],
+                         ids=lambda p: p.name)
+def test_grouped_matmul_ragged_grads(policy):
+    G, M, N, K = 3, 8, 16, 12
+    sizes = jnp.asarray([5, 0, 8])
+    x = _rand((G, M, N), policy.compute_dtype, 0.3)
+    w = _rand((G, N, K), policy.compute_dtype, 0.3)
+
+    def loss(p, backend):
+        z = engine.grouped_matmul(p["x"], p["w"], group_sizes=sizes,
+                                  policy=policy, backend=backend)
+        return jnp.sum(z.astype(jnp.float32) ** 2)
+
+    p = {"x": x, "w": w}
+    g_int = jax.grad(lambda q: loss(q, "interpret"))(p)
+    g_xla = jax.grad(lambda q: loss(q, "xla"))(p)
+    _assert_grads_close(g_int, g_xla, policy)
+    # masked rows contribute nothing: dX beyond each group's size is zero
+    gx = np.asarray(g_int["x"], np.float32)
+    for g in range(G):
+        assert np.all(gx[g, int(sizes[g]):] == 0.0)
+
+
+def test_einsum2d_grads_match_jnp_einsum():
+    eqs = [("mn,nk->mk", (6, 5), (5, 4)),
+           ("bij,bjk->bik", (2, 6, 5), (2, 5, 4)),
+           ("bhsd,rhd->bhsr", (2, 3, 5, 7), (4, 3, 7))]
+    for eq, xs, ws in eqs:
+        x, w = _rand(xs), _rand(ws)
+
+        def loss(p, f):
+            return jnp.sum(jnp.sin(f(p["x"], p["w"])))
+
+        p = {"x": x, "w": w}
+        got = jax.grad(lambda q: loss(
+            q, lambda a, b: engine.einsum2d(eq, a, b, policy=prec.FP32)))(p)
+        want = jax.grad(lambda q: loss(
+            q, lambda a, b: jnp.einsum(eq, a, b)))(p)
+        _assert_grads_close(got, want, prec.FP32)
+
+
+def test_linear_batched_weights_fused_matches_postop():
+    """Satellite: linear lifted to (..., N, K) weights — the batched-grid
+    kernel fuses bias+activation with the same equivalence contract as
+    the 2D path (vs the xla post-op reference)."""
+    pol = prec.PAPER_FP16
+    x = _rand((3, 8, 24), pol.compute_dtype, 0.5)
+    w = _rand((3, 24, 16), pol.compute_dtype, 0.5)
+    b = _rand((16,), pol.compute_dtype, 0.5)
+    for act in (None, "relu", "gelu"):
+        zi = engine.linear(x, w, b, activation=act, policy=pol,
+                           backend="interpret")
+        zx = engine.linear(x, w, b, activation=act, policy=pol,
+                           backend="xla")
+        assert zi.shape == (3, 8, 16) and zi.dtype == pol.out_dtype
+        np.testing.assert_allclose(np.asarray(zi, np.float32),
+                                   np.asarray(zx, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+    # and it differentiates: batched dW sums nothing away, bias grad does
+    g = jax.grad(lambda q: jnp.sum(engine.linear(
+        x, q["w"], q["b"], activation="gelu", policy=pol,
+        backend="interpret").astype(jnp.float32) ** 2))({"w": w, "b": b})
+    assert g["w"].shape == w.shape and g["b"].shape == b.shape
+
+
+# ------------------------------------------------------------------ #
+# Event tags, layouts, grad policy
+# ------------------------------------------------------------------ #
+def test_backward_events_tagged_and_layout_dispatched():
+    pol = prec.TPU_FP16
+    x, w, b = _rand((4, 8, 16)), _rand((16, 12)), _rand((12,))
+    with engine.instrument() as events:
+        jax.eval_shape(lambda p: jax.value_and_grad(
+            lambda q: jnp.sum(engine.linear(
+                q["x"], q["w"], q["b"], activation="gelu", policy=pol,
+                backend="xla").astype(jnp.float32)))(p),
+            {"x": x, "w": w, "b": b})
+    ops = [ev.spec.op for ev in events]
+    assert ops == ["linear", "matmul_dx", "matmul_dw"]
+    by_op = {ev.spec.op: ev.spec for ev in events}
+    fwd, dx, dw = by_op["linear"], by_op["matmul_dx"], by_op["matmul_dw"]
+    # transposed problem shapes: dX contracts K, dW contracts batch*M
+    assert (dx.layout, dx.m, dx.n, dx.k) == ("nt", fwd.m, fwd.k, fwd.n)
+    assert (dw.layout, dw.m, dw.n, dw.k) == ("tn", fwd.n,
+                                             fwd.batch * fwd.m, fwd.k)
+    # grads held in the accum dtype; every event carries a resolved tile
+    for s in (dx, dw):
+        assert jnp.dtype(s.policy.out_dtype) == jnp.dtype(pol.accum_dtype)
+        assert s.tile is not None
+    # flop accounting: dX + dW together equal 2x the forward GEMM
+    assert dx.flops + dw.flops == 2 * fwd.flops
+
+
+def test_backward_dispatch_through_runtime_registered_backend():
+    """A backend without the "layouts" capability still differentiates:
+    the engine pre-transposes and dispatches equivalent "nn" specs."""
+    xla_fn = engine.get_backend("xla").fn
+    seen = []
+
+    def recorder(x, w, *, spec):
+        seen.append((spec.op, spec.layout, x.shape, w.shape))
+        return xla_fn(x, w, spec=dict_spec_nn(spec))
+
+    def dict_spec_nn(spec):
+        return spec  # layout already "nn" by the engine's contract
+
+    engine.register_backend("recorder-vjp", recorder)
+    try:
+        x, w = _rand((6, 10)), _rand((10, 4))
+        g = jax.grad(lambda p: jnp.sum(engine.matmul(
+            p["x"], p["w"], policy=prec.FP32, backend="recorder-vjp") ** 2)
+        )({"x": x, "w": w})
+        ref = jax.grad(lambda p: jnp.sum(engine.matmul(
+            p["x"], p["w"], policy=prec.FP32, backend="xla") ** 2)
+        )({"x": x, "w": w})
+        _assert_grads_close(g, ref, prec.FP32)
+    finally:
+        engine.unregister_backend("recorder-vjp")
+    assert [s[:2] for s in seen] == [
+        ("matmul", "nn"), ("matmul_dx", "nn"), ("matmul_dw", "nn")]
+    # pre-transposed operands: dX got W^T (4, 10); dW got X^T (10, 6)
+    assert seen[1][3] == (10, 4) or seen[1][2] == (6, 4)
+    assert seen[2][2] == (10, 6) or seen[2][3] == (6, 4)
+
+
+# ------------------------------------------------------------------ #
+# repeat() multiplicity in backward traces
+# ------------------------------------------------------------------ #
+def test_scanned_body_backward_inherits_repeat_multiplier():
+    """A GEMM traced in a scanned layer body: its dX/dW events must carry
+    the same count=n the forward event does, even though JAX traces the
+    backward scan outside the repeat() context."""
+    n = 5
+    ws = _rand((n, 8, 8), scale=0.2)
+    x0 = _rand((4, 8))
+
+    def loss(ws_):
+        def body(h, w):
+            return engine.matmul(h, w, policy=prec.FP32, backend="xla"), 0
+
+        with engine.repeat(n):
+            h, _ = jax.lax.scan(body, x0, ws_)
+        return jnp.sum(h ** 2)
+
+    with engine.instrument() as events:
+        jax.eval_shape(lambda p: jax.value_and_grad(loss)(p), ws)
+    counts = {ev.spec.op: ev.count for ev in events}
+    assert counts == {"matmul": n, "matmul_dx": n, "matmul_dw": n}
+
+
+def test_grad_accum_scan_event_totals_scale():
+    """Satellite: a grad-accumulated microbatch scan (value_and_grad inside
+    the scanned body, engine.repeat(G) around the scan) reports G x the
+    per-microbatch totals — fwd and bwd alike — and G=2 at half the batch
+    equals G=1 at the full batch after scaling."""
+    from repro.roofline import analysis
+
+    w = _rand((16, 16), scale=0.2)
+
+    def totals(batch, accum):
+        xb = _rand((batch, 16))
+        mb = xb.reshape(accum, batch // accum, 16)
+
+        def lf(w_, b_):
+            z = engine.matmul(b_, w_, policy=prec.FP32, backend="xla")
+            return jnp.sum(z ** 2)
+
+        def step(w_):
+            def body(g_acc, b_):
+                _, g = jax.value_and_grad(lf)(w_, b_)
+                return g_acc + g, 0
+
+            with engine.repeat(accum):
+                g, _ = jax.lax.scan(body, jnp.zeros_like(w_), mb)
+            return g
+
+        with engine.instrument() as events:
+            jax.eval_shape(step, w)
+        split = analysis.flops_by_direction(events)
+        return split, events
+
+    s1, ev1 = totals(8, 1)
+    s2, ev2 = totals(8, 2)
+    # same global batch: the microbatch GEMM is half the rows but runs
+    # twice — totals must agree exactly, for fwd AND backward events
+    assert s2 == s1
+    assert {ev.count for ev in ev2} == {2}
+    assert {ev.count for ev in ev1} == {1}
+
+
+# ------------------------------------------------------------------ #
+# Ragged accounting (the grouped_matmul satellite)
+# ------------------------------------------------------------------ #
+def test_ragged_grouped_event_flops_scale_with_group_sizes():
+    G, M, N, K = 4, 8, 16, 12
+    x, w = _rand((G, M, N)), _rand((G, N, K))
+    sizes = jnp.asarray([8, 3, 0, 5])
+
+    with engine.instrument() as dense_ev:
+        engine.grouped_matmul(x, w, policy=prec.FP32, backend="xla")
+    with engine.instrument() as ragged_ev:
+        engine.grouped_matmul(x, w, group_sizes=sizes, policy=prec.FP32,
+                              backend="xla")
+    (de,), (re_,) = dense_ev, ragged_ev
+    assert de.spec.valid_rows is None
+    assert re_.spec.valid_rows == int(sizes.sum()) == 16
+    # flops scale with sum(group_sizes) / (G * M), exactly
+    assert de.flops == 2 * G * M * N * K
+    assert re_.flops == 2 * int(sizes.sum()) * N * K
+    assert re_.flops * G * M == de.flops * int(sizes.sum())
+    # bytes: ragged x reads and z writes scale; the shared w does not
+    itm = 4
+    assert re_.bytes == (16 * N + 16 * K) * itm + G * N * K * itm
+    # oversized and negative sizes clamp
+    with engine.instrument() as ev:
+        engine.grouped_matmul(x, w, group_sizes=jnp.asarray([100, -1, 8, 0]),
+                              policy=prec.FP32, backend="xla")
+    assert ev[0].spec.valid_rows == M + 0 + 8 + 0
+
+
+def test_ragged_backward_events_carry_valid_rows():
+    G, M, N, K = 3, 8, 16, 12
+    x, w = _rand((G, M, N)), _rand((G, N, K))
+    sizes = jnp.asarray([5, 0, 8])
+    with engine.instrument() as events:
+        jax.eval_shape(lambda p: jax.value_and_grad(
+            lambda q: jnp.sum(engine.grouped_matmul(
+                q, w, group_sizes=sizes, policy=prec.FP32,
+                backend="xla") ** 2))(p), x)
+    by_op = {ev.spec.op: ev.spec for ev in events}
+    vr = int(sizes.sum())
+    assert by_op["grouped_matmul"].valid_rows == vr
+    dx, dw = by_op["matmul_dx"], by_op["matmul_dw"]
+    assert (dx.valid_rows, dx.ragged_dim) == (vr, "m")
+    assert (dw.valid_rows, dw.ragged_dim) == (vr, "n")
+    # dX masks output rows, dW masks contraction rows — same flop total
+    assert dx.flops == 2 * vr * dx.n * dx.k
+    assert dw.flops == 2 * dw.m * vr * dw.k
+
+
+# ------------------------------------------------------------------ #
+# The 3x acceptance: train trace = fwd + dX + dW
+# ------------------------------------------------------------------ #
+def test_ae_train_trace_is_three_x_inference():
+    from repro.data import SyntheticAE
+    from repro.models import autoencoder
+    from repro.roofline import analysis
+
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    x = jnp.asarray(SyntheticAE(batch=16).sample(0))
+
+    with engine.instrument() as fwd_ev:
+        jax.eval_shape(lambda p: autoencoder.ae_forward(
+            p, x, policy=prec.PAPER_FP16), params)
+    with engine.instrument() as train_ev:
+        jax.eval_shape(lambda p: jax.value_and_grad(
+            lambda q: autoencoder.ae_loss(q, x, policy=prec.PAPER_FP16)[0]
+        )(p), params)
+
+    infer = engine.total_flops(fwd_ev)
+    split = analysis.flops_by_direction(train_ev)
+    assert split["fwd"] == infer
+    assert split["bwd"] == 2 * infer        # dX + dW per layer
+    assert engine.total_flops(train_ev) == 3 * infer
+    # every affine layer contributes exactly (fwd, dX, dW)
+    ops = [ev.spec.op for ev in train_ev]
+    assert ops.count("linear") == ops.count("matmul_dx") \
+        == ops.count("matmul_dw") == 10

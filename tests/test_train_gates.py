@@ -1,0 +1,136 @@
+"""Train-step flop regression gate (CI `train-gates` step).
+
+The Engine ops carry a custom VJP, so a ``jax.value_and_grad`` trace emits
+GemmEvents for the backward GEMMs (``matmul_dx`` / ``matmul_dw``) alongside
+the forward — these tests re-trace the AutoEncoder train step (the paper's
+§III-B on-device-training use case) and pin the instrumented fwd+bwd
+``engine_flops`` against the checked-in baseline
+(``benchmarks/baselines/train_flops.json``) — **exactly**, since event
+flops are analytic.  A mismatch means the train-side GEMM workload changed:
+either a regression (a backward GEMM fell off the Engine) or an intentional
+architecture change, in which case the baseline is updated in the same
+commit with a note.
+
+Also covers the acceptance criterion end to end: a 2-step
+``launch/train.py --arch ae`` run works, and ``RooflineReport.engine_flops``
+for the train step is 3x the inference value (pure-GEMM model: the
+bias-grad reduction and BatchNorm backward carry no GEMM flops).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core import precision as prec
+from repro.roofline import analysis
+
+BASELINE_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "benchmarks", "baselines",
+    "train_flops.json")
+
+with open(BASELINE_PATH) as fh:
+    BASELINE = json.load(fh)
+
+
+def _ae_train_events(batch=16):
+    from repro.data import SyntheticAE
+    from repro.models import autoencoder
+
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    x = jnp.asarray(SyntheticAE(batch=batch).sample(0))
+    with engine.instrument() as events:
+        jax.eval_shape(lambda p: jax.value_and_grad(
+            lambda q: autoencoder.ae_loss(q, x, policy=prec.PAPER_FP16)[0]
+        )(p), params)
+    return events
+
+
+def test_ae_train_flops_match_baseline():
+    events = _ae_train_events()
+    assert events, "no GemmEvents collected"
+    want = BASELINE["ae_train_B16"]
+    split = analysis.flops_by_direction(events)
+    got = {"fwd": int(split["fwd"]), "bwd": int(split["bwd"]),
+           "total": int(analysis.flops_from_events(events))}
+    assert got == want, (
+        f"ae_train_B16: engine train flops {got} != baseline {want}. "
+        f"If the GEMM workload changed on purpose, update "
+        f"benchmarks/baselines/train_flops.json in this commit.")
+
+
+def test_train_step_roofline_engine_flops_is_3x_inference():
+    """Acceptance: RooflineReport.engine_flops for a train step is 3x the
+    inference value (fwd + dX + dW per affine layer), with the fwd/bwd
+    split carried on the report."""
+    from repro.data import SyntheticAE
+    from repro.models import autoencoder
+
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    x = jnp.asarray(SyntheticAE(batch=16).sample(0))
+
+    fn = jax.jit(lambda p: jax.value_and_grad(
+        lambda q: autoencoder.ae_loss(q, x, policy=prec.PAPER_FP16)[0])(p))
+    with engine.instrument() as events:
+        lowered = fn.lower(params)
+    report = analysis.roofline(
+        lowered.compile(), arch="ae", shape="train_B16", mesh_name="single",
+        n_devices=1,
+        model_flops_val=float(BASELINE["ae_train_B16"]["total"]),
+        gemm_events=events)
+    want = BASELINE["ae_train_B16"]
+    assert report.engine_flops == want["total"] == 3 * want["fwd"]
+    assert report.engine_flops_fwd == want["fwd"]
+    assert report.engine_flops_bwd == want["bwd"] == 2 * want["fwd"]
+
+
+def test_lm_train_backward_flops_are_2x_inference():
+    """A dense LM (remat off so no recompute events): the value_and_grad
+    trace's backward GEMMs total exactly 2x the inference forward — one dX
+    and one dW per forward GEMM, scan multiplicity included.  (With the
+    default remat="full" configs the recompute re-forward is counted too
+    and checkpoint-region events carry count=1 — the documented
+    limitation; this pins the clean contract.)"""
+    import dataclasses
+
+    from repro import configs
+    from repro.models import transformer
+
+    cfg = dataclasses.replace(configs.get_reduced("yi-9b"), remat="none")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"inputs": jnp.zeros((2, 64), jnp.int32),
+             "labels": jnp.zeros((2, 64), jnp.int32)}
+
+    with engine.instrument() as fwd_ev:
+        jax.eval_shape(lambda p: transformer.forward(p, cfg, batch)[0],
+                       params)
+    with engine.instrument() as train_ev:
+        jax.eval_shape(lambda p: jax.value_and_grad(
+            lambda q: transformer.loss_fn(q, cfg, batch)[0])(p), params)
+    infer = engine.total_flops(fwd_ev)
+    split = analysis.flops_by_direction(train_ev)
+    assert infer > 0
+    assert split["bwd"] == 2 * infer
+    # every backward event is registry-dispatched with a transpose layout
+    # (or pre-transposed "nn" on layout-capable xla — never untagged)
+    for ev in train_ev:
+        if analysis.is_backward_event(ev):
+            assert ev.spec.op in ("matmul_dx", "matmul_dw")
+            assert ev.spec.layout in ("nt", "tn", "nn")
+            assert ev.backend in engine.registered_backends()
+
+
+def test_train_cli_two_step_smoke(capsys):
+    """The CI gate's CLI path: 2 steps of `launch/train.py --arch ae
+    --instrument` run end to end and print the instrumented fwd/bwd
+    summary with the matmul_dx / matmul_dw rows."""
+    from repro.launch import train
+
+    train.main(["--arch", "ae", "--steps", "2", "--batch", "16",
+                "--instrument"])
+    out = capsys.readouterr().out
+    assert "matmul_dx" in out and "matmul_dw" in out
+    assert "train/inference=3.00x" in out
+    assert "final mse:" in out
