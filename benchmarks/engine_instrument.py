@@ -57,8 +57,43 @@ def _linear_hotpath_row() -> Row:
         f"backend={engine.default_backend()}")
 
 
+def _ae_train_bytes_row() -> Row:
+    """One-pass vs two-pass backward HBM bytes on the AE train step.
+
+    The same train trace is recorded against the fused-bwd-capable
+    "interpret" backend (act'/db folded into the dX/dW kernels — ds never
+    round-trips HBM) and the "xla" fallback (standalone ds multiply +
+    separate bias-grad reduction, billed as linear_dact / linear_dbias
+    pass events).  The derived column carries both backward byte totals;
+    CI's bwd-perf-gates step pins them via
+    benchmarks/baselines/train_bytes.json."""
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    B = 16
+    x = jnp.asarray(SyntheticAE(batch=B).sample(0))
+
+    def bwd_bytes(backend):
+        with engine.instrument() as events:
+            jax.eval_shape(
+                lambda p: jax.value_and_grad(
+                    lambda q: autoencoder.ae_loss(
+                        q, x, policy=prec.PAPER_FP16, backend=backend)[0]
+                )(p), params)
+        return analysis.bytes_by_direction(events)
+
+    fused = bwd_bytes("interpret")
+    twop = bwd_bytes("xla")
+    saved = int(twop["bwd"] - fused["bwd"])
+    ok = fused["bwd"] < twop["bwd"]
+    return (
+        f"engine/ae_train_bytes_B{B}", 0.0,
+        f"bwd_bytes_fused={int(fused['bwd'])} "
+        f"bwd_bytes_two_pass={int(twop['bwd'])} saved={saved} "
+        f"fwd_bytes={int(fused['fwd'])} "
+        f"ds_roundtrip_eliminated={'OK' if ok else 'MISMATCH'}")
+
+
 def run() -> list[Row]:
-    rows: list[Row] = [_linear_hotpath_row()]
+    rows: list[Row] = [_linear_hotpath_row(), _ae_train_bytes_row()]
     m = perf_model.DEFAULT_MODEL
 
     # --- AE forward: recorded events vs the paper's analytic enumeration ---

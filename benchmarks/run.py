@@ -26,7 +26,7 @@ from benchmarks import (engine_instrument, fig3_energy_throughput,
                         fig4a_hw_vs_sw, fig4b_area_sweep, fig4cd_autoencoder,
                         roofline_report, table1_soa)
 from benchmarks.common import emit
-from repro.core import engine
+from repro.core import autotune, engine
 from repro.roofline import analysis
 
 MODULES = [
@@ -62,7 +62,9 @@ def run_benchmarks(only: Optional[List[str]] = None) -> List[dict]:
             rows = mod.run()
         emit(rows)
         flops = engine.total_flops(events)
+        byts = engine.total_bytes(events)
         split = analysis.flops_by_direction(events)
+        bsplit = analysis.bytes_by_direction(events)
         tiles = sorted({(ev.spec.tile.bm, ev.spec.tile.bn, ev.spec.tile.bk)
                         for ev in events if ev.spec.tile is not None})
         for name, us, derived in rows:
@@ -77,6 +79,14 @@ def run_benchmarks(only: Optional[List[str]] = None) -> List[dict]:
                 # dispatch, so train-shaped modules show bwd ~ 2x fwd
                 "engine_flops_fwd": int(split["fwd"]),
                 "engine_flops_bwd": int(split["bwd"]),
+                # byte split: backward bytes carry the epilogue traffic
+                # (fused derivative streams / db output, or the two-pass
+                # *_dact / *_dbias round-trips) — the bwd-perf-gates CI
+                # step pins these against benchmarks/baselines/
+                # train_bytes.json
+                "engine_bytes": int(byts),
+                "engine_bytes_fwd": int(bsplit["fwd"]),
+                "engine_bytes_bwd": int(bsplit["bwd"]),
                 "tiles": [list(t) for t in tiles],
             })
     return records
@@ -95,7 +105,12 @@ def main(argv: Optional[List[str]] = None) -> None:
     records = run_benchmarks(args.only)
     if args.json:
         with open(args.json, "w") as fh:
-            json.dump({"benchmarks": records}, fh, indent=2)
+            # autotune_cache: in-process LRU observability (hit/miss/evict
+            # counters over the whole run) — the CI autotuner smoke asserts
+            # the cold-miss -> warm-hit transition shows up here
+            json.dump({"benchmarks": records,
+                       "autotune_cache": autotune.cache_stats()},
+                      fh, indent=2)
 
 
 if __name__ == "__main__":

@@ -87,7 +87,14 @@ class AutotuneKey:
     Xᵀ·dZ as "tn") run a different BlockSpec walk than a forward GEMM of
     the same logical shape, so their tuned tiles must not collide — the
     transposed problem shapes (m/n/k swap roles between fwd and bwd) are
-    already part of the key, the layout disambiguates the rest."""
+    already part of the key, the layout disambiguates the rest.
+
+    ``fused_bwd`` keys fused-backward-epilogue dispatches (the
+    ``"fused_bwd_epilogue"`` capability): the streamed derivative operand
+    adds a third DMA stream per K-step, which changes both the VMEM
+    working set and the bandwidth balance the tile must hit.  ``depth`` is
+    the in-kernel K-loop's double-buffer slot count (2 = classic double
+    buffering); deeper pipelines trade VMEM for more DMA overlap."""
 
     m: int
     n: int
@@ -98,13 +105,22 @@ class AutotuneKey:
     epilogue: str      # "" when the GEMM has no fused epilogue
     backend: str
     layout: str = "nn"
+    fused_bwd: bool = False
+    depth: int = 2
 
     def to_str(self) -> str:
         ep = self.epilogue or "none"
         base = (f"m{self.m}-n{self.n}-k{self.k}-{self.compute}-{self.accum}"
                 f"-{self.out}-{ep}-{self.backend}")
-        # forward keys keep the PR-2 format so shipped caches stay valid
-        return base if self.layout == "nn" else f"{base}-{self.layout}"
+        # forward keys keep the PR-2 format so shipped caches stay valid;
+        # non-default flags append suffixes (PR-3 added "-nt"/"-tn")
+        if self.layout != "nn":
+            base = f"{base}-{self.layout}"
+        if self.fused_bwd:
+            base = f"{base}-fbwd"
+        if self.depth != 2:
+            base = f"{base}-d{self.depth}"
+        return base
 
 
 def bucket_dim(v: int) -> int:
@@ -126,6 +142,8 @@ def canonical_key(
     backend: str,
     epilogue: Optional[str] = None,
     layout: str = "nn",
+    fused_bwd: bool = False,
+    pipeline_depth: int = 2,
 ) -> AutotuneKey:
     return AutotuneKey(
         m=bucket_dim(m), n=bucket_dim(n), k=bucket_dim(k),
@@ -135,6 +153,8 @@ def canonical_key(
         epilogue=epilogue or "",
         backend=backend,
         layout=layout,
+        fused_bwd=fused_bwd,
+        depth=pipeline_depth,
     )
 
 
@@ -147,6 +167,7 @@ _disk_path: Optional[str] = None
 _disk_mtime: Optional[float] = None
 _hits = 0
 _misses = 0
+_evictions = 0
 
 
 def _cache_path() -> Optional[str]:
@@ -177,6 +198,8 @@ def _load_disk_locked(path: str) -> None:
             continue
         _lru[key_str] = t
         _lru.move_to_end(key_str)
+    # trimming an over-capacity *loaded* file is not working-set pressure:
+    # only record_tile() insertions count toward the evictions counter
     while len(_lru) > _LRU_CAPACITY:
         _lru.popitem(last=False)
     _disk_path, _disk_mtime = path, mtime
@@ -218,11 +241,15 @@ def cached_tile(
     backend: str,
     epilogue: Optional[str] = None,
     layout: str = "nn",
+    fused_bwd: bool = False,
+    pipeline_depth: int = 2,
 ) -> Optional[tiling.TileConfig]:
     """Cache-only lookup (LRU, then the JSON file).  Never tunes."""
     global _hits, _misses
     key = canonical_key(m, n, k, policy=policy, backend=backend,
-                        epilogue=epilogue, layout=layout).to_str()
+                        epilogue=epilogue, layout=layout,
+                        fused_bwd=fused_bwd,
+                        pipeline_depth=pipeline_depth).to_str()
     with _lock:
         t = _lru.get(key)
         if t is None:
@@ -244,11 +271,13 @@ def record_tile(
     us: Optional[float] = None,
 ) -> None:
     """Store a tile under ``key`` — LRU write-through to the JSON file."""
+    global _evictions
     with _lock:
         _lru[key.to_str()] = tile
         _lru.move_to_end(key.to_str())
         while len(_lru) > _LRU_CAPACITY:
             _lru.popitem(last=False)
+            _evictions += 1
         path = _cache_path()
         if path:
             _write_disk_locked(path, key, tile, source=source, us=us)
@@ -257,11 +286,11 @@ def record_tile(
 def clear_cache(*, memory_only: bool = True) -> None:
     """Drop the in-process LRU (tests; the JSON file is left alone unless
     ``memory_only=False``)."""
-    global _disk_path, _disk_mtime, _hits, _misses
+    global _disk_path, _disk_mtime, _hits, _misses, _evictions
     with _lock:
         _lru.clear()
         _disk_path = _disk_mtime = None
-        _hits = _misses = 0
+        _hits = _misses = _evictions = 0
         if not memory_only:
             path = _cache_path()
             if path and os.path.exists(path):
@@ -269,8 +298,12 @@ def clear_cache(*, memory_only: bool = True) -> None:
 
 
 def cache_stats() -> Dict[str, int]:
+    """In-process LRU observability: entry count plus hit/miss/evict
+    counters since the last :func:`clear_cache` (surfaced in
+    ``BENCH_engine.json`` and asserted by the CI autotuner smoke)."""
     with _lock:
-        return {"entries": len(_lru), "hits": _hits, "misses": _misses}
+        return {"entries": len(_lru), "hits": _hits, "misses": _misses,
+                "evictions": _evictions}
 
 
 # --------------------------------------------------------------------- #
@@ -284,13 +317,19 @@ def candidate_tiles(
     policy: prec.Policy,
     vmem_budget: int = tiling.DEFAULT_VMEM_BUDGET,
     max_candidates: int = 16,
+    fused_bwd: bool = False,
+    pipeline_depth: int = 2,
 ) -> List[tiling.TileConfig]:
     """MXU-aligned tile candidates that fit the VMEM budget.
 
     Never tiles beyond the aligned problem (at most one padding tile per
     dim), always includes the ``choose_tiles`` heuristic pick, and returns
     at most ``max_candidates`` ordered by the cost model (cheapest first)
-    so a truncated sweep still looks at the most promising configs."""
+    so a truncated sweep still looks at the most promising configs.
+    ``fused_bwd``/``pipeline_depth`` size the budget check for the fused
+    backward epilogue's third stream and the K-loop's slot count, so a
+    candidate validated here never over-allocates VMEM when dispatched
+    with a derivative operand."""
     sl = tiling.sublane(policy.compute_dtype)
     m_cap = _round_up(max(int(m), 1), sl)
     n_cap = _round_up(max(int(n), 1), tiling.MXU_LANE)
@@ -308,15 +347,16 @@ def candidate_tiles(
         key = (t.bm, t.bn, t.bk)
         if key in seen:
             return
-        if tiling.vmem_bytes(t, policy.compute_dtype,
-                             policy.accum_dtype) > vmem_budget:
+        if tiling.vmem_bytes(t, policy.compute_dtype, policy.accum_dtype,
+                             depth=pipeline_depth,
+                             fused_bwd=fused_bwd) > vmem_budget:
             return
         seen.add(key)
         out.append(t)
 
     _add(tiling.choose_tiles(m, n, k, compute_dtype=policy.compute_dtype,
                              accum_dtype=policy.accum_dtype,
-                             vmem_budget=vmem_budget))
+                             vmem_budget=vmem_budget, fused_bwd=fused_bwd))
     for bm in bms:
         for bn in bns:
             for bk in bks:
@@ -332,16 +372,33 @@ def predicted_cost_us(
     m: int, n: int, k: int,
     tile: tiling.TileConfig, *,
     policy: prec.Policy,
+    fused_bwd: bool = False,
+    layout: str = "nn",
+    bias_grad: bool = False,
+    pipeline_depth: int = 2,
 ) -> float:
     """Deterministic roofline cost model of one kernel launch, in µs.
 
     Models the kernel's actual schedule on the *padded* problem (so tiles
-    that over-pad a ragged shape pay for their wasted MACs): every grid
-    step streams one X and one W tile from HBM, the Z tile is written once
+    that over-pad a ragged shape pay for their wasted MACs): every K-step
+    streams one X and one W tile from HBM, the Z tile is written once
     per (i, j), and each step carries a fixed issue overhead.  This is the
     CPU fallback — on CPU the Pallas interpreter's wall clock measures
     Python, not the schedule, exactly like timing RedMulE's RTL simulator
-    would measure the simulator."""
+    would measure the simulator.
+
+    ``fused_bwd`` prices the fused backward epilogue: a third tile stream
+    (the activation derivative operand, shadowing the dZ operand — (bm,
+    bn) on "nt", (bn, bk) on "tn") joins every K-step, and ``bias_grad``
+    adds the db output row.  That extra streaming is what the fused path
+    *pays*; what it saves — the two-pass path's 3-pass ``ds`` HBM
+    round-trip plus the separate bias-grad re-read, ~``4·M·K`` compute
+    elements per affine layer — is billed at the workload level by the
+    engine's ``linear_dact`` / ``linear_dbias`` pass events
+    (:class:`repro.core.engine.GemmSpec`), which this kernel-local model
+    deliberately leaves out of a single launch's cost.  ``pipeline_depth``
+    only changes VMEM occupancy (slots), not the steady-state stream time,
+    so it rides in the key but not the time term."""
     mp = _round_up(max(int(m), 1), tile.bm)
     np_ = _round_up(max(int(n), 1), tile.bn)
     kp = _round_up(max(int(k), 1), tile.bk)
@@ -349,8 +406,16 @@ def predicted_cost_us(
     steps = gm * gk * gn
     cb = jnp.dtype(policy.compute_dtype).itemsize
     ob = jnp.dtype(policy.out_dtype).itemsize
-    hbm_bytes = (steps * (tile.bm * tile.bn + tile.bn * tile.bk) * cb
+    ab = jnp.dtype(policy.accum_dtype).itemsize
+    step_elems = tile.bm * tile.bn + tile.bn * tile.bk
+    if fused_bwd:
+        # the deriv stream shadows the dZ operand's tile walk
+        step_elems += (tile.bn * tile.bk if layout == "tn"
+                       else tile.bm * tile.bn)
+    hbm_bytes = (steps * step_elems * cb
                  + gm * gk * tile.bm * tile.bk * ob)
+    if bias_grad:
+        hbm_bytes += gm * gk * tile.bk * ab   # the fused db output row
     flops = 2.0 * mp * np_ * kp
     t = max(hbm_bytes / _HBM_BW, flops / _PEAK_FLOPS) + steps * _STEP_OVERHEAD_S
     return t * 1e6
@@ -363,6 +428,10 @@ def measured_cost_us(
     epilogue: Optional[str] = None,
     with_bias: bool = False,
     layout: str = "nn",
+    fused_bwd: bool = False,
+    grad_epilogue: Optional[str] = None,
+    bias_grad: bool = False,
+    pipeline_depth: int = 2,
     warmup: int = 1,
     iters: int = 3,
     interpret: Optional[bool] = None,
@@ -370,7 +439,12 @@ def measured_cost_us(
     """Wall-clock one compiled kernel launch (µs).  Only meaningful on a
     real accelerator backend — see :func:`predicted_cost_us` for CPU
     (``interpret`` defaults to True off-TPU so the call still *runs*, but
-    then it times the Pallas interpreter, not the schedule)."""
+    then it times the Pallas interpreter, not the schedule).
+
+    ``fused_bwd`` times the fused-backward-epilogue kernel variant: a
+    random derivative operand (``grad_epilogue``, default "gelu") streams
+    alongside the dZ operand, and ``bias_grad`` adds the fused db output
+    on "tn" dispatches."""
     from repro.kernels import ops  # local import: kernels depend on core
 
     if interpret is None:
@@ -383,11 +457,22 @@ def measured_cost_us(
     w = jax.random.normal(kw, w_shape, policy.compute_dtype)
     bias = (jax.random.normal(kb, (k,), policy.accum_dtype)
             if with_bias else None)
+    deriv = None
+    if fused_bwd:
+        grad_epilogue = grad_epilogue or "gelu"
+        d_shape = x_shape if layout == "nt" else w_shape
+        deriv = jax.random.normal(kb, d_shape, policy.compute_dtype)
 
     def run():
-        return ops.redmule_matmul(x, w, policy=policy, tile=tile,
-                                  bias=bias, epilogue=epilogue,
-                                  layout=layout, interpret=interpret)
+        out = ops.redmule_matmul(x, w, policy=policy, tile=tile,
+                                 bias=bias, epilogue=epilogue,
+                                 layout=layout, interpret=interpret,
+                                 deriv=deriv,
+                                 grad_epilogue=(grad_epilogue if fused_bwd
+                                                else None),
+                                 bias_grad=bias_grad,
+                                 pipeline_depth=pipeline_depth)
+        return out[0] if bias_grad else out
 
     for _ in range(warmup):
         jax.block_until_ready(run())
@@ -417,6 +502,9 @@ def autotune_gemm(
     epilogue: Optional[str] = None,
     with_bias: bool = False,
     layout: str = "nn",
+    fused_bwd: bool = False,
+    bias_grad: bool = False,
+    pipeline_depth: int = 2,
     vmem_budget: int = tiling.DEFAULT_VMEM_BUDGET,
     max_candidates: int = 16,
     mode: Optional[str] = None,
@@ -428,7 +516,14 @@ def autotune_gemm(
     analytic cost model; None picks "measured" exactly when the program is
     actually running on a TPU (anything else would time the interpreter).
     ``layout`` tunes (and keys) a transpose-layout dispatch — pass "nt" /
-    "tn" to warm the cache for the Engine's backward GEMMs."""
+    "tn" to warm the cache for the Engine's backward GEMMs; add
+    ``fused_bwd=True`` (and ``bias_grad=True`` for "tn") to tune the
+    fused-backward-epilogue kernel variants the train loop dispatches.
+    ``pipeline_depth`` tunes the kernel's K-loop slot count for direct
+    ``ops.redmule_matmul`` callers; Engine dispatches currently resolve
+    the default depth-2 keys (threading a tuned depth through the Engine
+    is a ROADMAP follow-up), so non-default-depth entries serve
+    kernel-level experiments only."""
     policy = prec.resolve(policy)
     if mode is None:
         mode = ("measured" if jax.default_backend() == "tpu"
@@ -437,7 +532,9 @@ def autotune_gemm(
         raise ValueError(f"unknown autotune mode {mode!r}")
 
     cands = candidate_tiles(m, n, k, policy=policy, vmem_budget=vmem_budget,
-                            max_candidates=max_candidates)
+                            max_candidates=max_candidates,
+                            fused_bwd=fused_bwd,
+                            pipeline_depth=pipeline_depth)
     scores: List[Tuple[Tuple[int, int, int], float]] = []
     best: Optional[tiling.TileConfig] = None
     best_us = float("inf")
@@ -445,16 +542,22 @@ def autotune_gemm(
         if mode == "measured":
             us = measured_cost_us(m, n, k, t, policy=policy,
                                   epilogue=epilogue, with_bias=with_bias,
-                                  layout=layout)
+                                  layout=layout, fused_bwd=fused_bwd,
+                                  bias_grad=bias_grad,
+                                  pipeline_depth=pipeline_depth)
         else:
-            us = predicted_cost_us(m, n, k, t, policy=policy)
+            us = predicted_cost_us(m, n, k, t, policy=policy,
+                                   fused_bwd=fused_bwd, layout=layout,
+                                   bias_grad=bias_grad,
+                                   pipeline_depth=pipeline_depth)
         scores.append(((t.bm, t.bn, t.bk), us))
         if us < best_us:
             best, best_us = t, us
     assert best is not None, "no tile candidates fit the VMEM budget"
 
     key = canonical_key(m, n, k, policy=policy, backend=backend,
-                        epilogue=epilogue, layout=layout)
+                        epilogue=epilogue, layout=layout,
+                        fused_bwd=fused_bwd, pipeline_depth=pipeline_depth)
     if record:
         record_tile(key, best, source=mode, us=best_us)
     return AutotuneResult(key=key, tile=best, us=best_us, source=mode,

@@ -71,12 +71,28 @@ Engine instead of falling back to XLA-derived ``dot_general`` transposes:
   gelu/silu save the pre-activation, so their forward-for-grad applies
   the activation post-op (~2 ulp from the fused inference path, same
   bound as the documented fused-vs-unfused contract);
+* **one-pass backward** (the ``"fused_bwd_epilogue"`` capability;
+  "pallas"/"interpret", 2D weights): the dX and dW kernels apply ``act'``
+  to the dZ tile *on load* — the saved residual rides as a derivative
+  operand in the dispatch (``GemmSpec.grad_epilogue`` / ``grad_mode`` /
+  ``fused_bwd``) — and the dW kernel accumulates ``db = Σ_rows ds`` into a
+  second accum-dtype output in the same pass (``fused_bias_grad``), so the
+  pre-activation cotangent ``ds`` never round-trips HBM.  Non-capable
+  backends (and batched weights) keep the two-pass fallback, whose
+  standalone multiply and separate bias-grad reduction are billed as
+  ``linear_dact`` / ``linear_dbias`` *pass events* (zero flops, real
+  bytes) so the byte accounting of both paths is comparable;
+* **remat**: ``jax.checkpoint`` recompute traces are detected
+  automatically (see ``_fwd_trace_kind``: the custom-VJP primal and fwd
+  rules both trace under one call context exactly when a region re-traces
+  for remat) — recompute events are tagged ``recompute=True``, inherit
+  the multiplicity captured at the primal trace, and partial-eval
+  artifact re-traces are suppressed, so remat train traces report true
+  flops/bytes with no model-code changes;
 * backward events inherit the :func:`repeat` multiplicity captured at
   *forward* trace time — a GEMM traced in a scanned layer body gets the
   same ``count`` on its dX/dW events even though JAX traces the backward
-  scan outside the ``repeat`` context.  (Known limitation: ``jax.checkpoint``
-  recompute-forward events re-emitted during the backward trace carry the
-  multiplicity live at *that* point.)
+  scan outside the ``repeat`` context.
 """
 
 from __future__ import annotations
@@ -116,6 +132,7 @@ __all__ = [
     "grouped_matmul",
     "einsum2d",
     "is_backward_op",
+    "is_pass_op",
     "instrument",
     "repeat",
     "paused",
@@ -158,6 +175,21 @@ class GemmSpec:
         dense (or the sizes were traced and unknowable at trace time).
       ragged_dim: which logical dim ``valid_rows`` masks — "m" (forward and
         dX: ragged output rows) or "n" (dW: ragged contraction rows).
+      grad_epilogue: on a backward dispatch, the activation whose derivative
+        feeds this GEMM (``ds = dZ * act'``); None on forward dispatches
+        and epilogue-free backwards.
+      grad_mode: how ``act'`` is recovered — "output" (from the fused
+        forward output; relu/tanh) or "preact" (from the saved
+        pre-activation; gelu/silu).
+      fused_bwd: True when the backend applies ``act'`` to the dZ tile *on
+        load* inside the kernel (the ``"fused_bwd_epilogue"`` capability) —
+        the derivative operand is streamed alongside the GEMM operands and
+        ``ds`` is never materialized in HBM.  False on the two-pass
+        fallback, whose standalone multiply is billed by a separate
+        ``*_dact`` pass event instead.
+      fused_bias_grad: True when this (dW) dispatch also accumulates
+        ``db = Σ_rows ds`` into a second accum-dtype output in the same
+        pass (no separate ``*_dbias`` reduction event).
     """
 
     op: str
@@ -175,11 +207,18 @@ class GemmSpec:
     layout: str = "nn"
     valid_rows: Optional[int] = None
     ragged_dim: str = "m"
+    grad_epilogue: Optional[str] = None
+    grad_mode: Optional[str] = None
+    fused_bwd: bool = False
+    fused_bias_grad: bool = False
 
     @property
     def flops(self) -> int:
         """MAC-derived flops of one execution (2 * B * G * M * N * K; for
-        ragged grouped GEMMs ``valid_rows`` replaces ``G * <ragged dim>``)."""
+        ragged grouped GEMMs ``valid_rows`` replaces ``G * <ragged dim>``).
+        Pass events (``*_dact`` / ``*_dbias``) carry no MACs."""
+        if is_pass_op(self.op):
+            return 0
         if self.valid_rows is None:
             return 2 * self.batch * self.groups * self.m * self.n * self.k
         if self.ragged_dim == "m":
@@ -194,10 +233,27 @@ class GemmSpec:
         once per batch element (weight GEMMs: one (N, K) matrix serves the
         whole batch).  Ragged grouped GEMMs (``valid_rows``) bill only the
         valid rows of the ragged operand(s) and — for ``ragged_dim == "m"``
-        — of the output."""
+        — of the output.
+
+        Backward-epilogue traffic is billed where it actually flows:
+        ``*_dact`` pass events (the two-pass fallback) pay the full
+        ``ds = dZ ⊙ act'`` HBM round-trip (read dZ, read the saved
+        activation residual, write ds) and ``*_dbias`` events pay the
+        separate bias-grad reduction; fused dispatches instead add the
+        streamed derivative operand (``fused_bwd``) and the db output row
+        (``fused_bias_grad``) to the GEMM's own operand bytes — strictly
+        less than the round-trip they replace."""
         cb = jnp.dtype(self.policy.compute_dtype).itemsize
         ob = jnp.dtype(self.policy.out_dtype).itemsize
+        ab = jnp.dtype(self.policy.accum_dtype).itemsize
         bg = self.batch * self.groups
+        if self.op.endswith("_dact"):
+            # standalone ds = dZ * act'(residual) over the (M, K) cotangent:
+            # read dZ, read the residual, write ds
+            return 3 * bg * self.m * self.k * cb
+        if self.op.endswith("_dbias"):
+            # separate bias-grad pass: re-read the cotangent, write the row
+            return bg * self.m * self.k * cb + self.k * ab
         if self.valid_rows is None:
             x_elems = bg * self.m * self.n
             z_elems = bg * self.m * self.k
@@ -211,7 +267,14 @@ class GemmSpec:
             z_elems = bg * self.m * self.k
             w_elems = (self.groups * self.n if self.w_shared
                        else self.batch * self.valid_rows) * self.k
-        return x_elems * cb + z_elems * ob + w_elems * cb
+        total = x_elems * cb + z_elems * ob + w_elems * cb
+        if self.fused_bwd and self.grad_epilogue is not None:
+            # the streamed derivative operand shadows the dZ operand: the
+            # x slot on dX ("nt"), the w slot on dW ("tn")
+            total += (x_elems if self.op.endswith("_dx") else w_elems) * cb
+        if self.fused_bias_grad:
+            total += self.k * ab   # the fused db output row
+        return total
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,13 +283,18 @@ class GemmEvent:
 
     ``count`` is the trace-context multiplicity (see :func:`repeat`):
     a GEMM traced inside a 28-layer ``lax.scan`` body appears once with
-    ``count=28``.
+    ``count=28``.  ``recompute`` marks events emitted during a
+    ``jax.checkpoint`` recompute trace — the GEMM re-executes during the
+    backward pass (real flops/bytes at run time, but not new forward
+    work); such events inherit the multiplicity captured at the *primal*
+    forward trace.
     """
 
     spec: GemmSpec
     backend: str
 
     count: int = 1
+    recompute: bool = False
 
     @property
     def flops(self) -> int:
@@ -246,12 +314,22 @@ class GemmEvent:
 
 
 def is_backward_op(op: str) -> bool:
-    """True for op tags emitted by the Engine's VJP rules (dX / dW).
+    """True for op tags emitted by the Engine's VJP rules (dX / dW GEMMs
+    and the ``*_dact`` / ``*_dbias`` epilogue pass events of the two-pass
+    fallback).
 
     The single source of truth for the fwd/bwd event split —
     :mod:`repro.roofline.analysis` and :mod:`repro.core.perf_model` both
     defer here."""
-    return op.endswith(("_dx", "_dw"))
+    return op.endswith(("_dx", "_dw", "_dact", "_dbias"))
+
+
+def is_pass_op(op: str) -> bool:
+    """True for non-GEMM *pass* events: the standalone ``ds = dZ ⊙ act'``
+    multiply (``*_dact``) and the separate bias-grad reduction
+    (``*_dbias``) that the two-pass backward fallback performs.  Pass
+    events carry HBM bytes but zero MAC flops; cycle models skip them."""
+    return op.endswith(("_dact", "_dbias"))
 
 
 def total_flops(events: Sequence[GemmEvent]) -> int:
@@ -307,6 +385,20 @@ class BackendSpec:
       backend contracts accordingly without materializing a transpose.
       Backends *without* this flag only ever see "nn" specs — the engine
       pre-transposes backward operands before dispatching to them.
+    * ``"fused_bwd_epilogue"`` — ``fn`` additionally accepts
+      ``fn(a, b, *, spec, deriv=None, bias_grad=False)`` on backward
+      dispatches.  When ``spec.grad_epilogue`` is set, ``deriv`` is the
+      activation-derivative operand (the fused forward output when
+      ``spec.grad_mode == "output"``, else the saved pre-activation),
+      stored exactly like the dZ operand; the backend must apply
+      ``ds = dZ * act'(deriv)`` to the dZ tiles *on load*, in the accum
+      dtype, so ``ds`` is never materialized in HBM.  With
+      ``bias_grad=True`` (only on "tn" dW dispatches) ``fn`` returns
+      ``(dW, db)`` where ``db`` is the accum-dtype ``(K,)`` row sum of
+      the (derivative-adjusted) dZ rows, accumulated in the same pass.
+      Backends without this flag get the engine's two-pass fallback (a
+      standalone ``ds`` multiply + separate bias-grad reduction, billed
+      as ``*_dact`` / ``*_dbias`` pass events).  Requires ``"layouts"``.
     """
 
     name: str
@@ -345,7 +437,8 @@ def register_backend(
     if not name or not isinstance(name, str):
         raise ValueError(f"backend name must be a non-empty string, got {name!r}")
     caps = frozenset(capabilities)
-    unknown = caps - {"fused_epilogue", "tiled", "layouts"}
+    unknown = caps - {"fused_epilogue", "tiled", "layouts",
+                      "fused_bwd_epilogue"}
     if unknown:
         raise ValueError(f"unknown backend capabilities: {sorted(unknown)}")
     spec = BackendSpec(name=name, fn=fn, available=available,
@@ -448,9 +541,14 @@ def instrument() -> Iterator[List[GemmEvent]]:
 
     Nested collectors each observe all events.  Events are emitted at trace
     time — wrap the *tracing* call (first invocation, ``.lower()`` or
-    ``jax.eval_shape``), not a cached jit re-execution."""
+    ``jax.eval_shape``), not a cached jit re-execution.  Entering the
+    *outermost* collector also resets the per-call primal/recompute
+    bookkeeping (``jax.checkpoint`` detection — see ``_fwd_trace_kind``),
+    so each instrumented trace classifies forward re-traces afresh."""
     events: List[GemmEvent] = []
     stack = _collectors()
+    if not stack:
+        _state.fwd_seen = {}
     stack.append(events)
     try:
         yield events
@@ -495,7 +593,7 @@ def repeat(n: int):
 
 
 def _emit(spec: GemmSpec, backend: str,
-          count: Optional[int] = None) -> None:
+          count: Optional[int] = None, recompute: bool = False) -> None:
     """Append one event to every active collector.
 
     ``count`` overrides the live :func:`repeat` multiplier — backward
@@ -506,7 +604,8 @@ def _emit(spec: GemmSpec, backend: str,
     if not stack or getattr(_state, "paused", False):
         return
     ev = GemmEvent(spec=spec, backend=backend,
-                   count=_repeat_multiplier() if count is None else count)
+                   count=_repeat_multiplier() if count is None else count,
+                   recompute=recompute)
     for events in stack:
         events.append(ev)
 
@@ -548,7 +647,9 @@ def _xla_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec) -> jax.Array:
 
 def _pallas_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
                interpret: bool = False, bias: Optional[jax.Array] = None,
-               fuse_epilogue: bool = False) -> jax.Array:
+               fuse_epilogue: bool = False,
+               deriv: Optional[jax.Array] = None,
+               bias_grad: bool = False):
     """The Pallas RedMulE kernel (X-stationary, W-streamed, store-once Z).
 
     With ``fuse_epilogue=True`` the bias row and ``spec.epilogue`` are
@@ -556,22 +657,37 @@ def _pallas_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
     capability contract) — on the 2D *and* the batched-grid kernel.
     ``spec.layout`` selects the transpose-layout kernel entry points
     (the "layouts" capability): backward operands stay in their forward
-    storage, the BlockSpec walk changes instead."""
+    storage, the BlockSpec walk changes instead.  ``deriv``/``bias_grad``
+    implement the "fused_bwd_epilogue" contract on the 2D kernel: act' is
+    applied to the dZ tiles on load and — for ``bias_grad`` — the bias
+    grad accumulates as a second kernel output (see
+    :mod:`repro.kernels.redmule_matmul`)."""
     from repro.kernels import ops  # local import: kernels depend on core
 
     policy, tile, layout = spec.policy, spec.tile, spec.layout
     kw = dict(policy=policy, tile=tile, layout=layout, interpret=interpret,
               bias=bias if fuse_epilogue else None,
               epilogue=spec.epilogue if fuse_epilogue else None)
+    fused_bwd = deriv is not None or bias_grad
+    if fused_bwd:
+        kw.update(deriv=deriv, grad_epilogue=spec.grad_epilogue,
+                  grad_from_output=spec.grad_mode == "output",
+                  bias_grad=bias_grad)
     if wc.ndim == 2 and (xc.ndim == 2 or layout != "tn"):
         # weight GEMM: collapse leading dims into rows (nn/nt store the
         # logical M in x's second-to-last dim, so the collapse is exact)
         lead = xc.shape[:-2]
         x2 = xc.reshape((-1, xc.shape[-1])) if lead else xc
-        z2 = ops.redmule_matmul(x2, wc, **kw)
+        if deriv is not None and lead:
+            kw["deriv"] = deriv.reshape((-1, deriv.shape[-1]))
+        out = ops.redmule_matmul(x2, wc, **kw)
+        z2, db = out if bias_grad else (out, None)
         m = xc.shape[-1] if layout == "tn" else xc.shape[-2]
         k = wc.shape[-2] if layout == "nt" else wc.shape[-1]
-        return z2.reshape((*lead, m, k))
+        z = z2.reshape((*lead, m, k))
+        return (z, db) if bias_grad else z
+    assert not fused_bwd, \
+        "fused backward epilogues are a 2D-weight (w_shared) contract"
     lead = np.broadcast_shapes(xc.shape[:-2], wc.shape[:-2])
     xb = jnp.broadcast_to(xc, (*lead, *xc.shape[-2:])).reshape(
         (-1, *xc.shape[-2:]))
@@ -585,9 +701,12 @@ def _pallas_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
 
 def _interpret_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
                   bias: Optional[jax.Array] = None,
-                  fuse_epilogue: bool = False) -> jax.Array:
+                  fuse_epilogue: bool = False,
+                  deriv: Optional[jax.Array] = None,
+                  bias_grad: bool = False):
     return _pallas_fn(xc, wc, spec=spec, interpret=True, bias=bias,
-                      fuse_epilogue=fuse_epilogue)
+                      fuse_epilogue=fuse_epilogue, deriv=deriv,
+                      bias_grad=bias_grad)
 
 
 register_backend(
@@ -600,17 +719,22 @@ register_backend(
 register_backend(
     "pallas", _pallas_fn,
     available=lambda: jax.default_backend() == "tpu",
-    capabilities=("fused_epilogue", "tiled", "layouts"),
-    description="TPU Pallas RedMulE kernel (X-stationary, W-streamed, "
-                "VMEM fp32 scratch, store-once Z with the bias+activation "
-                "epilogue fused into the store; nt/tn entry points serve "
-                "the backward pass without materialized transposes)")
+    capabilities=("fused_epilogue", "tiled", "layouts",
+                  "fused_bwd_epilogue"),
+    description="TPU Pallas RedMulE kernel (double-buffered in-kernel "
+                "K-loop, store-once Z with the bias+activation epilogue "
+                "fused into the store; nt/tn entry points serve the "
+                "backward pass without materialized transposes, with "
+                "act' applied to dZ on load and the bias grad accumulated "
+                "in the dW pass — ds never touches HBM)")
 register_backend(
     "interpret", _interpret_fn,
-    capabilities=("fused_epilogue", "tiled", "layouts"),
+    capabilities=("fused_epilogue", "tiled", "layouts",
+                  "fused_bwd_epilogue"),
     description="the same Pallas kernel body in interpreter mode "
                 "(CPU CI; bit-faithful to the kernel's schedule, fused "
-                "epilogue and transpose layouts included)")
+                "forward and backward epilogues and transpose layouts "
+                "included)")
 
 
 # Fused epilogue registry — shared with the kernels (repro.core.epilogues)
@@ -632,17 +756,24 @@ def _resolve_tile(
     backend: str,
     epilogue: Optional[str] = None,
     layout: str = "nn",
+    fused_bwd: bool = False,
 ) -> tiling.TileConfig:
-    """Tile precedence: explicit arg > autotune cache > heuristic."""
+    """Tile precedence: explicit arg > autotune cache > heuristic.
+
+    ``fused_bwd`` keys fused-backward-epilogue dispatches separately: the
+    streamed derivative operand changes the VMEM working set and the
+    DMA-per-FLOP ratio, so their tuned tiles must not collide with plain
+    transpose-layout GEMMs of the same shape."""
     if tile is not None:
         return tile
     t = autotune.cached_tile(m, n, k, policy=policy, backend=backend,
-                             epilogue=epilogue, layout=layout)
+                             epilogue=epilogue, layout=layout,
+                             fused_bwd=fused_bwd)
     if t is not None:
         return t
     return tiling.choose_tiles(
         m, n, k, compute_dtype=policy.compute_dtype,
-        accum_dtype=policy.accum_dtype)
+        accum_dtype=policy.accum_dtype, fused_bwd=fused_bwd)
 
 
 # --------------------------------------------------------------------- #
@@ -674,23 +805,72 @@ class _GradCtx:
     w_dtype: str
     b_dtype: Optional[str] = None
     fuse: bool = False          # linear: backend runs the fused-epilogue path
+    fuse_bwd: bool = False      # linear: backend fuses act'/db into dX/dW
 
 
 def _make_ctx(spec: GemmSpec, backend: str, x, w, b=None,
-              fuse: bool = False) -> _GradCtx:
+              fuse: bool = False, fuse_bwd: bool = False) -> _GradCtx:
     return _GradCtx(
         spec=spec, backend=backend, count=_repeat_multiplier(),
         x_dtype=jnp.dtype(x.dtype).name, w_dtype=jnp.dtype(w.dtype).name,
         b_dtype=None if b is None else jnp.dtype(b.dtype).name,
-        fuse=fuse)
+        fuse=fuse, fuse_bwd=fuse_bwd)
 
 
-def _dispatch(spec: GemmSpec, backend: str, xc: jax.Array,
-              wc: jax.Array) -> jax.Array:
-    """Emit + run one pure-GEMM dispatch on compute-dtype operands; returns
-    the backend-native result (xla: accum dtype; pallas: stored dtype)."""
-    _emit(spec, backend)
-    return get_backend(backend).fn(xc, wc, spec=spec)
+def _fwd_trace_kind(ctx: _GradCtx) -> Optional[str]:
+    """Classify one forward trace of an engine call (keyed on the call's
+    :class:`_GradCtx` identity, which both the custom-VJP primal and its
+    fwd rule share).
+
+    JAX traces each engine call's forward exactly once in an ordinary
+    program — the primal fun *or* the fwd rule, never both.  Under
+    ``jax.checkpoint`` the region is re-traced to stage out the backward
+    recompute, so the same ctx sees a **second** forward trace: that one
+    is the recompute (it executes during the backward pass at run time)
+    and its events are tagged ``recompute=True`` with the multiplicity
+    captured at the primal trace.  Any *further* traces of the same ctx
+    are partial-eval artifacts (e.g. a scanned remat body re-traced while
+    splitting the scan) that never execute — their events are suppressed,
+    so a remat train trace reports true flops/bytes.  (Known limitation:
+    nested checkpoint regions recompute more than once at run time but are
+    still reported once.)
+
+    Returns "primal", "recompute", or None (suppress).  Bookkeeping lives
+    per-thread and resets when the outermost :func:`instrument` collector
+    is entered; with no active collector nothing is observed and nothing
+    is tracked."""
+    if not _collectors() or getattr(_state, "paused", False):
+        return "primal"
+    table = getattr(_state, "fwd_seen", None)
+    if table is None:
+        table = _state.fwd_seen = {}
+    entry = table.get(id(ctx))
+    if entry is None:
+        table[id(ctx)] = [ctx, 1]   # hold ctx: no id reuse while tracked
+        return "primal"
+    entry[1] += 1
+    return "recompute" if entry[1] == 2 else None
+
+
+def _emit_fwd(ctx: _GradCtx, spec: Optional[GemmSpec] = None) -> None:
+    """Emit one *forward* event for ``ctx``, with remat-recompute
+    classification (see :func:`_fwd_trace_kind`)."""
+    kind = _fwd_trace_kind(ctx)
+    if kind == "primal":
+        _emit(spec or ctx.spec, ctx.backend)
+    elif kind == "recompute":
+        _emit(spec or ctx.spec, ctx.backend, count=ctx.count,
+              recompute=True)
+
+
+def _dispatch(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
+              spec: Optional[GemmSpec] = None) -> jax.Array:
+    """Emit + run one forward pure-GEMM dispatch on compute-dtype operands;
+    returns the backend-native result (xla: accum dtype; pallas: stored
+    dtype)."""
+    spec = spec or ctx.spec
+    _emit_fwd(ctx, spec)
+    return get_backend(ctx.backend).fn(xc, wc, spec=spec)
 
 
 def _static_valid_rows(group_sizes, m: int) -> Optional[int]:
@@ -718,12 +898,18 @@ def _unbroadcast(g: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
 
 
 def _grad_dispatch(spec: GemmSpec, backend: str, a: jax.Array, b: jax.Array,
-                   count: int) -> jax.Array:
-    """One backward GEMM through the registry.
+                   count: int, *, deriv: Optional[jax.Array] = None,
+                   want_db: bool = False,
+                   ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """One backward GEMM through the registry; returns ``(grad, db)``.
 
     ``spec`` carries a transpose layout; backends without the "layouts"
     capability get pre-transposed operands and an equivalent "nn" spec
-    (same logical m/n/k, same event accounting)."""
+    (same logical m/n/k, same event accounting).  ``deriv``/``want_db``
+    run the "fused_bwd_epilogue" contract (only ever passed to capable
+    backends): act' applied to the dZ tiles on load, and — for
+    ``want_db`` — the bias grad accumulated in the same pass (``db`` is
+    None otherwise)."""
     if spec.layout != "nn" and not get_backend(backend).supports("layouts"):
         if spec.layout == "nt":
             b = jnp.swapaxes(b, -1, -2)
@@ -731,20 +917,44 @@ def _grad_dispatch(spec: GemmSpec, backend: str, a: jax.Array, b: jax.Array,
             a = jnp.swapaxes(a, -1, -2)
         spec = dataclasses.replace(spec, layout="nn")
     _emit(spec, backend, count=count)
-    out = get_backend(backend).fn(a, b, spec=spec)
-    return out.astype(spec.policy.out_dtype)   # grad policy: accum dtype
+    fn = get_backend(backend).fn
+    if spec.fused_bwd or want_db:
+        out = fn(a, b, spec=spec, deriv=deriv, bias_grad=want_db)
+        db = None
+        if want_db:
+            out, db = out
+        return out.astype(spec.policy.out_dtype), db
+    out = fn(a, b, spec=spec)
+    return out.astype(spec.policy.out_dtype), None  # grad policy: accum
 
 
 def _bwd_gemms(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
-               dzc: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """dX = dZ·Wᵀ ("nt") and dW = Xᵀ·dZ ("tn"), both Engine dispatches.
+               dzc: jax.Array, *, deriv: Optional[jax.Array] = None,
+               grad_mode: Optional[str] = None, want_db: bool = False,
+               ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """dX = dZ·Wᵀ ("nt") and dW = Xᵀ·dZ ("tn"), both Engine dispatches;
+    returns ``(dx, dw, db)``.
 
-    ``dzc`` is the (pre-activation) cotangent in the compute dtype; the
-    returned grads are in the *accum* dtype (the caller casts to the
+    ``dzc`` is the cotangent in the compute dtype — the *pre-activation*
+    cotangent on the two-pass path, the raw output cotangent on the fused
+    path (``deriv`` set: the backend kernels apply ``act'(deriv)`` to the
+    dZ tiles on load, so ds is never materialized).  ``want_db`` makes the
+    dW dispatch accumulate the accum-dtype bias grad in the same pass.
+    The returned grads are in the *accum* dtype (the caller casts to the
     primal dtypes)."""
     spec = ctx.spec
     gpol = _grad_policy(spec.policy)
     bk = ctx.backend
+
+    if spec.valid_rows == 0:
+        # degenerate ragged backward (every group empty): the masked
+        # cotangent is identically zero, so skip the backend dispatches
+        # (and their events) entirely — the forward's mirror short-circuit
+        dx = jnp.zeros(xc.shape, gpol.out_dtype)
+        dw = jnp.zeros(wc.shape, gpol.out_dtype)
+        return dx, dw, None
+
+    act = spec.epilogue if deriv is not None else None
 
     if wc.ndim == 2:
         # weight GEMM — dW collapses all leading dims into one fat
@@ -755,26 +965,37 @@ def _bwd_gemms(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
             m=spec.m, n=spec.k, k=spec.n, batch=spec.batch,
             policy=gpol, w_shared=True,
             valid_rows=spec.valid_rows, ragged_dim="m",
+            grad_epilogue=act, grad_mode=grad_mode,
+            fused_bwd=deriv is not None,
             tile=_resolve_tile(None, m=spec.m, n=spec.k, k=spec.n,
-                               policy=gpol, backend=bk, layout="nt"),
+                               policy=gpol, backend=bk, layout="nt",
+                               fused_bwd=deriv is not None),
         )
-        dx = _grad_dispatch(dx_spec, bk, dzc, wc, ctx.count)
+        dx, _ = _grad_dispatch(dx_spec, bk, dzc, wc, ctx.count, deriv=deriv)
 
         x2 = xc.reshape((-1, xc.shape[-1]))
         dz2 = dzc.reshape((-1, dzc.shape[-1]))
+        d2 = None if deriv is None else deriv.reshape((-1, deriv.shape[-1]))
         rows = x2.shape[0]                      # batch * M
         dw_spec = GemmSpec(
             op="matmul_dw", tag="mn,mk->nk", layout="tn",
             m=spec.n, n=rows, k=spec.k, batch=1,
             policy=gpol, w_shared=False,
+            grad_epilogue=act, grad_mode=grad_mode,
+            fused_bwd=deriv is not None, fused_bias_grad=want_db,
             tile=_resolve_tile(None, m=spec.n, n=rows, k=spec.k,
-                               policy=gpol, backend=bk, layout="tn"),
+                               policy=gpol, backend=bk, layout="tn",
+                               fused_bwd=deriv is not None or want_db),
         )
-        dw = _grad_dispatch(dw_spec, bk, x2, dz2, ctx.count)
-        return dx, dw
+        dw, db = _grad_dispatch(dw_spec, bk, x2, dz2, ctx.count,
+                                deriv=d2, want_db=want_db)
+        return dx, dw, db
 
     # batched / grouped GEMM: both grads stay batched; broadcast leading
-    # dims are summed back down to the primal shapes afterwards
+    # dims are summed back down to the primal shapes afterwards.  (The
+    # fused backward epilogue is a 2D-weight contract — callers fall back
+    # to the two-pass path here.)
+    assert deriv is None and not want_db
     dx_spec = GemmSpec(
         op="matmul_dx", tag="bmk,bnk->bmn", layout="nt",
         m=spec.m, n=spec.k, k=spec.n, batch=spec.batch, groups=spec.groups,
@@ -783,8 +1004,8 @@ def _bwd_gemms(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
         tile=_resolve_tile(None, m=spec.m, n=spec.k, k=spec.n,
                            policy=gpol, backend=bk, layout="nt"),
     )
-    dx = _unbroadcast(_grad_dispatch(dx_spec, bk, dzc, wc, ctx.count),
-                      xc.shape)
+    dx, _ = _grad_dispatch(dx_spec, bk, dzc, wc, ctx.count)
+    dx = _unbroadcast(dx, xc.shape)
 
     dw_spec = GemmSpec(
         op="matmul_dw", tag="bmn,bmk->bnk", layout="tn",
@@ -795,9 +1016,9 @@ def _bwd_gemms(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
         tile=_resolve_tile(None, m=spec.n, n=spec.m, k=spec.k,
                            policy=gpol, backend=bk, layout="tn"),
     )
-    dw = _unbroadcast(_grad_dispatch(dw_spec, bk, xc, dzc, ctx.count),
-                      wc.shape)
-    return dx, dw
+    dw, _ = _grad_dispatch(dw_spec, bk, xc, dzc, ctx.count)
+    dw = _unbroadcast(dw, wc.shape)
+    return dx, dw, None
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -805,7 +1026,7 @@ def _gemm_call(ctx: _GradCtx, x: jax.Array, w: jax.Array) -> jax.Array:
     """Pure-GEMM op with a custom VJP (matmul / grouped_matmul / einsum2d
     inner dispatch / epilogue-free linear)."""
     pol = ctx.spec.policy
-    z = _dispatch(ctx.spec, ctx.backend, x.astype(pol.compute_dtype),
+    z = _dispatch(ctx, x.astype(pol.compute_dtype),
                   w.astype(pol.compute_dtype))
     return z.astype(pol.out_dtype)
 
@@ -814,14 +1035,14 @@ def _gemm_fwd(ctx: _GradCtx, x: jax.Array, w: jax.Array):
     pol = ctx.spec.policy
     xc = x.astype(pol.compute_dtype)
     wc = w.astype(pol.compute_dtype)
-    z = _dispatch(ctx.spec, ctx.backend, xc, wc).astype(pol.out_dtype)
+    z = _dispatch(ctx, xc, wc).astype(pol.out_dtype)
     return z, (xc, wc)      # residuals in the compute dtype
 
 
 def _gemm_bwd(ctx: _GradCtx, res, dz: jax.Array):
     xc, wc = res
     dzc = dz.astype(ctx.spec.policy.compute_dtype)
-    dx, dw = _bwd_gemms(ctx, xc, wc, dzc)
+    dx, dw, _ = _bwd_gemms(ctx, xc, wc, dzc)
     return dx.astype(ctx.x_dtype), dw.astype(ctx.w_dtype)
 
 
@@ -839,11 +1060,11 @@ def _linear_primal(ctx: _GradCtx, x: jax.Array, w: jax.Array,
     has_epilogue = b is not None or spec.epilogue is not None
     if has_epilogue and ctx.fuse:
         bc = None if b is None else b.astype(pol.accum_dtype)
-        _emit(spec, bk)
+        _emit_fwd(ctx)
         z = get_backend(bk).fn(xc, wc, spec=spec, bias=bc,
                                fuse_epilogue=True)
         return z.astype(pol.out_dtype)
-    z = _dispatch(spec, bk, xc, wc)
+    z = _dispatch(ctx, xc, wc)
     if has_epilogue:
         za = z.astype(pol.accum_dtype)
         if b is not None:
@@ -879,13 +1100,13 @@ def _linear_fwd_core(ctx: _GradCtx, x: jax.Array, w: jax.Array,
     # pre-activation needed: bias-fused (or post-op) GEMM, activation after
     if ctx.fuse:
         bc = None if b is None else b.astype(pol.accum_dtype)
-        _emit(spec, bk)
+        _emit_fwd(ctx)
         s = get_backend(bk).fn(
             xc, wc, spec=dataclasses.replace(spec, epilogue=None),
             bias=bc, fuse_epilogue=True)
         sa = s.astype(pol.accum_dtype)
     else:
-        s = _dispatch(spec, bk, xc, wc)
+        s = _dispatch(ctx, xc, wc)
         sa = s.astype(pol.accum_dtype)
         if b is not None:
             sa = sa + b.astype(pol.accum_dtype)
@@ -895,11 +1116,36 @@ def _linear_fwd_core(ctx: _GradCtx, x: jax.Array, w: jax.Array,
 
 def _linear_bwd_core(ctx: _GradCtx, res, dz: jax.Array):
     """Shared linear backward: activation derivative, bias-grad reduction,
-    then the two backward GEMMs."""
+    then the two backward GEMMs.
+
+    On backends with the ``"fused_bwd_epilogue"`` capability (2D weights)
+    this is **one pass**: the raw output cotangent goes straight into the
+    backward GEMMs, which apply ``act'`` to the dZ tiles on load from the
+    saved residual and accumulate the bias grad inside the dW kernel — the
+    pre-activation cotangent ``ds`` is never materialized in HBM.  Other
+    backends (and batched weights) run the two-pass fallback: a standalone
+    ``ds = dZ ⊙ act'`` multiply (billed as a ``*_dact`` pass event) and a
+    separate accum-dtype bias-grad reduction (a ``*_dbias`` event)."""
     xc, wc, aux = res
     spec = ctx.spec
     pol = spec.policy
     act = spec.epilogue
+
+    if ctx.fuse_bwd and (act is not None or ctx.b_dtype is not None):
+        deriv = grad_mode = None
+        if act is not None:
+            grad = epi.epilogue_grad(act)
+            grad_mode = ("output" if grad.deriv_from_output is not None
+                         else "preact")
+            deriv = aux.astype(pol.compute_dtype)
+        want_db = ctx.b_dtype is not None
+        dx, dw, db = _bwd_gemms(
+            ctx, xc, wc, dz.astype(pol.compute_dtype),
+            deriv=deriv, grad_mode=grad_mode, want_db=want_db)
+        if db is not None:
+            db = db.astype(ctx.b_dtype)
+        return dx.astype(ctx.x_dtype), dw.astype(ctx.w_dtype), db
+
     dza = dz.astype(pol.accum_dtype)
     if act is not None:
         grad = epi.epilogue_grad(act)
@@ -907,11 +1153,16 @@ def _linear_bwd_core(ctx: _GradCtx, res, dz: jax.Array):
             dza = dza * grad.deriv_from_output(aux.astype(pol.accum_dtype))
         else:
             dza = dza * grad.deriv(aux.astype(pol.accum_dtype))
+        # the standalone multiply materializes ds: bill its HBM round-trip
+        _emit(dataclasses.replace(spec, op=spec.op + "_dact", tile=None),
+              ctx.backend, count=ctx.count)
     db = None
     if ctx.b_dtype is not None:
         # bias grad: accum-dtype reduction over every row of the cotangent
         db = dza.sum(axis=tuple(range(dza.ndim - 1))).astype(ctx.b_dtype)
-    dx, dw = _bwd_gemms(ctx, xc, wc, dza.astype(pol.compute_dtype))
+        _emit(dataclasses.replace(spec, op=spec.op + "_dbias", tile=None),
+              ctx.backend, count=ctx.count)
+    dx, dw, _ = _bwd_gemms(ctx, xc, wc, dza.astype(pol.compute_dtype))
     return dx.astype(ctx.x_dtype), dw.astype(ctx.w_dtype), db
 
 
@@ -1088,11 +1339,18 @@ class Engine:
         weights ``(..., N, K)`` get the same contract on the batched-grid
         kernel (bias row shared across the batch).
 
-        Backward (see the module docstring): ``jax.grad`` applies the
-        activation derivative (``ds = dZ·act'(s)``, registry in
-        :mod:`repro.core.epilogues`), reduces the bias grad in the accum
-        dtype, and dispatches dX/dW through the registry as
-        ``matmul_dx`` / ``matmul_dw`` transpose-layout GEMMs."""
+        Backward (see the module docstring): ``jax.grad`` dispatches dX/dW
+        through the registry as ``matmul_dx`` / ``matmul_dw``
+        transpose-layout GEMMs.  On backends with the
+        ``"fused_bwd_epilogue"`` capability (2D weights) the backward is
+        **one pass**: the kernels apply the activation derivative
+        (registry in :mod:`repro.core.epilogues`) to the dZ tile on load
+        and accumulate the accum-dtype bias grad inside the dW kernel —
+        the pre-activation cotangent is never materialized.  Other
+        backends (and batched weights) run the two-pass fallback
+        (standalone ``ds = dZ·act'(s)`` multiply + separate bias-grad
+        reduction, billed as ``linear_dact`` / ``linear_dbias`` pass
+        events)."""
         policy = self.resolve_policy(policy)
         bk = self.resolve_backend(backend)
         epi.validate_epilogue(activation)
@@ -1120,9 +1378,14 @@ class Engine:
         )
         has_epilogue = b is not None or activation is not None
         fuse = has_epilogue and get_backend(bk).supports("fused_epilogue")
+        # one-pass backward: the dX/dW kernels apply act' to dZ on load and
+        # accumulate db in the dW pass (2D weights; batched weights keep
+        # the two-pass fallback)
+        fuse_bwd = (has_epilogue and w.ndim == 2
+                    and get_backend(bk).supports("fused_bwd_epilogue"))
         if not has_epilogue:
             return _gemm_call(_make_ctx(spec, bk, x, w), x, w)
-        ctx = _make_ctx(spec, bk, x, w, b, fuse=fuse)
+        ctx = _make_ctx(spec, bk, x, w, b, fuse=fuse, fuse_bwd=fuse_bwd)
         if b is None:
             return _linear_call_nobias(ctx, x, w)
         return _linear_call(ctx, x, w, b)

@@ -16,7 +16,13 @@ Alongside each activation lives its **derivative** (:data:`EPILOGUE_GRADS`),
 consumed by the Engine's custom-VJP rules for :func:`repro.core.engine.linear`:
 the backward pass needs ``act'(s)`` (``s`` the pre-activation accumulator) to
 turn the output cotangent into the pre-activation cotangent ``ds = dz *
-act'(s)`` before the two backward GEMMs.  Two flavours are registered:
+act'(s)`` before the two backward GEMMs.  On backends with the
+``"fused_bwd_epilogue"`` capability the derivative is applied *inside* the
+backward kernels — :mod:`repro.kernels.redmule_matmul` evaluates these
+same registry entries on the dZ tile at load time, so (like the forward
+:data:`EPILOGUES`) every derivative must be built from plain
+``jnp``/``jax.nn`` element-wise primitives that lower in a Pallas kernel
+body.  Two flavours are registered:
 
 * ``deriv(s)`` — ``act'`` from the *pre-activation* (always present);
 * ``deriv_from_output(z)`` — ``act'`` recovered from the *post-activation*

@@ -229,12 +229,19 @@ def gemms_from_events(events) -> List[Tuple[GEMM, int]]:
     independent (M, N, K) problems on the accelerator.  Backward events
     (``matmul_dx`` / ``matmul_dw`` from the Engine's custom-VJP rules) are
     ordinary pairs — a value_and_grad trace yields the full train-step
-    workload, fwd and bwd.  Ragged grouped events keep the dense per-group
-    shape here (an upper bound: the cycle model bills the padded tiles the
-    array would sweep; the event's own ``flops``/``bytes`` already scale
-    with ``valid_rows``)."""
+    workload, fwd and bwd — and ``jax.checkpoint`` recompute events count
+    too (the recompute executes at run time).  Epilogue *pass* events
+    (``*_dact`` / ``*_dbias``: the two-pass backward fallback's standalone
+    ds multiply and bias-grad reduction) carry no MACs and are skipped —
+    the cycle model prices GEMM passes on the array, not VPU element-wise
+    traffic.  Ragged grouped events keep the dense per-group shape here
+    (an upper bound: the cycle model bills the padded tiles the array
+    would sweep; the event's own ``flops``/``bytes`` already scale with
+    ``valid_rows``)."""
     out: List[Tuple[GEMM, int]] = []
     for ev in events:
+        if _is_pass(ev):
+            continue
         s = ev.spec
         out.append((GEMM(M=s.m, N=s.n, K=s.k),
                     s.batch * s.groups * ev.count))
@@ -245,7 +252,14 @@ def _is_backward(ev) -> bool:
     # lazy import: this module is pure math with no jax dependency
     from repro.core.engine import is_backward_op
 
-    return is_backward_op(ev.spec.op)
+    return is_backward_op(ev.spec.op) or getattr(ev, "recompute", False)
+
+
+def _is_pass(ev) -> bool:
+    # lazy import: this module is pure math with no jax dependency
+    from repro.core.engine import is_pass_op
+
+    return is_pass_op(ev.spec.op)
 
 
 def workload_cycles_from_events(

@@ -70,15 +70,27 @@ def _round_up(x: int, m: int) -> int:
     return _cdiv(x, m) * m
 
 
-def vmem_bytes(t: TileConfig, compute_dtype, accum_dtype) -> int:
-    """VMEM working set: double-buffered X & W tiles + resident Z accumulator."""
+def vmem_bytes(t: TileConfig, compute_dtype, accum_dtype,
+               depth: int = 2, fused_bwd: bool = False) -> int:
+    """VMEM working set: pipelined X & W tiles + resident Z accumulator.
+
+    ``depth`` is the in-kernel K-loop's buffer-slot count (2 = classic
+    double buffering, the kernel's default); each streamed operand holds
+    ``depth`` tiles in VMEM so the next K-step's DMA can land while the
+    current step's FMA runs.  ``fused_bwd`` adds the fused backward
+    epilogue's third stream — the activation-derivative tile that shadows
+    the dZ operand ((bm, bn) on "nt", (bn, bk) on "tn"; billed
+    conservatively as the larger of the two so one budget covers both
+    layouts) plus the db accumulator row."""
     cb = jnp.dtype(compute_dtype).itemsize
     ab = jnp.dtype(accum_dtype).itemsize
     x_tile = t.bm * t.bn * cb
     w_tile = t.bn * t.bk * cb
     z_acc = t.bm * t.bk * ab
     z_out = t.bm * t.bk * cb
-    return 2 * (x_tile + w_tile) + z_acc + z_out
+    d_tile = max(x_tile, w_tile) if fused_bwd else 0
+    db_row = t.bk * ab if fused_bwd else 0
+    return depth * (x_tile + w_tile + d_tile) + z_acc + z_out + db_row
 
 
 def choose_tiles(
@@ -89,6 +101,7 @@ def choose_tiles(
     compute_dtype=jnp.bfloat16,
     accum_dtype=jnp.float32,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    fused_bwd: bool = False,
 ) -> TileConfig:
     """Pick (bm, bn, bk) for a (M,N)x(N,K) GEMM.
 
@@ -101,6 +114,11 @@ def choose_tiles(
          paper's H*(P+1)-cycle pipeline fill;
       4. shrink in the order bn -> bk -> bm until the working set fits.
 
+    ``fused_bwd`` sizes the working set for a fused-backward-epilogue
+    dispatch (the derivative operand streams as a third pipelined tile —
+    see :func:`vmem_bytes`), so the shrink loop never hands the kernel a
+    tile whose fused variant would blow the budget.
+
     The Engine resolves a tile for every dispatch, at every trace, so the
     search is memoized on the canonicalized arguments (the returned
     TileConfig is frozen — sharing one instance across call sites is safe).
@@ -110,13 +128,14 @@ def choose_tiles(
     return _choose_tiles_cached(
         max(int(M), 1), max(int(N), 1), max(int(K), 1),
         jnp.dtype(compute_dtype).name, jnp.dtype(accum_dtype).name,
-        int(vmem_budget))
+        int(vmem_budget), bool(fused_bwd))
 
 
 @functools.lru_cache(maxsize=4096)
 def _choose_tiles_cached(
     M: int, N: int, K: int,
     compute_dtype: str, accum_dtype: str, vmem_budget: int,
+    fused_bwd: bool = False,
 ) -> TileConfig:
     sl = sublane(compute_dtype)
     m_cap = _round_up(min(M, 512), sl)
@@ -125,7 +144,8 @@ def _choose_tiles_cached(
 
     bm, bk, bn = m_cap, k_cap, n_cap
     # Shrink until the VMEM working set fits the budget.
-    while vmem_bytes(TileConfig(bm, bn, bk), compute_dtype, accum_dtype) > vmem_budget:
+    while vmem_bytes(TileConfig(bm, bn, bk), compute_dtype, accum_dtype,
+                     fused_bwd=fused_bwd) > vmem_budget:
         if bn > MXU_LANE:
             bn //= 2
         elif bk > MXU_LANE:

@@ -273,10 +273,13 @@ def _print_instrument_summary(events):
         print(f"[engine] {op}: calls={d['calls']} "
               f"gflops={d['flops']/1e9:.3f} gbytes={d['bytes']/1e9:.3f}")
     split = analysis.flops_by_direction(events)
+    bsplit = analysis.bytes_by_direction(events)
     fwd, bwd = split["fwd"], split["bwd"]
     ratio = (fwd + bwd) / fwd if fwd else 0.0
     print(f"[engine] fwd_gflops={fwd/1e9:.3f} bwd_gflops={bwd/1e9:.3f} "
           f"train/inference={ratio:.2f}x")
+    print(f"[engine] fwd_gbytes={bsplit['fwd']/1e9:.4f} "
+          f"bwd_gbytes={bsplit['bwd']/1e9:.4f}")
 
 
 def _ae_main(args):

@@ -37,7 +37,7 @@ __all__ = [
     "PEAK_FLOPS", "HBM_BW", "ICI_BW",
     "CollectiveOp", "parse_collectives", "collective_bytes_per_device",
     "RooflineReport", "roofline", "model_flops", "flops_from_events",
-    "is_backward_event", "flops_by_direction",
+    "is_backward_event", "flops_by_direction", "bytes_by_direction",
 ]
 
 PEAK_FLOPS = 197e12   # bf16 per chip, TPU v5e
@@ -411,11 +411,15 @@ def flops_from_events(events) -> float:
 
 
 def is_backward_event(ev) -> bool:
-    """True for events emitted by the Engine's VJP rules (dX / dW)."""
+    """True for events emitted by the Engine's VJP rules (dX / dW GEMMs
+    and the two-pass epilogue ``*_dact`` / ``*_dbias`` pass events) and
+    for ``jax.checkpoint`` recompute events — the recompute re-forward
+    executes during the backward pass, so its flops/bytes belong to the
+    backward direction."""
     # lazy import: this module parses HLO text and has no engine dependency
     from repro.core.engine import is_backward_op
 
-    return is_backward_op(ev.spec.op)
+    return is_backward_op(ev.spec.op) or getattr(ev, "recompute", False)
 
 
 def flops_by_direction(events) -> Dict[str, float]:
@@ -426,6 +430,25 @@ def flops_by_direction(events) -> Dict[str, float]:
             bwd += ev.flops * ev.count
         else:
             fwd += ev.flops * ev.count
+    return {"fwd": fwd, "bwd": bwd}
+
+
+def bytes_by_direction(events) -> Dict[str, float]:
+    """{"fwd": ..., "bwd": ...} HBM bytes of an instrumented trace.
+
+    Backward bytes include the epilogue-handling traffic wherever it
+    flows: the two-pass fallback's ``ds`` materialization round-trip and
+    separate bias-grad reduction ride on ``*_dact`` / ``*_dbias`` pass
+    events, the fused one-pass backward's derivative stream and db output
+    ride on the dX/dW events themselves — so this split is the honest
+    basis for comparing the two (CI's bwd-perf gate pins the fused path
+    strictly below the two-pass path on the AE train step)."""
+    fwd = bwd = 0.0
+    for ev in events:
+        if is_backward_event(ev):
+            bwd += ev.bytes * ev.count
+        else:
+            fwd += ev.bytes * ev.count
     return {"fwd": fwd, "bwd": bwd}
 
 

@@ -128,10 +128,57 @@ def test_cache_roundtrip_cold_miss_pick_warm_hit():
         (res.tile.bm, res.tile.bn, res.tile.bk)
     assert entry["source"] == "model"
 
+    # observability counters so far: 1 cold miss + 1 warm hit, no evictions
+    stats = autotune.cache_stats()
+    assert stats["misses"] >= 1 and stats["hits"] >= 1
+    assert stats["evictions"] == 0
+    assert set(stats) == {"entries", "hits", "misses", "evictions"}
+
     autotune.clear_cache()                                  # "new process"
     assert look() == res.tile                               # disk warm hit
     stats = autotune.cache_stats()
     assert stats["hits"] >= 1
+    assert stats["evictions"] == 0
+
+
+def test_key_separates_fused_bwd_and_depth():
+    """The fused-backward-epilogue kernel streams a third operand and the
+    pipeline depth changes the VMEM slot count — both key separately (and
+    the default key string stays PR-2/PR-3 compatible)."""
+    mk = lambda **kw: autotune.canonical_key(
+        256, 512, 256, policy=prec.TPU_BF16, backend="pallas", **kw)
+    base = mk(layout="tn")
+    assert mk(layout="tn", fused_bwd=True) != base
+    assert mk(layout="tn", pipeline_depth=3) != base
+    assert "fbwd" in mk(layout="tn", fused_bwd=True).to_str()
+    assert "-d3" in mk(layout="tn", pipeline_depth=3).to_str()
+    # defaults keep the historical key format (shipped caches stay valid)
+    assert mk().to_str() == mk(fused_bwd=False, pipeline_depth=2).to_str()
+    assert "fbwd" not in mk().to_str() and "-d2" not in mk().to_str()
+    # the cost model prices the extra deriv stream: a fused-bwd launch is
+    # never cheaper than the same tile without it
+    t = tiling.TileConfig(bm=128, bn=512, bk=256)
+    plain = autotune.predicted_cost_us(512, 2048, 512, t,
+                                       policy=prec.TPU_BF16)
+    fused = autotune.predicted_cost_us(512, 2048, 512, t,
+                                       policy=prec.TPU_BF16,
+                                       fused_bwd=True, layout="tn",
+                                       bias_grad=True)
+    assert fused >= plain
+
+
+def test_lru_eviction_counter():
+    cap = autotune._LRU_CAPACITY
+    pol = prec.TPU_BF16
+    for i in range(cap + 5):
+        key = autotune.AutotuneKey(
+            m=8 * (i + 1), n=128, k=128, compute="bfloat16",
+            accum="float32", out="bfloat16", epilogue="",
+            backend="interpret")
+        autotune.record_tile(key, tiling.TileConfig(8, 128, 128))
+    stats = autotune.cache_stats()
+    assert stats["entries"] == cap
+    assert stats["evictions"] == 5
 
 
 def test_engine_resolution_prefers_autotuned_tile():

@@ -207,9 +207,17 @@ def test_backward_events_tagged_and_layout_dispatched():
                 backend="xla").astype(jnp.float32)))(p),
             {"x": x, "w": w, "b": b})
     ops = [ev.spec.op for ev in events]
-    assert ops == ["linear", "matmul_dx", "matmul_dw"]
+    # xla lacks "fused_bwd_epilogue": the two-pass fallback bills its
+    # standalone ds multiply and separate bias-grad reduction as zero-flop
+    # pass events alongside the two backward GEMMs
+    assert ops == ["linear", "linear_dact", "linear_dbias",
+                   "matmul_dx", "matmul_dw"]
     by_op = {ev.spec.op: ev.spec for ev in events}
     fwd, dx, dw = by_op["linear"], by_op["matmul_dx"], by_op["matmul_dw"]
+    for pass_op in ("linear_dact", "linear_dbias"):
+        s = by_op[pass_op]
+        assert engine.is_pass_op(s.op) and engine.is_backward_op(s.op)
+        assert s.flops == 0 and s.bytes > 0
     # transposed problem shapes: dX contracts K, dW contracts batch*M
     assert (dx.layout, dx.m, dx.n, dx.k) == ("nt", fwd.m, fwd.k, fwd.n)
     assert (dw.layout, dw.m, dw.n, dw.k) == ("tn", fwd.n,
