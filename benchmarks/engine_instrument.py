@@ -92,8 +92,48 @@ def _ae_train_bytes_row() -> Row:
         f"ds_roundtrip_eliminated={'OK' if ok else 'MISMATCH'}")
 
 
+def _ae_train_fp8_row() -> Row:
+    """Mixed-precision (FP8 storage) vs FP16 AE train-step GEMM bytes.
+
+    The same train trace is recorded under ``mixed_fp8_e4m3`` (E4M3
+    weights/activations, E5M2 grads, per-tensor scales, FP16 datapath —
+    the mixed-precision RedMulE point) and under ``paper_fp16``, both on
+    the "interpret" backend.  The per-operand byte accounting prices the
+    FP8 streams at one byte per element, so ``engine_bytes`` drops
+    strictly below the FP16 run at **identical** ``engine_flops`` (MACs
+    are storage-width-invariant) — CI pins both totals against
+    ``benchmarks/baselines/train_bytes.json``."""
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    B = 16
+    x = jnp.asarray(SyntheticAE(batch=B).sample(0))
+
+    def trace(policy):
+        with engine.instrument() as events:
+            jax.eval_shape(
+                lambda p: jax.value_and_grad(
+                    lambda q: autoencoder.ae_loss(
+                        q, x, policy=policy, backend="interpret")[0]
+                )(p), params)
+        return events
+
+    ev8 = trace(prec.MIXED_FP8_E4M3)
+    ev16 = trace(prec.PAPER_FP16)
+    b8 = perf_model.workload_hbm_bytes_from_events(ev8)
+    b16 = perf_model.workload_hbm_bytes_from_events(ev16)
+    f8, f16 = engine.total_flops(ev8), engine.total_flops(ev16)
+    ok = b8["total"] < b16["total"] and f8 == f16
+    return (
+        "engine/ae_train_fp8", 0.0,
+        f"engine_bytes_fp8={b8['total']} engine_bytes_fp16={b16['total']} "
+        f"saved={b16['total'] - b8['total']} "
+        f"fwd={b8['fwd']} bwd={b8['bwd']} engine_flops={int(f8)} "
+        f"flops_match={'OK' if f8 == f16 else 'MISMATCH'} "
+        f"bytes_drop_flops_dont={'OK' if ok else 'MISMATCH'}")
+
+
 def run() -> list[Row]:
-    rows: list[Row] = [_linear_hotpath_row(), _ae_train_bytes_row()]
+    rows: list[Row] = [_linear_hotpath_row(), _ae_train_bytes_row(),
+                       _ae_train_fp8_row()]
     m = perf_model.DEFAULT_MODEL
 
     # --- AE forward: recorded events vs the paper's analytic enumeration ---

@@ -94,7 +94,11 @@ class AutotuneKey:
     adds a third DMA stream per K-step, which changes both the VMEM
     working set and the bandwidth balance the tile must hit.  ``depth`` is
     the in-kernel K-loop's double-buffer slot count (2 = classic double
-    buffering); deeper pipelines trade VMEM for more DMA overlap."""
+    buffering); deeper pipelines trade VMEM for more DMA overlap.
+    ``xstore``/``wstore`` key per-operand *storage* dtypes ("" = same as
+    ``compute``): an FP8-stored operand halves its DMA stream and VMEM
+    tile, so mixed-precision dispatches must not share tuned tiles with
+    uniform ones of the same logical shape."""
 
     m: int
     n: int
@@ -107,19 +111,26 @@ class AutotuneKey:
     layout: str = "nn"
     fused_bwd: bool = False
     depth: int = 2
+    xstore: str = ""   # "" = same as compute (uniform-precision policies)
+    wstore: str = ""
 
     def to_str(self) -> str:
         ep = self.epilogue or "none"
         base = (f"m{self.m}-n{self.n}-k{self.k}-{self.compute}-{self.accum}"
                 f"-{self.out}-{ep}-{self.backend}")
         # forward keys keep the PR-2 format so shipped caches stay valid;
-        # non-default flags append suffixes (PR-3 added "-nt"/"-tn")
+        # non-default flags append suffixes (PR-3 added "-nt"/"-tn",
+        # PR-5 adds per-operand storage "-x<dtype>"/"-w<dtype>")
         if self.layout != "nn":
             base = f"{base}-{self.layout}"
         if self.fused_bwd:
             base = f"{base}-fbwd"
         if self.depth != 2:
             base = f"{base}-d{self.depth}"
+        if self.xstore:
+            base = f"{base}-x{self.xstore}"
+        if self.wstore:
+            base = f"{base}-w{self.wstore}"
         return base
 
 
@@ -136,6 +147,15 @@ def bucket_dim(v: int) -> int:
     return b
 
 
+def _store_name(dtype, compute) -> str:
+    """Canonical per-operand storage key component: "" when the operand is
+    stored in the compute dtype (the uniform-precision default)."""
+    if dtype is None:
+        return ""
+    name = jnp.dtype(dtype).name
+    return "" if name == jnp.dtype(compute).name else name
+
+
 def canonical_key(
     m: int, n: int, k: int, *,
     policy: prec.Policy,
@@ -144,6 +164,8 @@ def canonical_key(
     layout: str = "nn",
     fused_bwd: bool = False,
     pipeline_depth: int = 2,
+    x_dtype=None,
+    w_dtype=None,
 ) -> AutotuneKey:
     return AutotuneKey(
         m=bucket_dim(m), n=bucket_dim(n), k=bucket_dim(k),
@@ -155,6 +177,8 @@ def canonical_key(
         layout=layout,
         fused_bwd=fused_bwd,
         depth=pipeline_depth,
+        xstore=_store_name(x_dtype, policy.compute_dtype),
+        wstore=_store_name(w_dtype, policy.compute_dtype),
     )
 
 
@@ -243,13 +267,16 @@ def cached_tile(
     layout: str = "nn",
     fused_bwd: bool = False,
     pipeline_depth: int = 2,
+    x_dtype=None,
+    w_dtype=None,
 ) -> Optional[tiling.TileConfig]:
     """Cache-only lookup (LRU, then the JSON file).  Never tunes."""
     global _hits, _misses
     key = canonical_key(m, n, k, policy=policy, backend=backend,
                         epilogue=epilogue, layout=layout,
                         fused_bwd=fused_bwd,
-                        pipeline_depth=pipeline_depth).to_str()
+                        pipeline_depth=pipeline_depth,
+                        x_dtype=x_dtype, w_dtype=w_dtype).to_str()
     with _lock:
         t = _lru.get(key)
         if t is None:
@@ -319,6 +346,8 @@ def candidate_tiles(
     max_candidates: int = 16,
     fused_bwd: bool = False,
     pipeline_depth: int = 2,
+    x_dtype=None,
+    w_dtype=None,
 ) -> List[tiling.TileConfig]:
     """MXU-aligned tile candidates that fit the VMEM budget.
 
@@ -329,7 +358,8 @@ def candidate_tiles(
     ``fused_bwd``/``pipeline_depth`` size the budget check for the fused
     backward epilogue's third stream and the K-loop's slot count, so a
     candidate validated here never over-allocates VMEM when dispatched
-    with a derivative operand."""
+    with a derivative operand.  ``x_dtype``/``w_dtype`` size (and price)
+    per-operand storage widths."""
     sl = tiling.sublane(policy.compute_dtype)
     m_cap = _round_up(max(int(m), 1), sl)
     n_cap = _round_up(max(int(n), 1), tiling.MXU_LANE)
@@ -349,19 +379,24 @@ def candidate_tiles(
             return
         if tiling.vmem_bytes(t, policy.compute_dtype, policy.accum_dtype,
                              depth=pipeline_depth,
-                             fused_bwd=fused_bwd) > vmem_budget:
+                             fused_bwd=fused_bwd,
+                             x_dtype=x_dtype,
+                             w_dtype=w_dtype) > vmem_budget:
             return
         seen.add(key)
         out.append(t)
 
     _add(tiling.choose_tiles(m, n, k, compute_dtype=policy.compute_dtype,
                              accum_dtype=policy.accum_dtype,
-                             vmem_budget=vmem_budget, fused_bwd=fused_bwd))
+                             vmem_budget=vmem_budget, fused_bwd=fused_bwd,
+                             x_dtype=x_dtype, w_dtype=w_dtype))
     for bm in bms:
         for bn in bns:
             for bk in bks:
                 _add(tiling.TileConfig(bm=bm, bn=bn, bk=bk))
-    out.sort(key=lambda t: predicted_cost_us(m, n, k, t, policy=policy))
+    out.sort(key=lambda t: predicted_cost_us(m, n, k, t, policy=policy,
+                                             x_dtype=x_dtype,
+                                             w_dtype=w_dtype))
     return out[:max_candidates]
 
 
@@ -376,6 +411,8 @@ def predicted_cost_us(
     layout: str = "nn",
     bias_grad: bool = False,
     pipeline_depth: int = 2,
+    x_dtype=None,
+    w_dtype=None,
 ) -> float:
     """Deterministic roofline cost model of one kernel launch, in µs.
 
@@ -398,7 +435,10 @@ def predicted_cost_us(
     (:class:`repro.core.engine.GemmSpec`), which this kernel-local model
     deliberately leaves out of a single launch's cost.  ``pipeline_depth``
     only changes VMEM occupancy (slots), not the steady-state stream time,
-    so it rides in the key but not the time term."""
+    so it rides in the key but not the time term.  ``x_dtype``/``w_dtype``
+    price per-operand *storage* widths (None -> compute): FP8 storage
+    halves that operand's stream bytes — flops are width-invariant, so
+    narrow storage moves the launch toward the compute roof."""
     mp = _round_up(max(int(m), 1), tile.bm)
     np_ = _round_up(max(int(n), 1), tile.bn)
     kp = _round_up(max(int(k), 1), tile.bk)
@@ -407,12 +447,15 @@ def predicted_cost_us(
     cb = jnp.dtype(policy.compute_dtype).itemsize
     ob = jnp.dtype(policy.out_dtype).itemsize
     ab = jnp.dtype(policy.accum_dtype).itemsize
-    step_elems = tile.bm * tile.bn + tile.bn * tile.bk
+    xb = jnp.dtype(x_dtype).itemsize if x_dtype is not None else cb
+    wb = jnp.dtype(w_dtype).itemsize if w_dtype is not None else cb
+    step_bytes = tile.bm * tile.bn * xb + tile.bn * tile.bk * wb
     if fused_bwd:
-        # the deriv stream shadows the dZ operand's tile walk
-        step_elems += (tile.bn * tile.bk if layout == "tn"
-                       else tile.bm * tile.bn)
-    hbm_bytes = (steps * step_elems * cb
+        # the deriv stream shadows the dZ operand's tile walk (the saved
+        # residual rides in the compute dtype)
+        step_bytes += (tile.bn * tile.bk if layout == "tn"
+                       else tile.bm * tile.bn) * cb
+    hbm_bytes = (steps * step_bytes
                  + gm * gk * tile.bm * tile.bk * ob)
     if bias_grad:
         hbm_bytes += gm * gk * tile.bk * ab   # the fused db output row
@@ -509,6 +552,8 @@ def autotune_gemm(
     max_candidates: int = 16,
     mode: Optional[str] = None,
     record: bool = True,
+    x_dtype=None,
+    w_dtype=None,
 ) -> AutotuneResult:
     """Tune one GEMM shape and (by default) record the winner in the cache.
 
@@ -534,7 +579,8 @@ def autotune_gemm(
     cands = candidate_tiles(m, n, k, policy=policy, vmem_budget=vmem_budget,
                             max_candidates=max_candidates,
                             fused_bwd=fused_bwd,
-                            pipeline_depth=pipeline_depth)
+                            pipeline_depth=pipeline_depth,
+                            x_dtype=x_dtype, w_dtype=w_dtype)
     scores: List[Tuple[Tuple[int, int, int], float]] = []
     best: Optional[tiling.TileConfig] = None
     best_us = float("inf")
@@ -549,7 +595,8 @@ def autotune_gemm(
             us = predicted_cost_us(m, n, k, t, policy=policy,
                                    fused_bwd=fused_bwd, layout=layout,
                                    bias_grad=bias_grad,
-                                   pipeline_depth=pipeline_depth)
+                                   pipeline_depth=pipeline_depth,
+                                   x_dtype=x_dtype, w_dtype=w_dtype)
         scores.append(((t.bm, t.bn, t.bk), us))
         if us < best_us:
             best, best_us = t, us
@@ -557,7 +604,8 @@ def autotune_gemm(
 
     key = canonical_key(m, n, k, policy=policy, backend=backend,
                         epilogue=epilogue, layout=layout,
-                        fused_bwd=fused_bwd, pipeline_depth=pipeline_depth)
+                        fused_bwd=fused_bwd, pipeline_depth=pipeline_depth,
+                        x_dtype=x_dtype, w_dtype=w_dtype)
     if record:
         record_tile(key, best, source=mode, us=best_us)
     return AutotuneResult(key=key, tile=best, us=best_us, source=mode,

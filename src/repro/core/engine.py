@@ -93,6 +93,40 @@ Engine instead of falling back to XLA-derived ``dot_general`` transposes:
   *forward* trace time — a GEMM traced in a scanned layer body gets the
   same ``count`` on its dX/dW events even though JAX traces the backward
   scan outside the ``repeat`` context.
+
+**The mixed-precision contract** (per-operand storage, PR 5).  A
+:class:`~repro.core.precision.Policy` may store each operand narrower
+than it computes (``x_dtype`` / ``w_dtype`` / ``grad_dtype``; the FP8
+policies ``mixed_fp8_e4m3`` / ``mixed_fp8_e5m2``):
+
+* the engine quantizes FP8 operands **per tensor** around every dispatch
+  (``q = v / s``, ``s = amax`` — unit-max, so the binary16 datapath
+  cannot overflow) and multiplies the scale product
+  back into the accumulator afterwards; backends with the
+  ``"operand_dtypes"`` capability receive the narrow arrays and upcast
+  tiles to the compute dtype *on load* inside their kernels (no HBM-side
+  cast pass), others receive the quantized values widened before
+  dispatch — the quantization point is backend-invariant, so the same
+  policy yields the same numerics on every backend;
+* residuals are saved in the dispatch storage (FP8), so the backward
+  GEMMs re-read them narrow; the cotangent quantizes to ``grad_dtype``
+  (E5M2: range over precision) *after* the activation-derivative
+  multiply, once, in the engine — scaled specs therefore always run the
+  post-op epilogue and the two-pass backward (``fuse``/``fuse_bwd`` off),
+  and the bias grad reduces from the wide cotangent (no FP8 error); the
+  forced post-op forward pass is billed honestly as a ``*_postep`` pass
+  event (the stored result's HBM round-trip — so FP8 traces compare
+  like-for-like against fused FP16 ones);
+* ``GemmSpec.x_dtype`` / ``w_dtype`` record what each slot actually
+  carried, and the byte accounting prices each operand at its true
+  element width — **bytes drop, flops don't** (the paper's successor
+  engine's whole point);
+* **FP8 tolerance rows** (extending the fused-vs-unfused table in
+  :meth:`Engine.linear`): quantize→dequantize round-trips are bounded by
+  the format's relative epsilon (E4M3: 2⁻³; E5M2: 2⁻²) for values within
+  ~2⁻⁹ of the tensor amax; cross-backend grads under one FP8 policy
+  agree to the *compute*-dtype tolerance (fp16 ~2e-2), because the FP8
+  rounding itself is deterministic and shared.
 """
 
 from __future__ import annotations
@@ -190,6 +224,17 @@ class GemmSpec:
       fused_bias_grad: True when this (dW) dispatch also accumulates
         ``db = Σ_rows ds`` into a second accum-dtype output in the same
         pass (no separate ``*_dbias`` reduction event).
+      x_dtype / w_dtype: per-operand *storage* dtype names the dispatch
+        actually carries (None = the policy's compute dtype).  Under a
+        mixed-storage policy on an ``"operand_dtypes"``-capable backend
+        these are the narrow (FP8) names — the byte accounting prices
+        each operand slot at its true element width.  On backward
+        dispatches the slots swap roles (the dZ operand rides in the
+        *grad* storage: the x slot on dX, the w slot on dW).
+      scaled: True when per-tensor scales travel with this dispatch (FP8
+        storage): the engine quantizes ``q = v / s`` before the GEMM and
+        multiplies the scale product back into the accumulator after —
+        scale scalars are metadata here, their bytes are negligible.
     """
 
     op: str
@@ -211,6 +256,22 @@ class GemmSpec:
     grad_mode: Optional[str] = None
     fused_bwd: bool = False
     fused_bias_grad: bool = False
+    x_dtype: Optional[str] = None
+    w_dtype: Optional[str] = None
+    scaled: bool = False
+
+    def __post_init__(self):
+        if self.layout not in ("nn", "nt", "tn"):
+            raise ValueError(
+                f"GemmSpec.layout = {self.layout!r}; known: ('nn', 'nt', 'tn')")
+        if self.ragged_dim not in ("m", "n"):
+            raise ValueError(
+                f"GemmSpec.ragged_dim = {self.ragged_dim!r}; known: ('m', 'n')")
+        # a typo'd dtype fails here, naming the field, instead of deep in
+        # Pallas lowering (one validator shared with Policy)
+        for f in ("x_dtype", "w_dtype"):
+            prec._validate_dtype("GemmSpec", f, getattr(self, f),
+                                 optional=True)
 
     @property
     def flops(self) -> int:
@@ -242,10 +303,18 @@ class GemmSpec:
         separate bias-grad reduction; fused dispatches instead add the
         streamed derivative operand (``fused_bwd``) and the db output row
         (``fused_bias_grad``) to the GEMM's own operand bytes — strictly
-        less than the round-trip they replace."""
+        less than the round-trip they replace.
+
+        Per-operand storage (``x_dtype`` / ``w_dtype``) prices each
+        operand slot at its **true element width**: an FP8-stored operand
+        pays one byte per element while the output (and the streamed
+        derivative residual) stay at the out/compute width — narrower
+        storage drops bytes, never flops."""
         cb = jnp.dtype(self.policy.compute_dtype).itemsize
         ob = jnp.dtype(self.policy.out_dtype).itemsize
         ab = jnp.dtype(self.policy.accum_dtype).itemsize
+        xb = jnp.dtype(self.x_dtype).itemsize if self.x_dtype else cb
+        wb = jnp.dtype(self.w_dtype).itemsize if self.w_dtype else cb
         bg = self.batch * self.groups
         if self.op.endswith("_dact"):
             # standalone ds = dZ * act'(residual) over the (M, K) cotangent:
@@ -254,6 +323,11 @@ class GemmSpec:
         if self.op.endswith("_dbias"):
             # separate bias-grad pass: re-read the cotangent, write the row
             return bg * self.m * self.k * cb + self.k * ab
+        if self.op.endswith("_postep"):
+            # the policy-forced post-op epilogue pass (scaled specs only):
+            # the stored GEMM result round-trips HBM around the
+            # scale-undo + bias/activation, plus the accum-dtype bias row
+            return 2 * bg * self.m * self.k * ob + self.k * ab
         if self.valid_rows is None:
             x_elems = bg * self.m * self.n
             z_elems = bg * self.m * self.k
@@ -267,10 +341,11 @@ class GemmSpec:
             z_elems = bg * self.m * self.k
             w_elems = (self.groups * self.n if self.w_shared
                        else self.batch * self.valid_rows) * self.k
-        total = x_elems * cb + z_elems * ob + w_elems * cb
+        total = x_elems * xb + z_elems * ob + w_elems * wb
         if self.fused_bwd and self.grad_epilogue is not None:
             # the streamed derivative operand shadows the dZ operand: the
-            # x slot on dX ("nt"), the w slot on dW ("tn")
+            # x slot on dX ("nt"), the w slot on dW ("tn"); the residual
+            # rides in the compute dtype
             total += (x_elems if self.op.endswith("_dx") else w_elems) * cb
         if self.fused_bias_grad:
             total += self.k * ab   # the fused db output row
@@ -327,9 +402,11 @@ def is_backward_op(op: str) -> bool:
 def is_pass_op(op: str) -> bool:
     """True for non-GEMM *pass* events: the standalone ``ds = dZ ⊙ act'``
     multiply (``*_dact``) and the separate bias-grad reduction
-    (``*_dbias``) that the two-pass backward fallback performs.  Pass
-    events carry HBM bytes but zero MAC flops; cycle models skip them."""
-    return op.endswith(("_dact", "_dbias"))
+    (``*_dbias``) of the two-pass backward fallback, and the
+    policy-forced post-op epilogue round-trip of scaled FP8 forwards
+    (``*_postep`` — a forward event).  Pass events carry HBM bytes but
+    zero MAC flops; cycle models skip them."""
+    return op.endswith(("_dact", "_dbias", "_postep"))
 
 
 def total_flops(events: Sequence[GemmEvent]) -> int:
@@ -364,7 +441,9 @@ class BackendSpec:
     """A registered backend: ``fn(x, w, *, spec) -> array``.
 
     ``fn`` receives operands already cast to ``spec.policy.compute_dtype``
-    with ``x: (..., M, N)`` and ``w: (N, K)`` or broadcast-compatible
+    (or, with the ``"operand_dtypes"`` capability, to the per-operand
+    storage dtypes named by ``spec.x_dtype``/``spec.w_dtype``) with
+    ``x: (..., M, N)`` and ``w: (N, K)`` or broadcast-compatible
     ``(..., N, K)``; it returns ``(..., M, K)`` in any float dtype (the
     engine downcasts to ``spec.policy.out_dtype``).
 
@@ -399,6 +478,15 @@ class BackendSpec:
       Backends without this flag get the engine's two-pass fallback (a
       standalone ``ds`` multiply + separate bias-grad reduction, billed
       as ``*_dact`` / ``*_dbias`` pass events).  Requires ``"layouts"``.
+    * ``"operand_dtypes"`` — ``fn`` accepts operands in per-operand
+      *storage* dtypes narrower than ``spec.policy.compute_dtype`` (FP8
+      under the mixed-precision policies; ``spec.x_dtype`` /
+      ``spec.w_dtype`` name what each slot carries) and upcasts them to
+      the compute dtype **on load** inside its kernel — the result must
+      equal dispatching the pre-upcast operands.  Backends without this
+      flag only ever see compute-dtype operands: the engine widens the
+      (already-quantized) values before dispatch, an HBM-side cast pass
+      billed at the wide width.
     """
 
     name: str
@@ -438,7 +526,7 @@ def register_backend(
         raise ValueError(f"backend name must be a non-empty string, got {name!r}")
     caps = frozenset(capabilities)
     unknown = caps - {"fused_epilogue", "tiled", "layouts",
-                      "fused_bwd_epilogue"}
+                      "fused_bwd_epilogue", "operand_dtypes"}
     if unknown:
         raise ValueError(f"unknown backend capabilities: {sorted(unknown)}")
     spec = BackendSpec(name=name, fn=fn, available=available,
@@ -619,8 +707,16 @@ def _xla_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec) -> jax.Array:
     Honors ``spec.layout`` ("layouts" capability): the contraction axis of
     each operand moves with the storage, so transpose-layout backward
     dispatches lower to a single ``dot_general`` — XLA fuses the transposed
-    access into the dot, no materialized transpose."""
+    access into the dot, no materialized transpose.  Honors per-operand
+    storage dtypes ("operand_dtypes" capability): narrower (FP8) operands
+    are widened right at the dot's input, a cast XLA fuses into the
+    contraction — HBM-side the operand stays at storage width."""
     policy = spec.policy
+    comp = jnp.dtype(policy.compute_dtype)
+    if xc.dtype != comp:
+        xc = xc.astype(comp)
+    if wc.dtype != comp:
+        wc = wc.astype(comp)
     # per-layout contraction axis, counted from the end of each operand
     x_coff = 2 if spec.layout == "tn" else 1   # x stored (N, M) under tn
     w_coff = 1 if spec.layout == "nt" else 2   # w stored (K, N) under nt
@@ -711,30 +807,32 @@ def _interpret_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
 
 register_backend(
     "xla", _xla_fn,
-    capabilities=("layouts",),
+    capabilities=("layouts", "operand_dtypes"),
     description="lax.dot_general with the engine's precision policy "
                 "(production fallback; XLA:CPU dry-runs; epilogues applied "
                 "post-op by the engine; transpose layouts fold into the "
-                "dot's dimension numbers)")
+                "dot's dimension numbers; FP8 storage widens at the dot's "
+                "input — the cast fuses into the contraction)")
 register_backend(
     "pallas", _pallas_fn,
     available=lambda: jax.default_backend() == "tpu",
     capabilities=("fused_epilogue", "tiled", "layouts",
-                  "fused_bwd_epilogue"),
+                  "fused_bwd_epilogue", "operand_dtypes"),
     description="TPU Pallas RedMulE kernel (double-buffered in-kernel "
                 "K-loop, store-once Z with the bias+activation epilogue "
                 "fused into the store; nt/tn entry points serve the "
                 "backward pass without materialized transposes, with "
                 "act' applied to dZ on load and the bias grad accumulated "
-                "in the dW pass — ds never touches HBM)")
+                "in the dW pass — ds never touches HBM; FP8 storage tiles "
+                "DMA narrow and upcast on load inside the K-loop)")
 register_backend(
     "interpret", _interpret_fn,
     capabilities=("fused_epilogue", "tiled", "layouts",
-                  "fused_bwd_epilogue"),
+                  "fused_bwd_epilogue", "operand_dtypes"),
     description="the same Pallas kernel body in interpreter mode "
                 "(CPU CI; bit-faithful to the kernel's schedule, fused "
-                "forward and backward epilogues and transpose layouts "
-                "included)")
+                "forward and backward epilogues, transpose layouts and "
+                "FP8 upcast-on-load included)")
 
 
 # Fused epilogue registry — shared with the kernels (repro.core.epilogues)
@@ -757,23 +855,93 @@ def _resolve_tile(
     epilogue: Optional[str] = None,
     layout: str = "nn",
     fused_bwd: bool = False,
+    x_dtype: Optional[str] = None,
+    w_dtype: Optional[str] = None,
 ) -> tiling.TileConfig:
     """Tile precedence: explicit arg > autotune cache > heuristic.
 
     ``fused_bwd`` keys fused-backward-epilogue dispatches separately: the
     streamed derivative operand changes the VMEM working set and the
     DMA-per-FLOP ratio, so their tuned tiles must not collide with plain
-    transpose-layout GEMMs of the same shape."""
+    transpose-layout GEMMs of the same shape.  ``x_dtype``/``w_dtype``
+    (per-operand storage names) key — and size — mixed-precision
+    dispatches: FP8 streams halve their VMEM tiles and DMA bytes."""
     if tile is not None:
         return tile
     t = autotune.cached_tile(m, n, k, policy=policy, backend=backend,
                              epilogue=epilogue, layout=layout,
-                             fused_bwd=fused_bwd)
+                             fused_bwd=fused_bwd,
+                             x_dtype=x_dtype, w_dtype=w_dtype)
     if t is not None:
         return t
     return tiling.choose_tiles(
         m, n, k, compute_dtype=policy.compute_dtype,
-        accum_dtype=policy.accum_dtype, fused_bwd=fused_bwd)
+        accum_dtype=policy.accum_dtype, fused_bwd=fused_bwd,
+        x_dtype=x_dtype, w_dtype=w_dtype)
+
+
+# --------------------------------------------------------------------- #
+# Per-operand storage: dispatch-dtype resolution and quantization
+# --------------------------------------------------------------------- #
+def _dispatch_storage(
+    policy: prec.Policy, backend: str,
+) -> Tuple[Optional[str], Optional[str], Optional[str]]:
+    """``(x_store, w_store, grad_store)`` dtype names one dispatch to
+    ``backend`` actually carries (None = the compute dtype).
+
+    Mixed-storage policies hand narrow operands only to backends with the
+    ``"operand_dtypes"`` capability (which upcast on load inside their
+    kernels); other backends receive the quantized values widened to the
+    compute dtype before dispatch — numerically identical, but an
+    HBM-side cast pass billed at the wide width."""
+    if not policy.mixed_storage:
+        return None, None, None
+    if not get_backend(backend).supports("operand_dtypes"):
+        return None, None, None
+    comp = jnp.dtype(policy.compute_dtype).name
+
+    def nm(d):
+        n = jnp.dtype(d).name
+        return None if n == comp else n
+
+    return (nm(policy.x_storage_dtype), nm(policy.w_storage_dtype),
+            nm(policy.grad_storage_dtype))
+
+
+def _prep_operand(v: jax.Array, storage_dtype, store_name: Optional[str],
+                  policy: prec.Policy,
+                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Cast (or per-tensor-quantize) one operand for dispatch.
+
+    Returns ``(array, scale)``: FP8 storage quantizes ``q = v / s`` with
+    ``s = amax`` (see :func:`repro.core.precision.quantize_fp8`)
+    and returns the f32 scalar scale; everything else casts with
+    ``scale=None``.  ``store_name`` is the dtype the dispatch carries
+    (None -> compute): when the backend can't consume narrow storage the
+    quantized values are widened back to the compute dtype — the
+    quantization point (and therefore the numerics) is backend-invariant.
+    """
+    comp = jnp.dtype(policy.compute_dtype)
+    sd = jnp.dtype(storage_dtype)
+    if prec.is_fp8(sd):
+        q, s = prec.quantize_fp8(v, sd)
+        if store_name is None:
+            q = q.astype(comp)
+        return q, s
+    q = v.astype(sd)
+    if store_name is None and sd != comp:
+        q = q.astype(comp)
+    return q, None
+
+
+def _scale_product(*scales: Optional[jax.Array]) -> Optional[jax.Array]:
+    """Product of the non-None per-tensor scales (None when there are
+    none — the uniform-precision fast path)."""
+    out = None
+    for s in scales:
+        if s is not None:
+            out = s if out is None else out * s
+    return out
 
 
 # --------------------------------------------------------------------- #
@@ -806,15 +974,17 @@ class _GradCtx:
     b_dtype: Optional[str] = None
     fuse: bool = False          # linear: backend runs the fused-epilogue path
     fuse_bwd: bool = False      # linear: backend fuses act'/db into dX/dW
+    store_g: Optional[str] = None  # grad (dZ) dispatch storage dtype name
 
 
 def _make_ctx(spec: GemmSpec, backend: str, x, w, b=None,
               fuse: bool = False, fuse_bwd: bool = False) -> _GradCtx:
+    _, _, store_g = _dispatch_storage(spec.policy, backend)
     return _GradCtx(
         spec=spec, backend=backend, count=_repeat_multiplier(),
         x_dtype=jnp.dtype(x.dtype).name, w_dtype=jnp.dtype(w.dtype).name,
         b_dtype=None if b is None else jnp.dtype(b.dtype).name,
-        fuse=fuse, fuse_bwd=fuse_bwd)
+        fuse=fuse, fuse_bwd=fuse_bwd, store_g=store_g)
 
 
 def _fwd_trace_kind(ctx: _GradCtx) -> Optional[str]:
@@ -852,24 +1022,36 @@ def _fwd_trace_kind(ctx: _GradCtx) -> Optional[str]:
     return "recompute" if entry[1] == 2 else None
 
 
-def _emit_fwd(ctx: _GradCtx, spec: Optional[GemmSpec] = None) -> None:
+def _emit_fwd(ctx: _GradCtx, spec: Optional[GemmSpec] = None,
+              extra_specs: Sequence[GemmSpec] = ()) -> None:
     """Emit one *forward* event for ``ctx``, with remat-recompute
-    classification (see :func:`_fwd_trace_kind`)."""
+    classification (see :func:`_fwd_trace_kind`).
+
+    ``extra_specs`` ride along with the *same* classification and
+    count — companion pass events (the scaled post-op ``*_postep``) must
+    be deduplicated, multiplied and recompute-tagged exactly like the
+    GEMM event they accompany, and ``_fwd_trace_kind`` is call-counted
+    per ctx, so they cannot classify separately."""
     kind = _fwd_trace_kind(ctx)
     if kind == "primal":
         _emit(spec or ctx.spec, ctx.backend)
+        for s in extra_specs:
+            _emit(s, ctx.backend)
     elif kind == "recompute":
         _emit(spec or ctx.spec, ctx.backend, count=ctx.count,
               recompute=True)
+        for s in extra_specs:
+            _emit(s, ctx.backend, count=ctx.count, recompute=True)
 
 
 def _dispatch(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
-              spec: Optional[GemmSpec] = None) -> jax.Array:
+              spec: Optional[GemmSpec] = None,
+              extra_specs: Sequence[GemmSpec] = ()) -> jax.Array:
     """Emit + run one forward pure-GEMM dispatch on compute-dtype operands;
     returns the backend-native result (xla: accum dtype; pallas: stored
     dtype)."""
     spec = spec or ctx.spec
-    _emit_fwd(ctx, spec)
+    _emit_fwd(ctx, spec, extra_specs)
     return get_backend(ctx.backend).fn(xc, wc, spec=spec)
 
 
@@ -956,6 +1138,11 @@ def _bwd_gemms(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
 
     act = spec.epilogue if deriv is not None else None
 
+    # backward per-slot storage: dZ rides in the grad storage (the x slot
+    # on dX "nt", the w slot on dW "tn"); the saved residuals keep the
+    # forward dispatch's storage (spec.x_dtype / spec.w_dtype)
+    g_store = ctx.store_g
+
     if wc.ndim == 2:
         # weight GEMM — dW collapses all leading dims into one fat
         # contraction (the X-stationary schedule reads X in its forward
@@ -967,9 +1154,11 @@ def _bwd_gemms(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
             valid_rows=spec.valid_rows, ragged_dim="m",
             grad_epilogue=act, grad_mode=grad_mode,
             fused_bwd=deriv is not None,
+            x_dtype=g_store, w_dtype=spec.w_dtype, scaled=spec.scaled,
             tile=_resolve_tile(None, m=spec.m, n=spec.k, k=spec.n,
                                policy=gpol, backend=bk, layout="nt",
-                               fused_bwd=deriv is not None),
+                               fused_bwd=deriv is not None,
+                               x_dtype=g_store, w_dtype=spec.w_dtype),
         )
         dx, _ = _grad_dispatch(dx_spec, bk, dzc, wc, ctx.count, deriv=deriv)
 
@@ -983,9 +1172,11 @@ def _bwd_gemms(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
             policy=gpol, w_shared=False,
             grad_epilogue=act, grad_mode=grad_mode,
             fused_bwd=deriv is not None, fused_bias_grad=want_db,
+            x_dtype=spec.x_dtype, w_dtype=g_store, scaled=spec.scaled,
             tile=_resolve_tile(None, m=spec.n, n=rows, k=spec.k,
                                policy=gpol, backend=bk, layout="tn",
-                               fused_bwd=deriv is not None or want_db),
+                               fused_bwd=deriv is not None or want_db,
+                               x_dtype=spec.x_dtype, w_dtype=g_store),
         )
         dw, db = _grad_dispatch(dw_spec, bk, x2, dz2, ctx.count,
                                 deriv=d2, want_db=want_db)
@@ -1001,8 +1192,10 @@ def _bwd_gemms(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
         m=spec.m, n=spec.k, k=spec.n, batch=spec.batch, groups=spec.groups,
         policy=gpol, w_shared=spec.w_shared,
         valid_rows=spec.valid_rows, ragged_dim="m",
+        x_dtype=g_store, w_dtype=spec.w_dtype, scaled=spec.scaled,
         tile=_resolve_tile(None, m=spec.m, n=spec.k, k=spec.n,
-                           policy=gpol, backend=bk, layout="nt"),
+                           policy=gpol, backend=bk, layout="nt",
+                           x_dtype=g_store, w_dtype=spec.w_dtype),
     )
     dx, _ = _grad_dispatch(dx_spec, bk, dzc, wc, ctx.count)
     dx = _unbroadcast(dx, xc.shape)
@@ -1013,12 +1206,23 @@ def _bwd_gemms(ctx: _GradCtx, xc: jax.Array, wc: jax.Array,
         policy=gpol, w_shared=False,
         valid_rows=spec.valid_rows,
         ragged_dim="n" if spec.valid_rows is not None else "m",
+        x_dtype=spec.x_dtype, w_dtype=g_store, scaled=spec.scaled,
         tile=_resolve_tile(None, m=spec.n, n=spec.m, k=spec.k,
-                           policy=gpol, backend=bk, layout="tn"),
+                           policy=gpol, backend=bk, layout="tn",
+                           x_dtype=spec.x_dtype, w_dtype=g_store),
     )
     dw, _ = _grad_dispatch(dw_spec, bk, xc, dzc, ctx.count)
     dw = _unbroadcast(dw, wc.shape)
     return dx, dw, None
+
+
+def _prep_xw(ctx: _GradCtx, x: jax.Array, w: jax.Array):
+    """Cast/quantize both GEMM operands per the spec's per-operand storage;
+    returns ``(xd, wd, sx, sw)`` (scales None on uniform policies)."""
+    pol = ctx.spec.policy
+    xd, sx = _prep_operand(x, pol.x_storage_dtype, ctx.spec.x_dtype, pol)
+    wd, sw = _prep_operand(w, pol.w_storage_dtype, ctx.spec.w_dtype, pol)
+    return xd, wd, sx, sw
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -1026,45 +1230,87 @@ def _gemm_call(ctx: _GradCtx, x: jax.Array, w: jax.Array) -> jax.Array:
     """Pure-GEMM op with a custom VJP (matmul / grouped_matmul / einsum2d
     inner dispatch / epilogue-free linear)."""
     pol = ctx.spec.policy
-    z = _dispatch(ctx, x.astype(pol.compute_dtype),
-                  w.astype(pol.compute_dtype))
+    xd, wd, sx, sw = _prep_xw(ctx, x, w)
+    z = _dispatch(ctx, xd, wd)
+    sp = _scale_product(sx, sw)
+    if sp is not None:
+        z = z.astype(pol.accum_dtype) * sp
     return z.astype(pol.out_dtype)
 
 
 def _gemm_fwd(ctx: _GradCtx, x: jax.Array, w: jax.Array):
     pol = ctx.spec.policy
-    xc = x.astype(pol.compute_dtype)
-    wc = w.astype(pol.compute_dtype)
-    z = _dispatch(ctx, xc, wc).astype(pol.out_dtype)
-    return z, (xc, wc)      # residuals in the compute dtype
+    xd, wd, sx, sw = _prep_xw(ctx, x, w)
+    z = _dispatch(ctx, xd, wd)
+    sp = _scale_product(sx, sw)
+    if sp is not None:
+        z = z.astype(pol.accum_dtype) * sp
+    # residuals stay in the *dispatch* storage (FP8 on scaled policies —
+    # the backward GEMMs re-read them narrow), scales ride alongside
+    return z.astype(pol.out_dtype), (xd, wd, sx, sw)
+
+
+def _quantized_bwd(ctx: _GradCtx, xd: jax.Array, wd: jax.Array,
+                   sx: Optional[jax.Array], sw: Optional[jax.Array],
+                   dz_wide: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Shared two-pass backward tail: quantize/cast the cotangent to the
+    grad storage, run both backward GEMMs, undo the per-tensor scales.
+
+    The scale algebra lives in exactly one place: dX = dZ·Wᵀ undoes the
+    dZ and W scales, dW = Xᵀ·dZ undoes the X and dZ scales.  Returns
+    ``(dx, dw)`` in the accum dtype (scale products are None — and the
+    multiplies skipped — on uniform policies)."""
+    pol = ctx.spec.policy
+    dzd, sdz = _prep_operand(dz_wide, pol.grad_storage_dtype, ctx.store_g,
+                             pol)
+    dx, dw, _ = _bwd_gemms(ctx, xd, wd, dzd)
+    spx = _scale_product(sdz, sw)
+    spw = _scale_product(sx, sdz)
+    if spx is not None:
+        dx = dx * spx
+    if spw is not None:
+        dw = dw * spw
+    return dx, dw
 
 
 def _gemm_bwd(ctx: _GradCtx, res, dz: jax.Array):
-    xc, wc = res
-    dzc = dz.astype(ctx.spec.policy.compute_dtype)
-    dx, dw, _ = _bwd_gemms(ctx, xc, wc, dzc)
+    xd, wd, sx, sw = res
+    dx, dw = _quantized_bwd(ctx, xd, wd, sx, sw, dz)
     return dx.astype(ctx.x_dtype), dw.astype(ctx.w_dtype)
 
 
 _gemm_call.defvjp(_gemm_fwd, _gemm_bwd)
 
 
-def _linear_primal(ctx: _GradCtx, x: jax.Array, w: jax.Array,
-                   b: Optional[jax.Array]) -> jax.Array:
-    """Inference-path linear: fused epilogue on capable backends, post-op
-    otherwise (exactly the PR-2 contract)."""
+def _linear_primal_prepped(ctx: _GradCtx, xd: jax.Array, wd: jax.Array,
+                           sp: Optional[jax.Array],
+                           b: Optional[jax.Array]) -> jax.Array:
+    """Inference-path linear on already-prepped operands: fused epilogue
+    on capable backends, post-op otherwise (exactly the PR-2 contract).
+    ``sp`` is the per-tensor scale product to undo (None on uniform
+    policies); scaled dispatches always run post-op — the scale must be
+    multiplied back into the accumulator *before* the bias/activation, so
+    :meth:`Engine.linear` never sets ``fuse`` for them."""
     spec, bk = ctx.spec, ctx.backend
     pol = spec.policy
-    xc = x.astype(pol.compute_dtype)
-    wc = w.astype(pol.compute_dtype)
     has_epilogue = b is not None or spec.epilogue is not None
     if has_epilogue and ctx.fuse:
         bc = None if b is None else b.astype(pol.accum_dtype)
         _emit_fwd(ctx)
-        z = get_backend(bk).fn(xc, wc, spec=spec, bias=bc,
+        z = get_backend(bk).fn(xd, wd, spec=spec, bias=bc,
                                fuse_epilogue=True)
         return z.astype(pol.out_dtype)
-    z = _dispatch(ctx, xc, wc)
+    # scaled specs *force* the post-op pass on every backend (the
+    # scale-undo must precede the bias/activation), so the engine bills
+    # its HBM round-trip as a companion pass event — unlike the
+    # uniform-policy post-op fallback, which is a backend choice and
+    # keeps the PR-2 unbilled convention.  It rides through _dispatch so
+    # remat recompute traces classify it exactly like the GEMM event.
+    extra = ((dataclasses.replace(spec, op=spec.op + "_postep", tile=None),)
+             if has_epilogue and spec.scaled else ())
+    z = _dispatch(ctx, xd, wd, extra_specs=extra)
+    if sp is not None:
+        z = z.astype(pol.accum_dtype) * sp
     if has_epilogue:
         za = z.astype(pol.accum_dtype)
         if b is not None:
@@ -1072,6 +1318,12 @@ def _linear_primal(ctx: _GradCtx, x: jax.Array, w: jax.Array,
         za = epi.apply_epilogue(spec.epilogue, za)
         z = za
     return z.astype(pol.out_dtype)
+
+
+def _linear_primal(ctx: _GradCtx, x: jax.Array, w: jax.Array,
+                   b: Optional[jax.Array]) -> jax.Array:
+    xd, wd, sx, sw = _prep_xw(ctx, x, w)
+    return _linear_primal_prepped(ctx, xd, wd, _scale_product(sx, sw), b)
 
 
 def _linear_fwd_core(ctx: _GradCtx, x: jax.Array, w: jax.Array,
@@ -1084,34 +1336,46 @@ def _linear_fwd_core(ctx: _GradCtx, x: jax.Array, w: jax.Array,
     * otherwise (gelu/silu) — dispatch with the bias fused but the
       activation post-op, save the pre-activation s (compute dtype).  The
       value differs from the fused inference path by the documented ~2 ulp
-      fused-vs-post-op bound."""
+      fused-vs-post-op bound.
+
+    Residuals are saved in the *dispatch* storage (FP8 on scaled
+    policies, compute dtype otherwise) with the per-tensor scales
+    alongside; the epilogue aux (fused output or pre-activation) always
+    rides in the out/compute dtype."""
     spec, bk = ctx.spec, ctx.backend
     pol = spec.policy
     act = spec.epilogue
-    xc = x.astype(pol.compute_dtype)
-    wc = w.astype(pol.compute_dtype)
+    xd, wd, sx, sw = _prep_xw(ctx, x, w)
+    sp = _scale_product(sx, sw)
     if act is None:
-        z = _linear_primal(ctx, x, w, b)
-        return z, (xc, wc, None)
+        z = _linear_primal_prepped(ctx, xd, wd, sp, b)
+        return z, (xd, wd, None, sx, sw)
     grad = epi.epilogue_grad(act)
     if grad.deriv_from_output is not None:
-        z = _linear_primal(ctx, x, w, b)
-        return z, (xc, wc, z)
+        z = _linear_primal_prepped(ctx, xd, wd, sp, b)
+        return z, (xd, wd, z, sx, sw)
     # pre-activation needed: bias-fused (or post-op) GEMM, activation after
     if ctx.fuse:
         bc = None if b is None else b.astype(pol.accum_dtype)
         _emit_fwd(ctx)
         s = get_backend(bk).fn(
-            xc, wc, spec=dataclasses.replace(spec, epilogue=None),
+            xd, wd, spec=dataclasses.replace(spec, epilogue=None),
             bias=bc, fuse_epilogue=True)
         sa = s.astype(pol.accum_dtype)
     else:
-        s = _dispatch(ctx, xc, wc)
+        # the policy-forced post-op pass bills like in
+        # _linear_primal_prepped, classified with its GEMM event
+        extra = ((dataclasses.replace(spec, op=spec.op + "_postep",
+                                      tile=None),)
+                 if spec.scaled else ())
+        s = _dispatch(ctx, xd, wd, extra_specs=extra)
         sa = s.astype(pol.accum_dtype)
+        if sp is not None:
+            sa = sa * sp
         if b is not None:
             sa = sa + b.astype(pol.accum_dtype)
     z = epi.apply_epilogue(act, sa).astype(pol.out_dtype)
-    return z, (xc, wc, sa.astype(pol.compute_dtype))
+    return z, (xd, wd, sa.astype(pol.compute_dtype), sx, sw)
 
 
 def _linear_bwd_core(ctx: _GradCtx, res, dz: jax.Array):
@@ -1125,8 +1389,14 @@ def _linear_bwd_core(ctx: _GradCtx, res, dz: jax.Array):
     pre-activation cotangent ``ds`` is never materialized in HBM.  Other
     backends (and batched weights) run the two-pass fallback: a standalone
     ``ds = dZ ⊙ act'`` multiply (billed as a ``*_dact`` pass event) and a
-    separate accum-dtype bias-grad reduction (a ``*_dbias`` event)."""
-    xc, wc, aux = res
+    separate accum-dtype bias-grad reduction (a ``*_dbias`` event).
+
+    **Scaled (FP8) policies always take the two-pass path** — the engine
+    quantizes the *post-derivative* cotangent ``ds`` to the grad storage
+    once, in one place, so the quantization point (and the grads) are
+    identical on every backend; the bias grad reduces from the wide
+    ``ds`` before quantization, so it carries no FP8 error."""
+    xd, wd, aux, sx, sw = res
     spec = ctx.spec
     pol = spec.policy
     act = spec.epilogue
@@ -1140,7 +1410,7 @@ def _linear_bwd_core(ctx: _GradCtx, res, dz: jax.Array):
             deriv = aux.astype(pol.compute_dtype)
         want_db = ctx.b_dtype is not None
         dx, dw, db = _bwd_gemms(
-            ctx, xc, wc, dz.astype(pol.compute_dtype),
+            ctx, xd, wd, dz.astype(pol.compute_dtype),
             deriv=deriv, grad_mode=grad_mode, want_db=want_db)
         if db is not None:
             db = db.astype(ctx.b_dtype)
@@ -1162,7 +1432,7 @@ def _linear_bwd_core(ctx: _GradCtx, res, dz: jax.Array):
         db = dza.sum(axis=tuple(range(dza.ndim - 1))).astype(ctx.b_dtype)
         _emit(dataclasses.replace(spec, op=spec.op + "_dbias", tile=None),
               ctx.backend, count=ctx.count)
-    dx, dw, _ = _bwd_gemms(ctx, xc, wc, dza.astype(pol.compute_dtype))
+    dx, dw = _quantized_bwd(ctx, xd, wd, sx, sw, dza)
     return dx.astype(ctx.x_dtype), dw.astype(ctx.w_dtype), db
 
 
@@ -1250,6 +1520,8 @@ class Engine:
         backend: str,
         epilogue: Optional[str] = None,
         layout: str = "nn",
+        x_dtype: Optional[str] = None,
+        w_dtype: Optional[str] = None,
     ) -> tiling.TileConfig:
         """Tile precedence: explicit arg > autotune cache > heuristic.
 
@@ -1257,10 +1529,12 @@ class Engine:
         carries the tile the kernel would use); both fallbacks are cheap —
         the autotune lookup is a dict hit and ``choose_tiles`` is memoized.
         Backward dispatches resolve their own tiles with ``layout`` "nt" /
-        "tn" and the transposed problem shape in the key."""
+        "tn" and the transposed problem shape in the key; mixed-precision
+        dispatches key (and size) their per-operand storage dtypes."""
         return _resolve_tile(tile, m=m, n=n, k=k, policy=policy,
                              backend=backend, epilogue=epilogue,
-                             layout=layout)
+                             layout=layout, x_dtype=x_dtype,
+                             w_dtype=w_dtype)
 
     # -- op family ----------------------------------------------------- #
     def matmul(
@@ -1296,12 +1570,14 @@ class Engine:
             lead = np.broadcast_shapes(x.shape[:-2], w.shape[:-2])
             tag = "bmn,bnk->bmk"
         m, n, k = x.shape[-2], x.shape[-1], w.shape[-1]
+        xs, ws, _ = _dispatch_storage(policy, b)
         tile = self.resolve_tile(tile, m=m, n=n, k=k, policy=policy,
-                                 backend=b)
+                                 backend=b, x_dtype=xs, w_dtype=ws)
         spec = GemmSpec(
             op="matmul", tag=tag, m=m, n=n, k=k,
             batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
             policy=policy, tile=tile, w_shared=(w.ndim == 2),
+            x_dtype=xs, w_dtype=ws, scaled=policy.scaled,
         )
         return _gemm_call(_make_ctx(spec, b, x, w), x, w)
 
@@ -1339,6 +1615,17 @@ class Engine:
         weights ``(..., N, K)`` get the same contract on the batched-grid
         kernel (bias row shared across the batch).
 
+        FP8 rows of the same table (the mixed-precision policies): scaled
+        specs always run the epilogue post-op — the per-tensor scale
+        product must hit the accumulator before the bias — so there is no
+        fused-vs-unfused gap to bound; the contract is instead
+        *backend-invariance*: the engine quantizes once, every backend
+        sees the same FP8 values, and results across backends agree to
+        the compute-dtype tolerance (fp16 ~2e-2).  Each operand's
+        quantize→dequantize round-trip is bounded by its format's
+        relative epsilon (E4M3 2⁻³, E5M2 2⁻²) — pinned by
+        tests/test_precision_fp8.py.
+
         Backward (see the module docstring): ``jax.grad`` dispatches dX/dW
         through the registry as ``matmul_dx`` / ``matmul_dw``
         transpose-layout GEMMs.  On backends with the
@@ -1368,20 +1655,28 @@ class Engine:
             lead = np.broadcast_shapes(x.shape[:-2], w.shape[:-2])
             tag = "bmn,bnk->bmk"
         m, n, k = x.shape[-2], x.shape[-1], w.shape[-1]
+        xs, ws, _ = _dispatch_storage(policy, bk)
         tile = self.resolve_tile(tile, m=m, n=n, k=k, policy=policy,
-                                 backend=bk, epilogue=activation)
+                                 backend=bk, epilogue=activation,
+                                 x_dtype=xs, w_dtype=ws)
         spec = GemmSpec(
             op="linear", tag=tag, m=m, n=n, k=k,
             batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
             policy=policy, tile=tile, epilogue=activation,
             w_shared=(w.ndim == 2),
+            x_dtype=xs, w_dtype=ws, scaled=policy.scaled,
         )
         has_epilogue = b is not None or activation is not None
-        fuse = has_epilogue and get_backend(bk).supports("fused_epilogue")
+        # scaled (FP8) policies run the epilogue post-op and the two-pass
+        # backward: the per-tensor scale product must be undone on the
+        # accumulator *before* the bias/activation (and the quantization
+        # point of ds must be backend-invariant) — see _linear_bwd_core
+        fuse = (has_epilogue and not policy.scaled
+                and get_backend(bk).supports("fused_epilogue"))
         # one-pass backward: the dX/dW kernels apply act' to dZ on load and
         # accumulate db in the dW pass (2D weights; batched weights keep
         # the two-pass fallback)
-        fuse_bwd = (has_epilogue and w.ndim == 2
+        fuse_bwd = (has_epilogue and w.ndim == 2 and not policy.scaled
                     and get_backend(bk).supports("fused_bwd_epilogue"))
         if not has_epilogue:
             return _gemm_call(_make_ctx(spec, bk, x, w), x, w)
@@ -1432,14 +1727,16 @@ class Engine:
             raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
         lead = x.shape[:-3]
         m, n, k = x.shape[-2], x.shape[-1], w.shape[-1]
+        xs, ws, _ = _dispatch_storage(policy, b)
         tile = self.resolve_tile(tile, m=m, n=n, k=k, policy=policy,
-                                 backend=b)
+                                 backend=b, x_dtype=xs, w_dtype=ws)
         spec = GemmSpec(
             op="grouped_matmul", tag="gmn,gnk->gmk", m=m, n=n, k=k,
             batch=int(np.prod(lead, dtype=np.int64)) if lead else 1,
             groups=w.shape[0],
             policy=policy, tile=tile, w_shared=True,
             valid_rows=_static_valid_rows(group_sizes, m), ragged_dim="m",
+            x_dtype=xs, w_dtype=ws, scaled=policy.scaled,
         )
         z = _gemm_call(_make_ctx(spec, b, x, w), x, w)
         if group_sizes is not None:
@@ -1483,12 +1780,14 @@ class Engine:
         m = int(np.prod([dims[l] for l in m_l], dtype=np.int64)) if m_l else 1
         k = int(np.prod([dims[l] for l in k_l], dtype=np.int64)) if k_l else 1
         c = int(np.prod([dims[l] for l in c_l], dtype=np.int64)) if c_l else 1
+        xs, ws, _ = _dispatch_storage(policy, b)
         tile = self.resolve_tile(tile, m=m, n=c, k=k, policy=policy,
-                                 backend=b)
+                                 backend=b, x_dtype=xs, w_dtype=ws)
         spec = GemmSpec(
             op="einsum2d", tag=eq.replace(" ", ""),
             m=m, n=c, k=k, batch=bsz, policy=policy, tile=tile,
             w_shared=not batch_l,
+            x_dtype=xs, w_dtype=ws, scaled=policy.scaled,
         )
         if batch_l:
             x2 = xt.reshape(bsz, m, c)

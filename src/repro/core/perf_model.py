@@ -43,6 +43,7 @@ __all__ = [
     "gemms_from_events",
     "workload_cycles_from_events",
     "workload_cycles_by_direction",
+    "workload_hbm_bytes_from_events",
     "dense_forward_gemms",
     "workload_flops",
 ]
@@ -293,6 +294,29 @@ def workload_cycles_by_direction(
 def workload_flops(pairs: Sequence[Tuple[GEMM, int]]) -> int:
     """Total flops (2 * MACs) of a ``(GEMM, multiplicity)`` workload."""
     return sum(2 * g.macs * c for g, c in pairs)
+
+
+def workload_hbm_bytes_from_events(events) -> Dict[str, int]:
+    """{"total", "fwd", "bwd"} analytic HBM bytes of an instrumented
+    workload, priced at each operand's **true storage width**.
+
+    The per-event byte count comes from ``GemmSpec.bytes``, which bills
+    the x/w operand slots at their per-operand storage dtypes
+    (``GemmSpec.x_dtype`` / ``w_dtype``): under the mixed-precision FP8
+    policies the operand streams pay one byte per element while the MAC
+    count — and therefore every cycle/throughput figure this model
+    produces — is unchanged.  That is the mixed-precision RedMulE's
+    proposition in one line: **bytes drop, flops don't.**  Pass events
+    (``*_dact``/``*_dbias``/``*_postep``) carry real bytes and are
+    included, unlike in the cycle model.  The direction split defers to
+    :func:`repro.roofline.analysis.bytes_by_direction` — one source of
+    truth for the fwd/bwd rule."""
+    # lazy import: this module is pure math with no jax dependency
+    from repro.roofline.analysis import bytes_by_direction
+
+    d = bytes_by_direction(events)
+    return {"total": int(d["fwd"] + d["bwd"]),
+            "fwd": int(d["fwd"]), "bwd": int(d["bwd"])}
 
 
 def dense_forward_gemms(cfg, batch: int, seq: int) -> List[Tuple[GEMM, int]]:

@@ -71,7 +71,8 @@ def _round_up(x: int, m: int) -> int:
 
 
 def vmem_bytes(t: TileConfig, compute_dtype, accum_dtype,
-               depth: int = 2, fused_bwd: bool = False) -> int:
+               depth: int = 2, fused_bwd: bool = False,
+               x_dtype=None, w_dtype=None) -> int:
     """VMEM working set: pipelined X & W tiles + resident Z accumulator.
 
     ``depth`` is the in-kernel K-loop's buffer-slot count (2 = classic
@@ -81,14 +82,19 @@ def vmem_bytes(t: TileConfig, compute_dtype, accum_dtype,
     epilogue's third stream — the activation-derivative tile that shadows
     the dZ operand ((bm, bn) on "nt", (bn, bk) on "tn"; billed
     conservatively as the larger of the two so one budget covers both
-    layouts) plus the db accumulator row."""
+    layouts) plus the db accumulator row.  ``x_dtype``/``w_dtype`` are
+    the per-operand *storage* dtypes (None -> ``compute_dtype``): FP8
+    operands occupy half the VMEM of FP16 ones, since the kernel DMAs
+    tiles in storage width and upcasts on load."""
     cb = jnp.dtype(compute_dtype).itemsize
     ab = jnp.dtype(accum_dtype).itemsize
-    x_tile = t.bm * t.bn * cb
-    w_tile = t.bn * t.bk * cb
+    xb = jnp.dtype(x_dtype).itemsize if x_dtype is not None else cb
+    wb = jnp.dtype(w_dtype).itemsize if w_dtype is not None else cb
+    x_tile = t.bm * t.bn * xb
+    w_tile = t.bn * t.bk * wb
     z_acc = t.bm * t.bk * ab
     z_out = t.bm * t.bk * cb
-    d_tile = max(x_tile, w_tile) if fused_bwd else 0
+    d_tile = max(t.bm * t.bn, t.bn * t.bk) * cb if fused_bwd else 0
     db_row = t.bk * ab if fused_bwd else 0
     return depth * (x_tile + w_tile + d_tile) + z_acc + z_out + db_row
 
@@ -102,6 +108,8 @@ def choose_tiles(
     accum_dtype=jnp.float32,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     fused_bwd: bool = False,
+    x_dtype=None,
+    w_dtype=None,
 ) -> TileConfig:
     """Pick (bm, bn, bk) for a (M,N)x(N,K) GEMM.
 
@@ -117,7 +125,10 @@ def choose_tiles(
     ``fused_bwd`` sizes the working set for a fused-backward-epilogue
     dispatch (the derivative operand streams as a third pipelined tile —
     see :func:`vmem_bytes`), so the shrink loop never hands the kernel a
-    tile whose fused variant would blow the budget.
+    tile whose fused variant would blow the budget.  ``x_dtype``/
+    ``w_dtype`` are per-operand *storage* dtypes (None -> compute): FP8
+    storage halves the streamed tiles' VMEM footprint, so narrower
+    operands may earn larger tiles under the same budget.
 
     The Engine resolves a tile for every dispatch, at every trace, so the
     search is memoized on the canonicalized arguments (the returned
@@ -128,7 +139,9 @@ def choose_tiles(
     return _choose_tiles_cached(
         max(int(M), 1), max(int(N), 1), max(int(K), 1),
         jnp.dtype(compute_dtype).name, jnp.dtype(accum_dtype).name,
-        int(vmem_budget), bool(fused_bwd))
+        int(vmem_budget), bool(fused_bwd),
+        None if x_dtype is None else jnp.dtype(x_dtype).name,
+        None if w_dtype is None else jnp.dtype(w_dtype).name)
 
 
 @functools.lru_cache(maxsize=4096)
@@ -136,6 +149,7 @@ def _choose_tiles_cached(
     M: int, N: int, K: int,
     compute_dtype: str, accum_dtype: str, vmem_budget: int,
     fused_bwd: bool = False,
+    x_dtype: str | None = None, w_dtype: str | None = None,
 ) -> TileConfig:
     sl = sublane(compute_dtype)
     m_cap = _round_up(min(M, 512), sl)
@@ -145,7 +159,8 @@ def _choose_tiles_cached(
     bm, bk, bn = m_cap, k_cap, n_cap
     # Shrink until the VMEM working set fits the budget.
     while vmem_bytes(TileConfig(bm, bn, bk), compute_dtype, accum_dtype,
-                     fused_bwd=fused_bwd) > vmem_budget:
+                     fused_bwd=fused_bwd, x_dtype=x_dtype,
+                     w_dtype=w_dtype) > vmem_budget:
         if bn > MXU_LANE:
             bn //= 2
         elif bk > MXU_LANE:

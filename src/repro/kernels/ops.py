@@ -12,7 +12,11 @@ operands stay in their forward storage, no materialized transpose), and
 the **fused backward epilogue** (``deriv``/``grad_epilogue``/``bias_grad``:
 act′ applied to the dZ tiles on load, the bias grad accumulated as a
 second output of the dW pass — the Engine's ``"fused_bwd_epilogue"``
-capability; see :mod:`repro.kernels.redmule_matmul`).  Model code should
+capability; see :mod:`repro.kernels.redmule_matmul`), and **per-operand
+storage dtypes** (the ``"operand_dtypes"`` capability: FP8 operands pad
+and stream at one byte per element, the kernel upcasts tiles to the
+compute dtype on load; the tile chooser sizes the VMEM working set at the
+true storage widths).  Model code should
 not call these directly: route through :mod:`repro.core.engine` so
 dispatches are instrumented and backend-switchable.
 """
@@ -126,6 +130,7 @@ def redmule_matmul(
             M, N, K, compute_dtype=policy.compute_dtype,
             accum_dtype=policy.accum_dtype,
             fused_bwd=grad_epilogue is not None or bias_grad,
+            x_dtype=x.dtype, w_dtype=w.dtype,
         )
     Mp, Np, Kp = _padded_dims(M, N, K, tile)
     xp, wp = _pad_operands(x, w, layout, Mp, Np, Kp)
@@ -182,7 +187,9 @@ def redmule_matmul_batched(
         return z.astype(policy.out_dtype)
     if tile is None:
         tile = tiling.choose_tiles(
-            M, N, K, compute_dtype=policy.compute_dtype, accum_dtype=policy.accum_dtype
+            M, N, K, compute_dtype=policy.compute_dtype,
+            accum_dtype=policy.accum_dtype,
+            x_dtype=x.dtype, w_dtype=w.dtype,
         )
     Mp, Np, Kp = _padded_dims(M, N, K, tile)
     xp, wp = _pad_operands(x, w, layout, Mp, Np, Kp)

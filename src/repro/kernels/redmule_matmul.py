@@ -31,6 +31,17 @@ The paper's dataflow (§II-B/C), re-derived for the TPU memory hierarchy
   ``bias_grad=True`` (the dW "tn" dispatch) the kernel also accumulates
   ``db = Σ_rows ds`` into a second accum-dtype output in the same pass,
   eliminating the separate bias-grad reduction;
+* **per-operand storage dtypes** (the mixed-precision RedMulE,
+  arXiv:2301.03904): operands may arrive narrower than the compute dtype
+  (FP8 ``float8_e4m3fn`` / ``float8_e5m2`` under the mixed policies) —
+  tiles DMA from HBM in their storage width and are upcast to the compute
+  dtype **on load**, inside the K-loop, so the HBM stream (and the VMEM
+  slots) stay narrow and no cast pass ever materializes the wide operand.
+  This composes with the fused backward epilogue (an FP8 dZ stream is
+  widened, multiplied by ``act'`` and fed to the MXU tile-wise) and with
+  every layout.  Per-tensor scales are the *engine's* job
+  (:mod:`repro.core.engine` applies/undoes them around the dispatch) —
+  the kernel only ever sees the already-quantized integers-in-fp8;
 * batched operands get a leading **batch grid dimension**
   (:func:`redmule_matmul_batched_pallas`) instead of a ``vmap`` wrapper, so
   the tile choice and the Pallas pipeline see the true per-core working set
@@ -214,8 +225,17 @@ def _pipelined_kernel(*refs, n_steps: int, depth: int, tile, layout: str,
 
         for c in _dmas(slot, r):
             c.wait()
+        # per-operand storage: tiles DMA in their HBM dtype (FP8 under the
+        # mixed-precision policies) and are upcast to the compute dtype
+        # **on load**, right here in VMEM — no HBM-side cast pass ever
+        # materializes the wide operand (the mixed-precision RedMulE's
+        # input-cast stage, arXiv:2301.03904)
         xt = xbuf[slot]
         wt = wbuf[slot]
+        if xt.dtype != compute_dtype:
+            xt = xt.astype(compute_dtype)
+        if wt.dtype != compute_dtype:
+            wt = wt.astype(compute_dtype)
         if has_deriv or bias_grad:
             # the fused backward epilogue: ds = dZ * act'(deriv), applied
             # on load in the accumulation dtype (the same dtype chain as
@@ -299,8 +319,10 @@ def redmule_matmul_pallas(
     "tn" dW dispatch) returns ``(Z, db)`` where ``db`` is a
     ``(M/bm, K)`` accum-dtype array whose every row is the full
     ``Σ_rows ds`` (each grid row sweeps the whole reduction; callers take
-    row 0).  ``pipeline_depth`` sets the number of double-buffer slots of
-    the in-kernel K-loop (2 = classic double buffering)."""
+    row 0).  ``pipeline_depth`` sets the number of buffer slots of the
+    in-kernel K-loop: 1 = single-buffered (each step's DMA issues and
+    completes before its FMA — no overlap, the minimal-VMEM schedule),
+    2 = classic double buffering, deeper = more DMAs in flight."""
     _check_layout(layout)
     M, N, K = _logical_dims(x.shape, w.shape, layout)
     if layout == "nn":
@@ -322,7 +344,7 @@ def redmule_matmul_pallas(
             (None if deriv is None else deriv.shape, want)
     if bias_grad:
         assert layout == "tn", "bias_grad rides on the dW (tn) dispatch"
-    depth = max(2, int(pipeline_depth))
+    depth = max(1, int(pipeline_depth))
     grid = (M // tile.bm, K // tile.bk)
     n_steps = N // tile.bn
     x_tile, w_tile = _stored_tile_shapes(tile, layout)
@@ -379,19 +401,29 @@ def redmule_matmul_pallas(
     return out
 
 
+def _load_compute(ref_tile, compute_dtype):
+    """Upcast a loaded operand tile to the compute dtype (FP8 storage under
+    the mixed-precision policies; a no-op for uniform policies)."""
+    if ref_tile.dtype != compute_dtype:
+        return ref_tile.astype(compute_dtype)
+    return ref_tile
+
+
 def _kernel_batched(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype,
-                    epilogue: Optional[str], layout: str):
+                    compute_dtype, epilogue: Optional[str], layout: str):
     """The same X-stationary schedule under a leading batch grid dim.
 
     Block refs carry a unit batch dim ((1, bm, bn) etc.); the reduction is
-    grid axis 3."""
+    grid axis 3.  Operand tiles arrive in their storage dtype and are
+    upcast to ``compute_dtype`` on load."""
 
     @pl.when(pl.program_id(3) == 0)
     def _zero_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[0], w_ref[0], _DIMS[layout],
+        _load_compute(x_ref[0], compute_dtype),
+        _load_compute(w_ref[0], compute_dtype), _DIMS[layout],
         preferred_element_type=acc_ref.dtype,
     )
 
@@ -402,8 +434,8 @@ def _kernel_batched(x_ref, w_ref, z_ref, acc_ref, *, n_tiles: int, out_dtype,
 
 
 def _kernel_batched_bias(x_ref, w_ref, bias_ref, z_ref, acc_ref, *,
-                         n_tiles: int, out_dtype, epilogue: Optional[str],
-                         layout: str):
+                         n_tiles: int, out_dtype, compute_dtype,
+                         epilogue: Optional[str], layout: str):
     """Batched schedule with the shared (1, 1, bk) bias row in the store."""
 
     @pl.when(pl.program_id(3) == 0)
@@ -411,7 +443,8 @@ def _kernel_batched_bias(x_ref, w_ref, bias_ref, z_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[0], w_ref[0], _DIMS[layout],
+        _load_compute(x_ref[0], compute_dtype),
+        _load_compute(w_ref[0], compute_dtype), _DIMS[layout],
         preferred_element_type=acc_ref.dtype,
     )
 
@@ -481,10 +514,12 @@ def redmule_matmul_batched_pallas(
     if bias is None:
         kernel = functools.partial(_kernel_batched, n_tiles=grid[3],
                                    out_dtype=policy.out_dtype,
+                                   compute_dtype=policy.compute_dtype,
                                    epilogue=epilogue, layout=layout)
     else:
         kernel = functools.partial(_kernel_batched_bias, n_tiles=grid[3],
                                    out_dtype=policy.out_dtype,
+                                   compute_dtype=policy.compute_dtype,
                                    epilogue=epilogue, layout=layout)
         in_specs.append(pl.BlockSpec((1, 1, tile.bk),
                                      lambda b, i, j, k: (0, 0, j)))

@@ -283,11 +283,15 @@ def _print_instrument_summary(events):
 
 
 def _ae_main(args):
-    """The paper's §III-B use case on the CLI: AE training in pure FP16."""
+    """The paper's §III-B use case on the CLI: AE training in pure FP16
+    (default) or any registered precision policy — ``--policy
+    mixed_fp8_e4m3`` trains with FP8 storage + per-tensor scales (the
+    mixed-precision RedMulE regime; GEMM bytes drop, flops don't)."""
     from repro.core import precision as prec
     from repro.data import SyntheticAE
     from repro.models import autoencoder
 
+    policy = prec.resolve(args.policy or "paper_fp16")
     params = autoencoder.init_ae(jax.random.PRNGKey(args.seed))
     opt = AdamW(lr=args.lr, warmup_steps=0)
     opt_state = opt.init(params)
@@ -295,7 +299,7 @@ def _ae_main(args):
 
     def step(p_, s_, x):
         (loss, _), g = jax.value_and_grad(
-            lambda q: autoencoder.ae_loss(q, x, policy=prec.PAPER_FP16),
+            lambda q: autoencoder.ae_loss(q, x, policy=policy),
             has_aux=True)(p_)
         g, _ = clip_by_global_norm(g, 1.0)
         u, s_ = opt.update(g, s_, p_)
@@ -332,6 +336,10 @@ def main(argv=None):
     p.add_argument("--save-every", type=int, default=50)
     p.add_argument("--fp16-scale", action="store_true",
                    help="pure-FP16 compute with dynamic loss scaling")
+    p.add_argument("--policy", default=None,
+                   help="precision policy for --arch ae (default "
+                        "paper_fp16; mixed_fp8_e4m3 / mixed_fp8_e5m2 "
+                        "train with FP8 storage + per-tensor scales)")
     p.add_argument("--instrument", action="store_true",
                    help="trace one step under engine.instrument() and print "
                         "the per-op GEMM flop/byte summary before training")

@@ -1,9 +1,24 @@
-"""Dynamic loss scaling for pure-FP16 training (the paper's regime).
+"""Dynamic scaling for reduced-precision training.
 
-binary16 overflows at 65504; gradients under- and overflow without scaling.
-Standard dynamic scheme: multiply the loss by ``scale``; if any gradient is
-non-finite, skip the step and halve the scale; after ``growth_interval``
-consecutive finite steps, double it.  All state is traced (works inside jit).
+Two schemes live here, both fully traced (work inside jit):
+
+* **FP16 loss scaling** (the source paper's regime): binary16 overflows at
+  65504; gradients under- and overflow without scaling.  Standard dynamic
+  scheme: multiply the loss by ``scale``; if any gradient is non-finite,
+  skip the step and halve the scale; after ``growth_interval`` consecutive
+  finite steps, double it.
+
+* **FP8 per-tensor delayed scaling** (the mixed-precision regime, PR 5):
+  the Engine's just-in-time quantization (:func:`repro.core.precision.
+  quantize_fp8`) recomputes ``s = amax`` at every dispatch; a training
+  loop that wants a *stable* scale instead tracks a rolling amax history
+  per tensor (:class:`Fp8ScaleState`) and derives the scale from the
+  window maximum — the delayed-scaling recipe of FP8 training systems.
+  Robustness contract (pinned by tests/test_precision_fp8.py):
+  **overflow** (a non-finite amax observation, e.g. an overflowed grad)
+  is recorded as an overflow and *excluded* from the window, so one bad
+  step cannot poison the scale; **underflow** (an all-zero window) keeps
+  the previous scale, so a run of zero gradients cannot collapse it.
 """
 
 from __future__ import annotations
@@ -13,7 +28,12 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["LossScaleState", "init_scale", "scale_loss", "unscale_and_check", "adjust"]
+__all__ = [
+    "LossScaleState", "init_scale", "scale_loss", "unscale_and_check",
+    "adjust",
+    "Fp8ScaleState", "init_fp8_scale", "observe_amax", "fp8_scale_of",
+    "update_fp8_scale",
+]
 
 
 class LossScaleState(NamedTuple):
@@ -60,4 +80,66 @@ def adjust(state: LossScaleState, finite: jax.Array) -> LossScaleState:
         good_steps=good,
         growth_interval=state.growth_interval,
         overflow_count=state.overflow_count + jnp.where(finite, 0, 1).astype(jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------- #
+# FP8 per-tensor delayed scaling (the mixed-precision policies)
+# --------------------------------------------------------------------- #
+class Fp8ScaleState(NamedTuple):
+    """Rolling per-tensor amax window for FP8 delayed scaling.
+
+    ``scale`` is the divisor the next quantization should use
+    (``q = v / scale`` — the Engine's convention, unit-max normalized so
+    the FP16 datapath cannot overflow); ``amax_history`` is the rolling
+    window of observed tensor maxima; ``overflow_count`` counts dropped
+    non-finite observations (telemetry, like ``LossScaleState``)."""
+
+    scale: jax.Array           # f32 scalar
+    amax_history: jax.Array    # (H,) f32 rolling window
+    overflow_count: jax.Array  # i32 telemetry
+
+
+def init_fp8_scale(history_len: int = 16) -> Fp8ScaleState:
+    return Fp8ScaleState(
+        scale=jnp.float32(1.0),
+        amax_history=jnp.zeros((history_len,), jnp.float32),
+        overflow_count=jnp.zeros((), jnp.int32),
+    )
+
+
+def observe_amax(state: Fp8ScaleState, v: jax.Array) -> Fp8ScaleState:
+    """Record ``amax(|v|)`` of one tensor into the rolling window."""
+    return update_fp8_scale(state, jnp.max(jnp.abs(v.astype(jnp.float32))))
+
+
+def fp8_scale_of(state: Fp8ScaleState, *, margin: float = 1.0) -> jax.Array:
+    """The delayed scale the *next* quantization should divide by: the
+    window maximum times a safety ``margin`` (>1 leaves headroom for a
+    growing amax between updates).  An empty (all-zero) window yields the
+    state's current scale — underflow never collapses the scale."""
+    amax = jnp.max(state.amax_history)
+    return jnp.where(amax > 0, amax * jnp.float32(margin), state.scale)
+
+
+def update_fp8_scale(state: Fp8ScaleState, amax: jax.Array,
+                     *, margin: float = 1.0) -> Fp8ScaleState:
+    """Fold one amax observation into the window and refresh the scale.
+
+    Overflow behavior: a non-finite or negative observation is dropped
+    (recorded in ``overflow_count``) — the window keeps only trustworthy
+    maxima, so one overflowed gradient cannot poison future scales.
+    Underflow behavior: if the whole window is zero (e.g. a run of
+    all-zero gradients) the previous scale is kept."""
+    amax = jnp.asarray(amax, jnp.float32)
+    bad = ~jnp.isfinite(amax) | (amax < 0)
+    clean = jnp.where(bad, 0.0, amax)
+    hist = jnp.roll(state.amax_history, 1).at[0].set(clean)
+    new_scale = jnp.where(
+        jnp.max(hist) > 0, jnp.max(hist) * jnp.float32(margin), state.scale)
+    return Fp8ScaleState(
+        scale=new_scale,
+        amax_history=hist,
+        overflow_count=state.overflow_count
+        + jnp.where(bad, 1, 0).astype(jnp.int32),
     )

@@ -368,6 +368,14 @@ class RooflineReport:
     engine_flops: float = 0.0
     engine_flops_fwd: float = 0.0
     engine_flops_bwd: float = 0.0
+    # analytic HBM bytes of the same events, priced at each operand's
+    # **true storage width** (``GemmSpec.x_dtype`` / ``w_dtype`` — FP8
+    # operands under the mixed-precision policies pay one byte per
+    # element while flops stay dtype-invariant), split by direction like
+    # the flops.  0.0 when no events were supplied.
+    engine_bytes: float = 0.0
+    engine_bytes_fwd: float = 0.0
+    engine_bytes_bwd: float = 0.0
 
     @property
     def dominant(self) -> str:
@@ -490,6 +498,8 @@ def roofline(
     }
     direction = (flops_by_direction(gemm_events) if gemm_events
                  else {"fwd": 0.0, "bwd": 0.0})
+    bdirection = (bytes_by_direction(gemm_events) if gemm_events
+                  else {"fwd": 0.0, "bwd": 0.0})
     return RooflineReport(
         arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
         flops_per_device=flops, bytes_per_device=byts,
@@ -503,6 +513,9 @@ def roofline(
         engine_flops=flops_from_events(gemm_events) if gemm_events else 0.0,
         engine_flops_fwd=direction["fwd"],
         engine_flops_bwd=direction["bwd"],
+        engine_bytes=bdirection["fwd"] + bdirection["bwd"],
+        engine_bytes_fwd=bdirection["fwd"],
+        engine_bytes_bwd=bdirection["bwd"],
     )
 
 

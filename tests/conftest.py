@@ -1,0 +1,46 @@
+"""Shared test configuration: deterministic CI profile.
+
+Two flake sources are pinned here so property sweeps and autotune tests
+cannot flake CI:
+
+* **hypothesis**: a registered ``repro-ci`` profile with a fixed
+  derandomized seed (examples are a pure function of the test body), no
+  deadline (CI machines stall arbitrarily under load — a wall-clock
+  deadline on a correctness test is noise, not signal) and a bounded
+  example count.  Loaded unconditionally; skipped gracefully on minimal
+  installs without hypothesis (the property tests themselves already
+  ``importorskip``).
+* **the autotune cache**: ``REPRO_AUTOTUNE_CACHE`` is pointed at a
+  per-test ``tmp_path`` file and the in-process LRU is cleared around
+  every test, so no test can observe (or poison) another test's tuned
+  tiles — tests that manage the env var themselves (tests/test_autotune)
+  simply override the fixture's value with their own ``monkeypatch``.
+"""
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "repro-ci",
+        derandomize=True,          # fixed seed: examples are reproducible
+        deadline=None,             # no wall-clock flakes on loaded CI boxes
+        max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile("repro-ci")
+except ImportError:  # minimal install: property tests skip themselves
+    pass
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(tmp_path, monkeypatch):
+    """Point the autotune JSON cache at a per-test temp file and reset the
+    in-process LRU on both sides of the test."""
+    from repro.core import autotune
+
+    monkeypatch.setenv(autotune.ENV_VAR, str(tmp_path / "autotune_cache.json"))
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()

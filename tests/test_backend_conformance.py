@@ -1,0 +1,285 @@
+"""Backend-conformance harness: the registry contract as executable tests.
+
+Every registered backend is swept against every contract its capability
+flags declare, so a future backend (the ROADMAP's Triton/GPU entry, a
+user-registered runtime backend) plugs into ready-made tests instead of
+discovering the contract by breaking models:
+
+* **base** (every backend): ``fn(x, w, *, spec) -> (..., M, K)`` matches
+  the FP32 oracle to the policy's documented tolerance, for weight and
+  batched GEMMs;
+* **fused_epilogue**: ``fn(..., bias=..., fuse_epilogue=True)`` applies
+  the accum-dtype bias row and ``spec.epilogue`` *before* the store —
+  bitwise-equal to the post-op path under ``paper_fp16`` for bias/relu
+  (the PR-2 pinned contract);
+* **layouts**: "nt" / "tn" dispatches on forward-storage operands equal
+  the pre-transposed "nn" dispatch;
+* **fused_bwd_epilogue**: ``fn(a, b, *, spec, deriv=..., bias_grad=True)``
+  returns ``(grad, db)`` with the documented shapes/dtypes, ``db`` the
+  row-sum of the derivative-adjusted dZ, and ``act'`` applied on load;
+* **operand_dtypes**: FP8-stored operands (upcast-on-load) produce the
+  same result as pre-upcast compute-dtype operands.
+
+Each check raises ``AssertionError`` with a readable message naming the
+backend and the violated clause; the negative test registers a
+deliberately contract-violating dummy backend and asserts the harness
+catches it with exactly such a message.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core import epilogues as epi
+from repro.core import precision as prec
+from repro.core import tiling
+
+RNG = np.random.default_rng(5)
+
+# shapes deliberately off tile multiples so padding is part of the contract
+M, N, K = 24, 33, 17
+BATCH = 3
+
+_TOL = {"float32": 1e-5, "float16": 2e-2, "bfloat16": 1e-1}
+
+
+def _rand(shape, dtype, scale=0.3):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+def _mk_spec(policy, *, op="matmul", m=M, n=N, k=K, batch=1, layout="nn",
+             epilogue=None, **kw):
+    return engine.GemmSpec(
+        op=op, tag="conformance", m=m, n=n, k=k, batch=batch,
+        policy=policy, epilogue=epilogue, layout=layout,
+        w_shared=(batch == 1), **kw)
+
+
+def _f32(a):
+    return np.asarray(a, np.float32)
+
+
+def _close(got, want, policy, *, what, backend):
+    tol = _TOL[jnp.dtype(policy.compute_dtype).name]
+    if not np.allclose(_f32(got), _f32(want), rtol=tol, atol=tol):
+        err = float(np.max(np.abs(_f32(got) - _f32(want))))
+        raise AssertionError(
+            f"backend {backend!r} violates the {what} contract under "
+            f"policy {policy.name!r}: max abs error {err:.4g} exceeds the "
+            f"documented tolerance {tol} (see repro.core.engine "
+            f"BackendSpec)")
+
+
+# ------------------------------------------------------------------ #
+# Contract checks — each takes a backend name, raises AssertionError
+# ------------------------------------------------------------------ #
+def check_base(backend: str) -> None:
+    """fn(x, w, *, spec) matches the FP32 oracle (weight + batched GEMM)."""
+    fn = engine.get_backend(backend).fn
+    for policy in (prec.FP32, prec.PAPER_FP16, prec.TPU_FP16):
+        x = _rand((M, N), policy.compute_dtype)
+        w = _rand((N, K), policy.compute_dtype)
+        z = fn(x, w, spec=_mk_spec(policy))
+        if z.shape != (M, K):
+            raise AssertionError(
+                f"backend {backend!r} violates the base contract: output "
+                f"shape {z.shape} != {(M, K)} for x{x.shape} @ w{w.shape}")
+        oracle = _f32(x) @ _f32(w)
+        _close(z, oracle, policy, what="base (weight GEMM vs FP32 oracle)",
+               backend=backend)
+        # batched operands, broadcast-compatible leading dims
+        xb = _rand((BATCH, M, N), policy.compute_dtype)
+        wb = _rand((BATCH, N, K), policy.compute_dtype)
+        zb = fn(xb, wb, spec=_mk_spec(policy, batch=BATCH))
+        _close(zb, np.einsum("bmn,bnk->bmk", _f32(xb), _f32(wb)), policy,
+               what="base (batched GEMM vs FP32 oracle)", backend=backend)
+
+
+def check_fused_epilogue(backend: str) -> None:
+    """bias + activation applied to the accumulator before the store;
+    bitwise vs the post-op path under paper_fp16 for bias/relu."""
+    fn = engine.get_backend(backend).fn
+    policy = prec.PAPER_FP16
+    x = _rand((M, N), policy.compute_dtype)
+    w = _rand((N, K), policy.compute_dtype)
+    b = _rand((1, K), policy.accum_dtype, 0.1)
+    for act in (None, "relu"):
+        spec = _mk_spec(policy, op="linear", epilogue=act)
+        fused = fn(x, w, spec=spec, bias=b, fuse_epilogue=True)
+        plain = fn(x, w, spec=_mk_spec(policy))
+        post = jnp.asarray(plain).astype(policy.accum_dtype) + b
+        post = epi.apply_epilogue(act, post).astype(policy.out_dtype)
+        if not np.array_equal(_f32(fused), _f32(post)):
+            raise AssertionError(
+                f"backend {backend!r} violates the fused_epilogue "
+                f"contract: fuse_epilogue=True with epilogue={act!r} is "
+                f"not bitwise-equal to the post-op path under paper_fp16 "
+                f"(bias row must be added in the accum dtype before the "
+                f"single store)")
+
+
+def check_layouts(backend: str) -> None:
+    """"nt"/"tn" dispatches on forward-storage operands equal the
+    pre-transposed "nn" dispatch."""
+    fn = engine.get_backend(backend).fn
+    for policy in (prec.FP32, prec.PAPER_FP16):
+        x = _rand((M, N), policy.compute_dtype)
+        w = _rand((N, K), policy.compute_dtype)
+        want = fn(x, w, spec=_mk_spec(policy))
+        znt = fn(x, jnp.swapaxes(w, -1, -2),
+                 spec=_mk_spec(policy, layout="nt"))
+        _close(znt, want, policy,
+               what='layouts ("nt" vs pre-transposed "nn")', backend=backend)
+        ztn = fn(jnp.swapaxes(x, -1, -2), w,
+                 spec=_mk_spec(policy, layout="tn"))
+        _close(ztn, want, policy,
+               what='layouts ("tn" vs pre-transposed "nn")', backend=backend)
+
+
+def check_fused_bwd_epilogue(backend: str) -> None:
+    """(grad, db) shape/dtype and value: act' applied to dZ on load, db
+    the accum-dtype row sum of the derivative-adjusted dZ."""
+    fn = engine.get_backend(backend).fn
+    policy = prec.FP32
+    # the dW ("tn") dispatch: a = X stored (rows, n_features),
+    # b = dZ (rows, k), deriv stored like dZ
+    rows = M
+    xs = _rand((rows, N), policy.compute_dtype)
+    dz = _rand((rows, K), policy.compute_dtype)
+    d = _rand((rows, K), policy.compute_dtype)
+    spec = _mk_spec(policy, op="matmul_dw", m=N, n=rows, k=K, layout="tn",
+                    grad_epilogue="tanh", grad_mode="output",
+                    fused_bwd=True, fused_bias_grad=True)
+    out = fn(xs, dz, spec=spec, deriv=d, bias_grad=True)
+    if not (isinstance(out, tuple) and len(out) == 2):
+        raise AssertionError(
+            f"backend {backend!r} violates the fused_bwd_epilogue "
+            f"contract: bias_grad=True must return (grad, db), got "
+            f"{type(out).__name__}")
+    dw, db = out
+    grad = epi.epilogue_grad("tanh")
+    ds = _f32(dz) * _f32(grad.deriv_from_output(d))
+    if dw.shape != (N, K) or db.shape != (K,):
+        raise AssertionError(
+            f"backend {backend!r} violates the fused_bwd_epilogue "
+            f"contract: shapes (grad, db) = ({dw.shape}, {db.shape}), "
+            f"want (({N}, {K}), ({K},))")
+    if jnp.dtype(db.dtype) != jnp.dtype(policy.accum_dtype):
+        raise AssertionError(
+            f"backend {backend!r} violates the fused_bwd_epilogue "
+            f"contract: db dtype {db.dtype} is not the accum dtype "
+            f"{jnp.dtype(policy.accum_dtype).name}")
+    _close(dw, _f32(xs).T @ ds, policy,
+           what="fused_bwd_epilogue (act' on dZ load)", backend=backend)
+    _close(db, ds.sum(axis=0), policy,
+           what="fused_bwd_epilogue (fused db row sum)", backend=backend)
+
+
+def check_operand_dtypes(backend: str) -> None:
+    """FP8-stored operands (upcast on load) == pre-upcast dispatch."""
+    fn = engine.get_backend(backend).fn
+    policy = prec.MIXED_FP8_E4M3
+    xq = _rand((M, N), jnp.float8_e4m3fn)
+    wq = _rand((N, K), jnp.float8_e4m3fn)
+    spec = _mk_spec(policy, x_dtype="float8_e4m3fn",
+                    w_dtype="float8_e4m3fn", scaled=True)
+    narrow = fn(xq, wq, spec=spec)
+    wide = fn(xq.astype(policy.compute_dtype),
+              wq.astype(policy.compute_dtype), spec=_mk_spec(policy))
+    if not np.allclose(_f32(narrow), _f32(wide), rtol=1e-3, atol=1e-3):
+        err = float(np.max(np.abs(_f32(narrow) - _f32(wide))))
+        raise AssertionError(
+            f"backend {backend!r} violates the operand_dtypes contract: "
+            f"dispatching FP8 storage directly differs from upcasting "
+            f"before dispatch by {err:.4g} — the kernel must upcast tiles "
+            f"to the compute dtype on load, changing bytes, not values")
+
+
+CONTRACT_CHECKS = {
+    "base": check_base,
+    "fused_epilogue": check_fused_epilogue,
+    "layouts": check_layouts,
+    "fused_bwd_epilogue": check_fused_bwd_epilogue,
+    "operand_dtypes": check_operand_dtypes,
+}
+
+# "tiled" has no standalone value contract: it only promises spec.tile is
+# honored as block geometry, which the base check already exercises by
+# resolving real tiles.  Everything else is executable above.
+CONTRACTS = ("base", "fused_epilogue", "layouts", "fused_bwd_epilogue",
+             "operand_dtypes")
+
+
+def run_contract(backend: str, contract: str) -> None:
+    """Run one contract check against one backend (raises AssertionError
+    with a readable message on violation) — the entry point a third-party
+    backend's own test suite can call directly."""
+    CONTRACT_CHECKS[contract](backend)
+
+
+# ------------------------------------------------------------------ #
+# The sweep: every registered backend x its declared capabilities
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("contract", CONTRACTS)
+@pytest.mark.parametrize("backend", engine.registered_backends())
+def test_backend_conformance(backend, contract):
+    spec = engine.get_backend(backend)
+    if not spec.is_available():
+        pytest.skip(f"backend {backend!r} not available on this platform")
+    if contract != "base" and not spec.supports(contract):
+        pytest.skip(f"backend {backend!r} does not declare {contract!r}")
+    run_contract(backend, contract)
+
+
+def test_every_declared_capability_has_a_check():
+    """No registered backend may declare a capability the harness cannot
+    exercise (except "tiled", covered via the base check's real tiles)."""
+    for name in engine.registered_backends():
+        for cap in engine.get_backend(name).capabilities:
+            assert cap == "tiled" or cap in CONTRACT_CHECKS, (
+                f"backend {name!r} declares capability {cap!r} with no "
+                f"conformance check — extend tests/test_backend_conformance")
+
+
+# ------------------------------------------------------------------ #
+# Negative test: a deliberately contract-violating backend must fail
+# with a readable message
+# ------------------------------------------------------------------ #
+def test_violating_backend_fails_readably():
+    def broken_fn(x, w, *, spec, bias=None, fuse_epilogue=False,
+                  deriv=None, bias_grad=False):
+        # claims fused_epilogue but silently ignores the bias row
+        z = jnp.matmul(x, w,
+                       preferred_element_type=spec.policy.accum_dtype)
+        if fuse_epilogue:
+            z = epi.apply_epilogue(spec.epilogue, z)
+        return z.astype(spec.policy.out_dtype)
+
+    engine.register_backend(
+        "broken-dummy", broken_fn,
+        capabilities=("fused_epilogue",),
+        description="conformance negative test: drops the bias row")
+    try:
+        # base still passes: the pure GEMM is fine
+        run_contract("broken-dummy", "base")
+        with pytest.raises(AssertionError) as e:
+            run_contract("broken-dummy", "fused_epilogue")
+        msg = str(e.value)
+        assert "broken-dummy" in msg and "fused_epilogue" in msg, (
+            f"violation message must name the backend and the contract, "
+            f"got: {msg}")
+    finally:
+        engine.unregister_backend("broken-dummy")
+
+
+def test_unknown_capability_rejected_at_registration():
+    # register_backend validates before touching the registry, so the
+    # failed registration leaves no state behind
+    with pytest.raises(ValueError, match="unknown backend capabilities"):
+        engine.register_backend("bad-caps", lambda x, w, *, spec: x,
+                                capabilities=("warp_speed",))
+    assert "bad-caps" not in engine.registered_backends()

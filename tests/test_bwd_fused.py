@@ -396,3 +396,60 @@ def test_zero_row_ragged_backward_short_circuits():
             {"x": x, "w": w})
     ops2 = [ev.spec.op for ev in ev2]
     assert "matmul_dx" in ops2 and "matmul_dw" in ops2
+
+
+def test_ae_train_fp8_bytes_match_baseline_and_below_fp16():
+    """The PR-5 mixed-precision gate: the same AE train trace under the
+    ``mixed_fp8_e4m3`` policy (per-operand FP8 storage, per-tensor
+    scales) is pinned exactly against the ``ae_train_fp8`` baseline and
+    must carry strictly fewer engine bytes than the FP16 trace
+    (``engine/ae_train_bytes_B16``'s fused run) at **identical** engine
+    flops — bytes drop, flops don't."""
+    from repro.data import SyntheticAE
+    from repro.models import autoencoder
+
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    x = jnp.asarray(SyntheticAE(batch=16).sample(0))
+
+    def trace(policy):
+        with engine.instrument() as events:
+            jax.eval_shape(lambda p: jax.value_and_grad(
+                lambda q: autoencoder.ae_loss(q, x, policy=policy,
+                                              backend="interpret")[0])(p),
+                params)
+        return events
+
+    from repro.core import perf_model
+
+    ev8 = trace(prec.MIXED_FP8_E4M3)
+    ev16 = trace(prec.PAPER_FP16)
+    b8 = perf_model.workload_hbm_bytes_from_events(ev8)
+    want = BASELINE["ae_train_fp8"]
+    got = {
+        "fwd": b8["fwd"], "bwd": b8["bwd"], "total": b8["total"],
+        "fp16_total": int(engine.total_bytes(ev16)),
+        "engine_flops": int(engine.total_flops(ev8)),
+    }
+    assert got == want, (
+        f"ae_train_fp8: engine train bytes {got} != baseline {want}. "
+        f"If the byte accounting changed on purpose, update "
+        f"benchmarks/baselines/train_bytes.json in this commit.")
+    # the acceptance criterion, stated directly
+    assert got["total"] < got["fp16_total"]
+    assert engine.total_flops(ev8) == engine.total_flops(ev16)
+    # every GEMM dispatch carries the narrow per-operand storage and the
+    # scaled flag; the epilogue runs two-pass (quantization point is
+    # backend-invariant), so the forced post-op forward pass and the
+    # bias-grad reduction are billed as their own pass events
+    for ev in ev8:
+        if not engine.is_pass_op(ev.spec.op):
+            assert ev.spec.scaled
+            assert "float8" in (ev.spec.x_dtype or "") \
+                or "float8" in (ev.spec.w_dtype or "")
+    assert any(ev.spec.op == "linear_dbias" for ev in ev8)
+    assert any(ev.spec.op == "linear_postep" for ev in ev8)
+    # postep is a *forward* pass event (zero flops, real bytes)
+    for ev in ev8:
+        if ev.spec.op == "linear_postep":
+            assert not analysis.is_backward_event(ev)
+            assert ev.spec.flops == 0 and ev.spec.bytes > 0
