@@ -24,7 +24,7 @@ from typing import List, Optional
 
 from benchmarks import (engine_instrument, fig3_energy_throughput,
                         fig4a_hw_vs_sw, fig4b_area_sweep, fig4cd_autoencoder,
-                        roofline_report, table1_soa)
+                        roofline_report, serve_loadgen, table1_soa)
 from benchmarks.common import emit
 from repro.core import autotune, engine
 from repro.roofline import analysis
@@ -37,6 +37,7 @@ MODULES = [
     ("fig4cd_autoencoder", fig4cd_autoencoder),
     ("engine_instrument", engine_instrument),
     ("roofline_report", roofline_report),
+    ("serve_loadgen", serve_loadgen),
 ]
 
 DEFAULT_JSON = "BENCH_engine.json"

@@ -1,0 +1,35 @@
+"""Serving loadgen sweep (beyond-paper §Serving): continuous batching
+over the FP8 KV cache, p50/p99 TTFT and tokens/s vs Poisson offered load.
+
+One dense (yi-9b reduced) and one MoE (deepseek-moe-16b reduced) arch,
+two offered loads each — the ``serve/*`` rows land in BENCH_engine.json
+so the serving latency/throughput trajectory is diffable across commits
+(absolute numbers are host-CPU emulation timings; the load-vs-latency
+*shape* and the batch-fill ratios are the signal).
+"""
+
+import dataclasses
+
+import jax
+
+from repro import configs
+from repro.models import transformer
+from repro.serving import LoadConfig, SchedulerConfig, bench_rows
+
+ARCHS = ("yi-9b", "deepseek-moe-16b")
+RATES = (0.25, 1.0)
+
+
+def run():
+    rows = []
+    for arch in ARCHS:
+        # FP8 end to end: E4M3 KV storage AND MIXED_FP8_E4M3 decode GEMMs
+        cfg = dataclasses.replace(
+            configs.get_reduced(arch), policy_name="mixed_fp8_e4m3")
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        scfg = SchedulerConfig(
+            n_slots=4, max_len=16, storage_dtype="float8_e4m3fn")
+        lc = LoadConfig(rate=1.0, n_requests=6, prompt_len=6, gen_len=6,
+                        seed=0)
+        rows += bench_rows(params, cfg, scfg, arch, RATES, lc)
+    return rows

@@ -170,6 +170,7 @@ __all__ = [
     "instrument",
     "repeat",
     "paused",
+    "op_scope",
     "total_flops",
     "total_bytes",
     "summarize",
@@ -680,6 +681,25 @@ def repeat(n: int):
         stack.pop()
 
 
+@contextlib.contextmanager
+def op_scope(label: str):
+    """Tag every event traced in the context with ``label/`` op prefix.
+
+    Serving (and any other subsystem) wraps its traces so the GEMM events
+    it dispatches are attributable in a mixed stream: a decode step traced
+    under ``op_scope("serve_decode")`` emits ``serve_decode/matmul``,
+    ``serve_decode/grouped_matmul``, ... .  Prefixing preserves the op
+    *suffix*, so :func:`is_backward_op` / :func:`is_pass_op` (and every
+    fwd/bwd split built on them) classify scoped events unchanged.
+    Nesting joins with "/" (outermost first)."""
+    prev = getattr(_state, "op_scope", None)
+    _state.op_scope = label if prev is None else f"{prev}/{label}"
+    try:
+        yield
+    finally:
+        _state.op_scope = prev
+
+
 def _emit(spec: GemmSpec, backend: str,
           count: Optional[int] = None, recompute: bool = False) -> None:
     """Append one event to every active collector.
@@ -691,6 +711,9 @@ def _emit(spec: GemmSpec, backend: str,
     stack = _collectors()
     if not stack or getattr(_state, "paused", False):
         return
+    scope = getattr(_state, "op_scope", None)
+    if scope is not None:
+        spec = dataclasses.replace(spec, op=f"{scope}/{spec.op}")
     ev = GemmEvent(spec=spec, backend=backend,
                    count=_repeat_multiplier() if count is None else count,
                    recompute=recompute)

@@ -26,6 +26,7 @@ from repro.models import transformer
 from repro.optim import AdamW
 from repro.roofline import analysis as roofline_lib
 from repro.runtime import compat, sharding
+from repro.serving import specs as serving_specs
 
 __all__ = ["dryrun_cell", "main"]
 
@@ -136,10 +137,8 @@ def dryrun_cell(
             step = serve_lib.build_serve_step(cfg, rules)
             pabs = transformer.abstract_params(cfg)
             pspec = _sanitize(transformer.param_specs(cfg, rules), pabs, mesh)
-            cabs = jax.eval_shape(
-                lambda: transformer.init_cache(
-                    cfg, shape.global_batch, shape.seq_len))
-            cspec = serve_lib.cache_spec_tree(
+            # one source of truth with serve.cache_spec_tree (serving.specs)
+            cabs, cspec = serving_specs.decode_cache_specs(
                 cfg, rules, mesh, shape.global_batch, shape.seq_len)
             dp = mesh_lib.data_axes(mesh)
             tok_spec = (P(dp, None)

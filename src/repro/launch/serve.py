@@ -1,14 +1,18 @@
-"""Serving driver: sharded prefill + decode steps, batched greedy generation.
+"""Serving driver: sharded prefill + decode steps over the serving subsystem.
 
 Decode shardings: KV caches shard over batch (DP axes) and, crucially, over
 the *sequence* dimension on the model axis ("kv_seq" -> "model") — KV-head
 counts (4-24) never divide a 16-way TP axis, so the cache's parallel dim at
 32k-500k context is the sequence (DESIGN.md §5).
 
-CLI (deliverable (b)): serve a reduced model with batched requests:
+Generation routes through ``repro.serving`` (docs/serving.md): `generate`
+is a thin fixed-batch client of the continuous-batching scheduler, and
+``--sched`` runs the full Poisson loadgen sweep with the FP8 KV cache,
+merging ``serve/*`` p50/p99 rows into ``BENCH_engine.json``:
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \\
         --batch 4 --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --sched --arch yi-9b --reduced
 """
 
 from __future__ import annotations
@@ -27,6 +31,10 @@ from repro import configs
 from repro.core import engine
 from repro.models import transformer
 from repro.runtime import sharding
+from repro.serving import kv_cache as kv_lib
+from repro.serving import loadgen as loadgen_lib
+from repro.serving import scheduler as sched_lib
+from repro.serving import specs as specs_lib
 
 __all__ = [
     "serve_rules", "cache_spec_tree", "build_serve_step", "build_prefill",
@@ -49,17 +57,11 @@ def serve_rules(base: Optional[sharding.Rules] = None) -> sharding.Rules:
         ))
 
 
-def cache_spec_tree(cfg, rules, mesh, batch: int, max_len: int):
-    axes = transformer.cache_axes(cfg)
-    abstract = jax.eval_shape(
-        lambda: transformer.init_cache(cfg, batch, max_len))
-    spec = jax.tree.map(
-        lambda ax: sharding.logical_spec(ax, rules),
-        axes, is_leaf=lambda x: isinstance(x, tuple) and all(
-            isinstance(a, (str, type(None))) for a in x))
-    return jax.tree.map(
-        lambda s, a: sharding.sanitize_spec(s, a.shape, mesh),
-        spec, abstract, is_leaf=lambda x: isinstance(x, P))
+def cache_spec_tree(cfg, rules, mesh, batch: int, max_len: int,
+                    storage_dtype: Optional[str] = None):
+    """Sanitized decode-cache PartitionSpecs (serving.specs is the source)."""
+    return specs_lib.decode_cache_specs(
+        cfg, rules, mesh, batch, max_len, storage_dtype=storage_dtype)[1]
 
 
 def build_serve_step(cfg, rules: Optional[sharding.Rules]):
@@ -110,25 +112,91 @@ def _axsize(mesh, name):
 
 
 # --------------------------------------------------------------------- #
-# Generation loop (greedy)
+# Generation: thin fixed-batch client of the scheduler
 # --------------------------------------------------------------------- #
 def generate(params, cfg, prompts: jax.Array, gen_len: int,
-             rules: Optional[sharding.Rules] = None):
-    """prompts: (B, S) int32. Returns (B, S+gen_len)."""
+             rules: Optional[sharding.Rules] = None, *,
+             storage_dtype: Optional[str] = None, return_state: bool = False):
+    """prompts: (B, S) int32. Returns (B, S+gen_len) greedy continuations.
+
+    Runs the serving scheduler with B slots and B simultaneous arrivals —
+    every slot stays in lockstep, so this is the classic batched greedy
+    loop, but with the scheduler's drain invariant: the final emitted
+    token's KV is absorbed before eviction, so the returned cache (with
+    ``return_state=True``: ``(seqs, cache, final_logits)``) is consistent
+    with the emitted sequences — ``argmax(final_logits)`` is exactly the
+    token a ``gen_len + 1`` run would emit next.  ``storage_dtype`` serves
+    from the FP8 KV cache."""
     B, S = prompts.shape
-    max_len = S + gen_len
-    pre = jax.jit(build_prefill(cfg, rules, max_len))
-    step = jax.jit(build_serve_step(cfg, rules), donate_argnums=(1,))
-    logits, cache = pre(params, {"inputs": prompts})
-    out = [prompts]
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    for i in range(gen_len):
-        out.append(tok)
-        if i == gen_len - 1:
-            break
-        logits, cache = step(params, cache, tok, jnp.int32(S + i))
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    return jnp.concatenate(out, axis=1)
+    if gen_len < 1:
+        raise ValueError("gen_len must be >= 1")
+    scfg = sched_lib.SchedulerConfig(
+        n_slots=B, max_len=S + gen_len, storage_dtype=storage_dtype)
+    sched = sched_lib.Scheduler(params, cfg, scfg, rules=rules)
+    pnp = np.asarray(prompts)
+    sched.submit([
+        sched_lib.Request(rid=i, arrival=0.0, prompt=pnp[i],
+                          max_new_tokens=gen_len)
+        for i in range(B)
+    ])
+    results = sched.run()
+    seqs = jnp.asarray(np.concatenate(
+        [pnp, np.array([r.tokens for r in results], np.int32)], axis=1))
+    if return_state:
+        final = np.stack([r.final_logits for r in results])
+        return seqs, sched.cache, final
+    return seqs
+
+
+# --------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------- #
+def _run_sched(cfg, params, args) -> None:
+    if args.policy:
+        # FP8 end to end: the decode GEMMs dispatch under the policy's
+        # per-operand storage dtypes (MIXED_FP8_E4M3 by default), on top
+        # of the FP8 KV cache selected by --storage
+        cfg = dataclasses.replace(cfg, policy_name=args.policy)
+    scfg = sched_lib.SchedulerConfig(
+        n_slots=args.slots, max_len=args.prompt_len + args.gen + 4,
+        storage_dtype=args.storage or None)
+    rates = [float(r) for r in args.rates.split(",")]
+    lc = loadgen_lib.LoadConfig(
+        rate=rates[0], n_requests=args.requests,
+        prompt_len=args.prompt_len, gen_len=args.gen, seed=args.seed)
+
+    if args.instrument:
+        # one sweep under instrumentation: the jit traces of the serving
+        # path land here, tagged serve_prefill / serve_admit / serve_decode
+        with engine.instrument() as events:
+            sched = sched_lib.Scheduler(params, cfg, scfg)
+            sched.submit(loadgen_lib.poisson_requests(cfg, lc))
+            sched.run()
+        for op, d in engine.summarize(events).items():
+            print(f"[engine] {op}: calls={d['calls']} "
+                  f"gflops={d['flops']/1e9:.3f} gbytes={d['bytes']/1e9:.3f}")
+        print("[sched] tick queue pend active fill")
+        for h in sched.health:
+            print(f"[sched] {h['tick']:8.2f} {h['queue_depth']:5d} "
+                  f"{h['pending']:4d} {h['active_slots']:6d} "
+                  f"{h['batch_fill']:.2f}")
+        for leaf, d in kv_lib.scale_health(sched.cache).items():
+            print(f"[kv] {leaf}: max_scale={d['max_scale']:.3g} "
+                  f"overflow={d['overflow_total']}")
+        # one exactly-billed ragged decode step at the drained lengths
+        lengths = [args.prompt_len + args.gen if i == 0 else 0
+                   for i in range(scfg.n_slots)]
+        ev = sched_lib.instrumented_decode_events(params, cfg, scfg, lengths)
+        print(f"[kv] ragged decode step flops={engine.total_flops(ev)} "
+              f"kv_bytes={kv_lib.decode_step_kv_bytes(cfg, [l for l in lengths if l], scfg.storage_dtype)}")
+
+    rows = loadgen_lib.bench_rows(
+        params, cfg, scfg, cfg.name, rates, lc)
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    if args.json:
+        loadgen_lib.merge_bench_json(args.json, rows)
+        print(f"merged {len(rows)} serve/* rows into {args.json}")
 
 
 def main(argv=None):
@@ -140,14 +208,37 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--instrument", action="store_true",
-                   help="trace prefill + one decode step under "
-                        "engine.instrument() and print the GEMM summary")
+                   help="trace the serving path under engine.instrument() "
+                        "and print the GEMM summary; with --sched also the "
+                        "per-step scheduler health (queue depth, slot "
+                        "occupancy, batch fill) and KV scale state")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--sched", action="store_true",
+                   help="run the continuous-batching scheduler + Poisson "
+                        "loadgen sweep and merge serve/* rows into --json")
+    p.add_argument("--slots", type=int, default=4,
+                   help="--sched: decode slot pool size")
+    p.add_argument("--requests", type=int, default=8,
+                   help="--sched: requests per offered-load point")
+    p.add_argument("--rates", default="0.25,1.0",
+                   help="--sched: offered loads (requests/tick), comma-sep")
+    p.add_argument("--storage", default="float8_e4m3fn",
+                   help="--sched: KV cache storage dtype ('' for fp16)")
+    p.add_argument("--policy", default="mixed_fp8_e4m3",
+                   help="--sched: precision policy for the serve GEMMs "
+                        "('' keeps the arch default)")
+    p.add_argument("--json", default="BENCH_engine.json",
+                   help="--sched: merge rows into this file ('' to skip)")
     args = p.parse_args(argv)
 
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
     rng = jax.random.PRNGKey(args.seed)
     params = transformer.init_params(rng, cfg)
+
+    if args.sched:
+        _run_sched(cfg, params, args)
+        return
+
     prompts = jax.random.randint(
         rng, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
     if args.instrument:

@@ -18,11 +18,13 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import engine
 from repro.core import precision as prec
 from repro.models import layers
 from repro.models.layers import Param
+from repro.optim import scale as oscale
 from repro.runtime import sharding
 
 __all__ = [
@@ -73,17 +75,86 @@ def mla_schema(cfg) -> Dict[str, Any]:
 # --------------------------------------------------------------------- #
 # Caches
 # --------------------------------------------------------------------- #
-def init_gqa_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
+SCALE_HISTORY = 16  # delayed-scaling amax window per cache scale leaf
+
+
+def _init_scale_leaves(lead_shape: Tuple[int, ...]) -> Dict[str, jax.Array]:
+    """Per-head (or per-tensor, ``lead_shape == ()``) delayed-scaling state,
+    stored as plain cache leaves so it rides the cache pytree through
+    jit/scan/donation: the three fields of :class:`repro.optim.scale.
+    Fp8ScaleState`, broadcast over the leading head dim."""
+    return {
+        "scale": jnp.ones(lead_shape, jnp.float32),
+        "amax_history": jnp.zeros((*lead_shape, SCALE_HISTORY), jnp.float32),
+        "overflow_count": jnp.zeros(lead_shape, jnp.int32),
+    }
+
+
+def _scale_leaf_axes(head_axes: Tuple) -> Dict[str, Tuple]:
+    return {
+        "scale": head_axes,
+        "amax_history": (*head_axes, None),
+        "overflow_count": head_axes,
+    }
+
+
+def _refresh_scale(sc: Dict[str, jax.Array], new_rows: jax.Array,
+                   reduce_axes: Tuple[int, ...]
+                   ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Fold the new rows' amax into the delayed-scaling window
+    (:func:`repro.optim.scale.update_fp8_scale`, vmapped over heads) and
+    return ``(updated leaves, applied scale)``.  The applied scale
+    *ratchets* (``max`` with the stored scale): rows quantized under an
+    older scale can only shrink on requantization, never clip."""
+    st = oscale.Fp8ScaleState(
+        sc["scale"], sc["amax_history"], sc["overflow_count"])
+    amax = jnp.max(jnp.abs(new_rows.astype(jnp.float32)), axis=reduce_axes)
+    upd = oscale.update_fp8_scale
+    for _ in range(amax.ndim):   # nest over (layers, heads) leading dims
+        upd = jax.vmap(upd)
+    st2 = upd(st, amax)
+    applied = jnp.maximum(sc["scale"], st2.scale)
+    return ({"scale": applied, "amax_history": st2.amax_history,
+             "overflow_count": st2.overflow_count}, applied)
+
+
+def init_gqa_cache(cfg, batch: int, max_len: int, dtype,
+                   storage_dtype=None) -> Dict[str, jax.Array]:
     hkv, hd = cfg.n_kv_heads, cfg.head_dim
     shape = (batch, hkv, max_len, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
-
-
-def init_mla_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]:
-    m = cfg.mla
+    if storage_dtype is None:
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    st = jnp.dtype(storage_dtype)
+    if not prec.is_fp8(st):
+        raise ValueError(
+            f"storage_dtype must be an FP8 format {prec.FP8_FORMATS}, "
+            f"got {st.name!r}")
     return {
-        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
-        "kr": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+        "k": jnp.zeros(shape, st), "v": jnp.zeros(shape, st),
+        "k_scale": _init_scale_leaves((hkv,)),
+        "v_scale": _init_scale_leaves((hkv,)),
+    }
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype,
+                   storage_dtype=None) -> Dict[str, jax.Array]:
+    m = cfg.mla
+    if storage_dtype is None:
+        return {
+            "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+        }
+    st = jnp.dtype(storage_dtype)
+    if not prec.is_fp8(st):
+        raise ValueError(
+            f"storage_dtype must be an FP8 format {prec.FP8_FORMATS}, "
+            f"got {st.name!r}")
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), st),
+        "kr": jnp.zeros((batch, max_len, m.qk_rope_dim), st),
+        # MLA scales are per-tensor: the compressed latent has no head dim
+        "ckv_scale": _init_scale_leaves(()),
+        "kr_scale": _init_scale_leaves(()),
     }
 
 
@@ -92,18 +163,23 @@ def init_mla_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jax.Array]
 # --------------------------------------------------------------------- #
 def _masked_softmax_block(
     s: jax.Array,  # (B, Hkv, G, qc, T) fp32 scores
-    rows: jax.Array,  # (qc,) absolute query positions
-    kv_valid: jax.Array,  # scalar: number of valid kv slots
+    rows: jax.Array,  # (qc,) or (B, qc) absolute query positions
+    kv_valid: jax.Array,  # scalar or (B,): number of valid kv slots
     causal: bool,
     window: Optional[jax.Array],
 ) -> jax.Array:
+    # Serving decode batches carry per-slot positions: rows/kv_valid grow a
+    # leading batch dim and the mask broadcasts (Bm, 1, 1, qc, T) over the
+    # scores; single-sequence callers keep Bm == 1.
     cols = jnp.arange(s.shape[-1])
-    mask = cols[None, :] < kv_valid
+    rows2 = rows if rows.ndim == 2 else rows[None]            # (Bm, qc)
+    kv = jnp.reshape(jnp.asarray(kv_valid), (-1, 1, 1))       # (Bm, 1, 1)
+    mask = cols[None, None, :] < kv
     if causal:
-        mask = mask & (cols[None, :] <= rows[:, None])
+        mask = mask & (cols[None, None, :] <= rows2[:, :, None])
     if window is not None:
-        mask = mask & (cols[None, :] > rows[:, None] - window)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask = mask & (cols[None, None, :] > rows2[:, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
     return jax.nn.softmax(s, axis=-1)
 
 
@@ -112,16 +188,25 @@ def chunked_attention(
     k: jax.Array,  # (B, Hkv, T, hd)
     v: jax.Array,  # (B, Hkv, T, hdv)
     *,
-    q_offset: jax.Array,  # scalar: absolute position of q[..., 0, :]
-    kv_valid: jax.Array,  # scalar: valid kv length
+    q_offset: jax.Array,  # scalar or (B,): absolute position of q[..., 0, :]
+    kv_valid: jax.Array,  # scalar or (B,): valid kv length
     causal: bool = True,
     window: Optional[jax.Array] = None,
     q_chunk: int = 1024,
     scale: Optional[float] = None,
+    kv_group_sizes: Optional[Any] = None,
     policy: prec.Policy,
 ) -> jax.Array:
     """Returns (B, Hkv, G, S, hdv). Scores fp32, never materialized beyond
-    one q-chunk (the RedMulE store-once rule applied to attention)."""
+    one q-chunk (the RedMulE store-once rule applied to attention).
+
+    ``kv_group_sizes`` (serving decode, S == 1 only): per-batch-slot valid
+    kv lengths.  The score GEMM then dispatches through the Engine's
+    ragged ``grouped_matmul`` path — one group per (slot, kv-head), group
+    size = that slot's kv length — so mixed-length decode batches bill
+    flops/bytes for the *valid* kv rows only.  Concrete sizes (numpy, at
+    an instrumentation trace) pin ``valid_rows`` on the event; traced
+    sizes fall back to dense billing with identical numerics."""
     B, Hkv, G, S, hd = q.shape
     if scale is None:
         scale = hd**-0.5
@@ -129,6 +214,13 @@ def chunked_attention(
         policy, name=policy.name + "_scores", output_dtype=jnp.float32,
         faithful_accum=False,
     )
+    if kv_group_sizes is not None:
+        if S != 1:
+            raise ValueError("kv_group_sizes is a decode-only (S == 1) path")
+        return _ragged_decode_attention(
+            q, k, v, q_offset=q_offset, kv_valid=kv_valid, window=window,
+            kv_group_sizes=kv_group_sizes, scale=scale,
+            scores_policy=scores_policy, policy=policy)
     kt = jnp.swapaxes(k, -1, -2)[:, :, None]  # (B, Hkv, 1, hd, T)
     vb = v[:, :, None]
     # Decode: pin the attention dots to the sequence-sharded KV layout —
@@ -145,6 +237,12 @@ def chunked_attention(
     kt = c(kt, "batch", "kv_heads", None, None, "kv_seq")
     vb = c(vb, "batch", "kv_heads", None, "kv_seq", None)
 
+    def rows_at(start):
+        off = jnp.asarray(q_offset)
+        n = min(q_chunk, S)
+        r = jnp.arange(n) + start
+        return off[:, None] + r[None] if off.ndim == 1 else off + r
+
     def block(q_blk: jax.Array, rows: jax.Array) -> jax.Array:
         q_blk = c(q_blk, "batch", "kv_heads", None, None, None)
         s = engine.matmul(q_blk, kt, policy=scores_policy) * scale
@@ -154,7 +252,7 @@ def chunked_attention(
         return c(out, "batch", "kv_heads", None, None, None)
 
     if S <= q_chunk:
-        return block(q, q_offset + jnp.arange(S))
+        return block(q, rows_at(0))
 
     n = -(-S // q_chunk)
     pad = n * q_chunk - S
@@ -164,13 +262,55 @@ def chunked_attention(
 
     def step(_, xs):
         q_blk, idx = xs
-        rows = q_offset + idx * q_chunk + jnp.arange(q_chunk)
-        return None, block(q_blk, rows)
+        return None, block(q_blk, rows_at(idx * q_chunk))
 
     with engine.repeat(n):  # body traced once, runs n q-chunks
         _, out = jax.lax.scan(step, None, (qs, jnp.arange(n)))
     out = jnp.moveaxis(out, 0, 3).reshape(B, Hkv, G, n * q_chunk, -1)
     return out[:, :, :, :S]
+
+
+def _ragged_decode_attention(
+    q: jax.Array,  # (B, Hkv, G, 1, hd)
+    k: jax.Array,  # (B, Hkv, T, hd)
+    v: jax.Array,  # (B, Hkv, T, hdv)
+    *,
+    q_offset: jax.Array,
+    kv_valid: jax.Array,
+    window: Optional[jax.Array],
+    kv_group_sizes: Any,
+    scale: float,
+    scores_policy: prec.Policy,
+    policy: prec.Policy,
+) -> jax.Array:
+    """Mixed-length decode batch through the ragged grouped-GEMM path.
+
+    The score contraction runs transposed — ``scores^T[g] = K[g] @ q[g]^T``
+    with one group per (slot, kv-head) and ``group_sizes`` = the slot's
+    valid kv length — so the Engine's ``valid_rows`` accounting bills only
+    the rows each slot actually attends, not ``B * T`` dense.  Rows at or
+    beyond a group's size come back zeroed and are re-masked to -inf by
+    the softmax mask, so numerics match the dense block exactly.  The PV
+    contraction keeps the dense batched dispatch: its ragged dim is the
+    *contraction* (masked probabilities are exact zeros), which forward
+    grouped GEMMs cannot bill raggedly."""
+    B, Hkv, G, S, hd = q.shape
+    T = k.shape[2]
+    x = k.reshape(B * Hkv, T, hd)
+    w = jnp.transpose(q[:, :, :, 0, :], (0, 1, 3, 2)).reshape(B * Hkv, hd, G)
+    sizes = kv_group_sizes
+    if isinstance(sizes, (list, tuple)):
+        sizes = np.asarray(sizes, np.int32)
+    gs = (np.repeat(sizes, Hkv) if isinstance(sizes, np.ndarray)
+          else jnp.repeat(jnp.asarray(sizes), Hkv))
+    st = engine.grouped_matmul(x, w, group_sizes=gs, policy=scores_policy)
+    s = jnp.transpose(st.reshape(B, Hkv, T, G), (0, 1, 3, 2))[:, :, :, None, :]
+    s = s * scale
+    off = jnp.asarray(q_offset)
+    rows = off[:, None] if off.ndim == 1 else off + jnp.arange(1)
+    p = _masked_softmax_block(s, rows, kv_valid, True, window)
+    return engine.matmul(
+        p.astype(policy.compute_dtype), v[:, :, None], policy=policy)
 
 
 # --------------------------------------------------------------------- #
@@ -186,10 +326,14 @@ def gqa_attention(
     window: Optional[jax.Array] = None,
     policy: prec.Policy,
     q_chunk: int = 1024,
+    kv_group_sizes: Optional[Any] = None,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     B, S, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = hq // hkv
+    off = jnp.asarray(pos_offset)
+    if off.ndim == 1 and S != 1:
+        raise ValueError("per-slot pos_offset is a decode-only (S == 1) path")
 
     qkv = engine.matmul(x, params["wqkv"], policy=policy)
     if "bqkv" in params:
@@ -203,29 +347,54 @@ def gqa_attention(
         q = layers.rmsnorm(q, params["q_norm"])
         kk = layers.rmsnorm(kk, params["k_norm"])
 
-    positions = pos_offset + jnp.arange(S)
+    positions = (off[:, None] + jnp.arange(S)[None] if off.ndim == 1
+                 else off + jnp.arange(S))
     cos, sin = layers.rope(positions, hd, cfg.rope_theta)
     q = layers.apply_rope(q, cos, sin)
     kk = layers.apply_rope(kk, cos, sin)
 
     if cache is not None:
+        fp8 = prec.is_fp8(cache["k"].dtype)
+        if fp8:
+            # upcast on read: E4M3 tensors widen to the compute dtype
+            # against the per-head delayed scales stored alongside them
+            ks = cache["k_scale"]["scale"].reshape(1, -1, 1, 1)
+            vs = cache["v_scale"]["scale"].reshape(1, -1, 1, 1)
+            k_prev = prec.dequantize_fp8(cache["k"], ks, kk.dtype)
+            v_prev = prec.dequantize_fp8(cache["v"], vs, vv.dtype)
+        else:
+            k_prev, v_prev = cache["k"], cache["v"]
         if S == 1:
             # decode: masked merge — elementwise over the (possibly
             # TP-sharded) cache sequence dim, so no gather is forced the way
-            # a dynamic-update-slice at a traced position would
-            T = cache["k"].shape[2]
-            hit = (jnp.arange(T) == pos_offset)[None, None, :, None]
-            k_all = jnp.where(hit, kk.astype(cache["k"].dtype), cache["k"])
-            v_all = jnp.where(hit, vv.astype(cache["v"].dtype), cache["v"])
+            # a dynamic-update-slice at a traced position would; a per-slot
+            # (B,) pos_offset broadcasts each slot's own hit row
+            T = k_prev.shape[2]
+            hit = (jnp.arange(T)[None, :]
+                   == jnp.reshape(off, (-1, 1)))[:, None, :, None]
+            k_all = jnp.where(hit, kk.astype(k_prev.dtype), k_prev)
+            v_all = jnp.where(hit, vv.astype(v_prev.dtype), v_prev)
         else:
             zero = jnp.zeros((), jnp.int32)
             k_all = jax.lax.dynamic_update_slice(
-                cache["k"], kk.astype(cache["k"].dtype),
+                k_prev, kk.astype(k_prev.dtype),
                 (zero, zero, pos_offset, zero))
             v_all = jax.lax.dynamic_update_slice(
-                cache["v"], vv.astype(cache["v"].dtype),
+                v_prev, vv.astype(v_prev.dtype),
                 (zero, zero, pos_offset, zero))
-        new_cache = {"k": k_all, "v": v_all}
+        if fp8:
+            # write-back: refresh the per-head delayed scales with the new
+            # rows' amax, requantize under the (ratcheted) applied scale
+            k_sc, k_as = _refresh_scale(cache["k_scale"], kk, (0, 2, 3))
+            v_sc, v_as = _refresh_scale(cache["v_scale"], vv, (0, 2, 3))
+            k_q, _ = prec.quantize_fp8(
+                k_all, cache["k"].dtype, scale=k_as.reshape(1, -1, 1, 1))
+            v_q, _ = prec.quantize_fp8(
+                v_all, cache["v"].dtype, scale=v_as.reshape(1, -1, 1, 1))
+            new_cache = {"k": k_q, "v": v_q,
+                         "k_scale": k_sc, "v_scale": v_sc}
+        else:
+            new_cache = {"k": k_all, "v": v_all}
         kv_valid = pos_offset + S
     else:
         k_all, v_all, new_cache, kv_valid = kk, vv, None, jnp.int32(S)
@@ -238,6 +407,7 @@ def gqa_attention(
         qg, k_all, v_all,
         q_offset=pos_offset, kv_valid=kv_valid, causal=True,
         window=window, q_chunk=q_chunk, policy=policy,
+        kv_group_sizes=kv_group_sizes,
     )
     o = o.reshape(B, hq, S, hd).transpose(0, 2, 1, 3).reshape(B, S, hq * hd)
     o = sharding.constrain(o, "batch", None, "heads")
@@ -257,11 +427,19 @@ def mla_attention(
     cache: Optional[Dict[str, jax.Array]] = None,
     policy: prec.Policy,
     q_chunk: int = 1024,
+    kv_group_sizes: Optional[Any] = None,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    # kv_group_sizes is accepted for API parity with gqa_attention; the
+    # absorbed MLA decode is einsum-shaped (no grouped ragged form), so
+    # per-slot lengths only drive the mask here, not the billing.
+    del kv_group_sizes
     m = cfg.mla
     B, S, d = x.shape
     hq = cfg.n_heads
     dn, dr, dv, r = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+    off = jnp.asarray(pos_offset)
+    if off.ndim == 1 and S != 1:
+        raise ValueError("per-slot pos_offset is a decode-only (S == 1) path")
 
     q = engine.matmul(x, params["wq"], policy=policy).reshape(B, S, hq, dn + dr)
     q = q.transpose(0, 2, 1, 3)  # (B, Hq, S, dn+dr)
@@ -271,26 +449,45 @@ def mla_attention(
     ckv, kr = dkv[..., :r], dkv[..., r:]
     ckv = layers.rmsnorm(ckv, params["kv_norm"])
 
-    positions = pos_offset + jnp.arange(S)
+    positions = (off[:, None] + jnp.arange(S)[None] if off.ndim == 1
+                 else off + jnp.arange(S))
     cos, sin = layers.rope(positions, dr, cfg.rope_theta)
     qr = layers.apply_rope(qr, cos, sin)
     kr = layers.apply_rope(kr[:, None], cos, sin)[:, 0]  # (B, S, dr)
 
     if cache is not None:
+        fp8 = prec.is_fp8(cache["ckv"].dtype)
+        if fp8:
+            ckv_prev = prec.dequantize_fp8(
+                cache["ckv"], cache["ckv_scale"]["scale"], ckv.dtype)
+            kr_prev = prec.dequantize_fp8(
+                cache["kr"], cache["kr_scale"]["scale"], kr.dtype)
+        else:
+            ckv_prev, kr_prev = cache["ckv"], cache["kr"]
         if S == 1:
-            T = cache["ckv"].shape[1]
-            hit = (jnp.arange(T) == pos_offset)[None, :, None]
-            ckv_all = jnp.where(hit, ckv.astype(cache["ckv"].dtype), cache["ckv"])
-            kr_all = jnp.where(hit, kr.astype(cache["kr"].dtype), cache["kr"])
+            T = ckv_prev.shape[1]
+            hit = (jnp.arange(T)[None, :]
+                   == jnp.reshape(off, (-1, 1)))[:, :, None]
+            ckv_all = jnp.where(hit, ckv.astype(ckv_prev.dtype), ckv_prev)
+            kr_all = jnp.where(hit, kr.astype(kr_prev.dtype), kr_prev)
         else:
             zero = jnp.zeros((), jnp.int32)
             ckv_all = jax.lax.dynamic_update_slice(
-                cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                ckv_prev, ckv.astype(ckv_prev.dtype),
                 (zero, pos_offset, zero))
             kr_all = jax.lax.dynamic_update_slice(
-                cache["kr"], kr.astype(cache["kr"].dtype),
+                kr_prev, kr.astype(kr_prev.dtype),
                 (zero, pos_offset, zero))
-        new_cache = {"ckv": ckv_all, "kr": kr_all}
+        if fp8:
+            c_sc, c_as = _refresh_scale(cache["ckv_scale"], ckv, (0, 1, 2))
+            r_sc, r_as = _refresh_scale(cache["kr_scale"], kr, (0, 1, 2))
+            ckv_q, _ = prec.quantize_fp8(
+                ckv_all, cache["ckv"].dtype, scale=c_as)
+            kr_q, _ = prec.quantize_fp8(kr_all, cache["kr"].dtype, scale=r_as)
+            new_cache = {"ckv": ckv_q, "kr": kr_q,
+                         "ckv_scale": c_sc, "kr_scale": r_sc}
+        else:
+            new_cache = {"ckv": ckv_all, "kr": kr_all}
         kv_valid = pos_offset + S
     else:
         ckv_all, kr_all, new_cache, kv_valid = ckv, kr, None, jnp.int32(S)
@@ -315,7 +512,8 @@ def mla_attention(
         s = engine.einsum2d("bhsr,btr->bhst", q_abs, ckv_all, policy=abs_policy)
         s = s + engine.einsum2d("bhsd,btd->bhst", qr, kr_all, policy=abs_policy)
         s = s * (dn + dr) ** -0.5
-        mask = jnp.arange(T)[None, None, None, :] < kv_valid
+        mask = (jnp.arange(T)[None, None, None, :]
+                < jnp.reshape(jnp.asarray(kv_valid), (-1, 1, 1, 1)))
         s = jnp.where(mask, s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         ctx = engine.einsum2d("bhst,btr->bhsr", p, ckv_all, policy=abs_policy)

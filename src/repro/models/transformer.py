@@ -185,19 +185,21 @@ def _norm(cfg, x, scale):
     return layers.rmsnorm(x, scale)
 
 
-def _run_attn(cfg, p, h, *, pos, cache, window, policy):
+def _run_attn(cfg, p, h, *, pos, cache, window, policy, kv_group_sizes=None):
     if cfg.mla:
         return attention.mla_attention(
             p, h, cfg, pos_offset=pos, cache=cache, policy=policy,
-            q_chunk=cfg.q_chunk)
+            q_chunk=cfg.q_chunk, kv_group_sizes=kv_group_sizes)
     return attention.gqa_attention(
         p, h, cfg, pos_offset=pos, cache=cache, window=window, policy=policy,
-        q_chunk=cfg.q_chunk)
+        q_chunk=cfg.q_chunk, kv_group_sizes=kv_group_sizes)
 
 
-def _attn_block(p, h, cfg, *, pos, cache, window, policy, d_ff=None):
+def _attn_block(p, h, cfg, *, pos, cache, window, policy, d_ff=None,
+                kv_group_sizes=None):
     a, cache = _run_attn(cfg, p["attn"], _norm(cfg, h, p["ln1"]),
-                         pos=pos, cache=cache, window=window, policy=policy)
+                         pos=pos, cache=cache, window=window, policy=policy,
+                         kv_group_sizes=kv_group_sizes)
     h = h + a
     if cfg.mlp == "glu":
         m = layers.mlp_glu(p["mlp"], _norm(cfg, h, p["ln2"]), act=cfg.act, policy=policy)
@@ -208,9 +210,10 @@ def _attn_block(p, h, cfg, *, pos, cache, window, policy, d_ff=None):
     return h + m, cache, {}
 
 
-def _moe_block(p, h, cfg, *, pos, cache, policy):
+def _moe_block(p, h, cfg, *, pos, cache, policy, kv_group_sizes=None):
     a, cache = _run_attn(cfg, p["attn"], _norm(cfg, h, p["ln1"]),
-                         pos=pos, cache=cache, window=None, policy=policy)
+                         pos=pos, cache=cache, window=None, policy=policy,
+                         kv_group_sizes=kv_group_sizes)
     h = h + a
     moe_fn = (moe.moe_forward_shard_map if cfg.moe_impl == "shard_map"
               else moe.moe_forward)
@@ -327,6 +330,7 @@ def forward(
     pos: jax.Array | int = 0,
     last_only: bool = False,
     head: bool = True,
+    kv_group_sizes: Optional[Any] = None,
 ) -> Tuple[jax.Array, Optional[Dict[str, Any]], Dict[str, jax.Array]]:
     policy = cfg.policy
     pos = jnp.asarray(pos, jnp.int32)
@@ -341,7 +345,8 @@ def forward(
     new_cache: Dict[str, Any] = {}
     if kind == "attn":
         fn = lambda lp, hh, *, cache, window: _attn_block(
-            lp, hh, cfg, pos=pos, cache=cache, window=window, policy=policy)
+            lp, hh, cfg, pos=pos, cache=cache, window=window, policy=policy,
+            kv_group_sizes=kv_group_sizes)
         h, nc, aux = _scan_stack(
             cfg, fn, params["layers"], h,
             None if cache is None else cache["layers"], window_array(cfg))
@@ -350,9 +355,11 @@ def forward(
         c0 = None if cache is None else cache["layer0"]
         h, nc0, _ = _attn_block(
             params["layer0"], h, cfg, pos=pos, cache=c0, window=None,
-            policy=policy, d_ff=cfg.moe.dense_ff)
+            policy=policy, d_ff=cfg.moe.dense_ff,
+            kv_group_sizes=kv_group_sizes)
         fn = lambda lp, hh, *, cache, window: _moe_block(
-            lp, hh, cfg, pos=pos, cache=cache, policy=policy)
+            lp, hh, cfg, pos=pos, cache=cache, policy=policy,
+            kv_group_sizes=kv_group_sizes)
         h, nc, aux = _scan_stack(
             cfg, fn, params["layers"], h,
             None if cache is None else cache["layers"], None)
@@ -443,18 +450,30 @@ def loss_fn(params, cfg, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     return loss, metrics
 
 
-def serve_step(params, cfg, tokens, cache, pos):
-    """One decode step: tokens (B, 1) + cache @ pos -> (logits (B, V), cache')."""
+def serve_step(params, cfg, tokens, cache, pos, *, kv_group_sizes=None):
+    """One decode step: tokens (B, 1) + cache @ pos -> (logits (B, V), cache').
+
+    ``pos`` may be a scalar (uniform batch — the classic greedy loop) or a
+    per-slot ``(B,)`` vector (the serving scheduler's continuous batch).
+    ``kv_group_sizes`` (optional, per-slot valid kv lengths) routes the
+    decode score GEMMs through the Engine's ragged grouped path — see
+    :func:`repro.models.attention.chunked_attention`."""
     logits, new_cache, _ = forward(
-        params, cfg, {"inputs": tokens}, cache=cache, pos=pos)
+        params, cfg, {"inputs": tokens}, cache=cache, pos=pos,
+        kv_group_sizes=kv_group_sizes)
     return logits[:, -1], new_cache
 
 
-def prefill(params, cfg, batch, max_len: int):
-    """Prefill: run the prompt, build the cache, return last-token logits."""
+def prefill(params, cfg, batch, max_len: int, storage_dtype=None):
+    """Prefill: run the prompt, build the cache, return last-token logits.
+
+    ``storage_dtype`` (an FP8 format name) builds the quantized serving
+    cache — the prompt's k/v rows are quantized on write with per-head
+    delayed scales (see :func:`init_cache`)."""
     some = batch.get("inputs", batch.get("embeddings"))
     B = some.shape[0]
-    cache = init_cache(cfg, B, max_len, dtype=cfg.policy.compute_dtype)
+    cache = init_cache(cfg, B, max_len, dtype=cfg.policy.compute_dtype,
+                       storage_dtype=storage_dtype)
     logits, cache, _ = forward(params, cfg, batch, cache=cache, pos=0,
                                last_only=True)
     return logits[:, -1], cache
@@ -463,12 +482,23 @@ def prefill(params, cfg, batch, max_len: int):
 # --------------------------------------------------------------------- #
 # Caches
 # --------------------------------------------------------------------- #
-def cache_axes(cfg):
-    """Logical sharding axes for every leaf of ``init_cache``'s output."""
+def cache_axes(cfg, storage_dtype=None):
+    """Logical sharding axes for every leaf of ``init_cache``'s output.
+
+    With ``storage_dtype`` set (FP8 serving cache) the tree grows the
+    per-head delayed-scaling leaves next to each quantized tensor —
+    mirror of :func:`init_cache`'s structure, leaf for leaf."""
     kind = cfg.block_kind
     gqa = {"k": ("batch", "kv_heads", "kv_seq", None),
            "v": ("batch", "kv_heads", "kv_seq", None)}
     mla = {"ckv": ("batch", "kv_seq", None), "kr": ("batch", "kv_seq", None)}
+    if storage_dtype is not None:
+        gqa = dict(gqa,
+                   k_scale=attention._scale_leaf_axes(("kv_heads",)),
+                   v_scale=attention._scale_leaf_axes(("kv_heads",)))
+        mla = dict(mla,
+                   ckv_scale=attention._scale_leaf_axes(()),
+                   kr_scale=attention._scale_leaf_axes(()))
     attn = mla if cfg.mla else gqa
     stackax = lambda tree: jax.tree.map(
         lambda ax: ("layers", *ax), tree, is_leaf=lambda x: isinstance(x, tuple))
@@ -488,20 +518,30 @@ def cache_axes(cfg):
     raise ValueError(kind)
 
 
-def init_cache(cfg, batch: int, max_len: int, dtype=None):
+def init_cache(cfg, batch: int, max_len: int, dtype=None, storage_dtype=None):
+    """Build the decode cache.
+
+    ``storage_dtype`` (an FP8 format name, serving) stores the attention
+    k/v tensors narrow with per-head delayed-scaling leaves alongside —
+    the RedMulE mixed-precision trade (narrow storage, wide datapath)
+    applied to the KV cache.  Only attention caches quantize; SSM/xLSTM
+    state stays wide (attn/moe block kinds only)."""
     dtype = dtype or cfg.policy.compute_dtype
     kind = cfg.block_kind
+    if storage_dtype is not None and kind not in ("attn", "moe"):
+        raise ValueError(
+            f"FP8 cache storage supports attn/moe block kinds, not {kind!r}")
 
     def stack(tree, n):
         return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), tree)
 
     if kind == "attn":
         one = (attention.init_mla_cache if cfg.mla else attention.init_gqa_cache)(
-            cfg, batch, max_len, dtype)
+            cfg, batch, max_len, dtype, storage_dtype)
         return {"layers": stack(one, cfg.n_layers)}
     if kind == "moe":
         one = (attention.init_mla_cache if cfg.mla else attention.init_gqa_cache)(
-            cfg, batch, max_len, dtype)
+            cfg, batch, max_len, dtype, storage_dtype)
         return {"layer0": one, "layers": stack(one, cfg.n_layers - cfg.moe.first_dense)}
     if kind == "hymba":
         di = cfg.ssm.mamba_expand * cfg.d_model

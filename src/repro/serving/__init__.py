@@ -1,0 +1,23 @@
+"""Serving subsystem: the first layer above the Engine that models
+production traffic — continuous-batching scheduler, FP8 KV cache
+admission + byte accounting, Poisson load generation (docs/serving.md).
+"""
+
+from repro.serving.kv_cache import (cache_size_bytes, decode_step_kv_bytes,
+                                    insert_slot, is_fp8_cache, scale_health)
+from repro.serving.loadgen import (LoadConfig, bench_rows, merge_bench_json,
+                                   poisson_requests, run_load)
+from repro.serving.scheduler import (Request, RequestResult, Scheduler,
+                                     SchedulerConfig,
+                                     instrumented_decode_events)
+from repro.serving.specs import decode_cache_specs
+
+__all__ = [
+    "cache_size_bytes", "decode_step_kv_bytes", "insert_slot",
+    "is_fp8_cache", "scale_health",
+    "LoadConfig", "bench_rows", "merge_bench_json", "poisson_requests",
+    "run_load",
+    "Request", "RequestResult", "Scheduler", "SchedulerConfig",
+    "instrumented_decode_events",
+    "decode_cache_specs",
+]

@@ -1,0 +1,197 @@
+"""FP8 KV cache: slot admission + analytic byte accounting for serving.
+
+The quantized cache itself lives in the model layer
+(:func:`repro.models.transformer.init_cache` with ``storage_dtype``, the
+attention step dequantizes on read and requantizes on write under the
+per-head delayed scales).  This module owns the two serving-side pieces:
+
+* :func:`insert_slot` — write a freshly prefilled single-request cache
+  (batch == 1) into one slot of the pooled decode cache.  FP8 pools are
+  merged *wide* and requantized under the ratcheted pool scale, so the
+  admission is just another delayed-scaling observation: rows quantized
+  under an older (smaller) scale can only shrink on requantization,
+  never clip.
+
+* Analytic KV byte accounting (:func:`decode_step_kv_bytes`,
+  :func:`cache_size_bytes`) — the Engine's GemmEvents price the GEMM
+  operand streams in the *compute* dtype (the datapath is binary16
+  either way, which is also why flops are identical across storage
+  dtypes), so cache-storage traffic needs its own model.  These feed the
+  ``benchmarks/baselines/serve_bytes.json`` CI gate.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as prec
+from repro.models import attention
+
+CacheTree = Dict[str, Any]
+
+__all__ = [
+    "is_fp8_cache", "insert_slot", "n_cache_layers", "token_elems",
+    "n_scale_elems", "storage_width", "decode_step_kv_bytes",
+    "cache_size_bytes", "scale_health",
+]
+
+
+# --------------------------------------------------------------------- #
+# Slot admission
+# --------------------------------------------------------------------- #
+def is_fp8_cache(cache: CacheTree) -> bool:
+    sub = cache.get("layers", cache.get("layer0", {}))
+    return "k_scale" in sub or "ckv_scale" in sub
+
+
+def _gqa_bcast(scale: jax.Array) -> jax.Array:
+    # (..., Hkv) -> (..., 1, Hkv, 1, 1), aligned with k/v (..., B, Hkv, T, hd)
+    return scale[..., None, :, None, None]
+
+
+def _mla_bcast(scale: jax.Array) -> jax.Array:
+    # (...,) -> (..., 1, 1, 1), aligned with ckv/kr (..., B, T, r)
+    return scale[..., None, None, None]
+
+
+def _gqa_reduce(ndim: int, bax: int):
+    # keep (leading layers..., Hkv): fold batch, seq, head_dim
+    return (bax, *range(bax + 2, ndim))
+
+
+def _mla_reduce(ndim: int, bax: int):
+    # per-tensor scales: fold everything from the batch axis on
+    return tuple(range(bax, ndim))
+
+
+def _insert_leaf(pool_sub, single_sub, name, slot, dtype, bcast, tail, reduce_of):
+    fp8 = f"{name}_scale" in pool_sub
+    p, s = pool_sub[name], single_sub[name]
+    if fp8:
+        pw = prec.dequantize_fp8(
+            p, bcast(pool_sub[f"{name}_scale"]["scale"]), dtype)
+        sw = prec.dequantize_fp8(
+            s, bcast(single_sub[f"{name}_scale"]["scale"]), dtype)
+    else:
+        pw, sw = p, s
+    bax = pw.ndim - tail
+    merged = jax.lax.dynamic_update_slice_in_dim(
+        pw, sw.astype(pw.dtype), slot, axis=bax)
+    if not fp8:
+        return {name: merged}
+    sc2, applied = attention._refresh_scale(
+        pool_sub[f"{name}_scale"], merged, reduce_of(merged.ndim, bax))
+    q, _ = prec.quantize_fp8(merged, p.dtype, scale=bcast(applied))
+    return {name: q, f"{name}_scale": sc2}
+
+
+def insert_slot(pool: CacheTree, single: CacheTree, slot,
+                dtype=jnp.float16) -> CacheTree:
+    """Write a single-request cache (batch == 1) into ``slot`` of the pool.
+
+    ``slot`` may be traced (one jit trace serves every slot).  Supports the
+    attn/moe cache trees (gqa and MLA subtrees, stacked or not); FP8 pools
+    dequantize both sides to ``dtype``, merge, refresh the pool's delayed
+    scales with the merged amax, and requantize under the ratcheted scale.
+    """
+    def sub(ps, ss):
+        if "k" in ps:
+            out = {}
+            for name in ("k", "v"):
+                out.update(_insert_leaf(
+                    ps, ss, name, slot, dtype, _gqa_bcast, 4, _gqa_reduce))
+            return out
+        if "ckv" in ps:
+            out = {}
+            for name in ("ckv", "kr"):
+                out.update(_insert_leaf(
+                    ps, ss, name, slot, dtype, _mla_bcast, 3, _mla_reduce))
+            return out
+        raise ValueError(
+            "slot insertion supports attn/moe (gqa/MLA) caches only")
+
+    return {key: sub(pool[key], single[key]) for key in pool}
+
+
+# --------------------------------------------------------------------- #
+# Analytic byte accounting
+# --------------------------------------------------------------------- #
+def n_cache_layers(cfg) -> int:
+    """Number of attention caches in the tree (mirror of ``init_cache``)."""
+    if cfg.block_kind == "attn":
+        return cfg.n_layers
+    if cfg.block_kind == "moe":
+        return 1 + (cfg.n_layers - cfg.moe.first_dense)
+    raise ValueError(
+        f"serving byte accounting supports attn/moe, not {cfg.block_kind!r}")
+
+
+def token_elems(cfg) -> int:
+    """KV-cache elements appended per token, summed across cached layers."""
+    if cfg.mla:
+        per = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+    else:
+        per = 2 * cfg.n_kv_heads * cfg.head_dim
+    return n_cache_layers(cfg) * per
+
+
+def n_scale_elems(cfg) -> int:
+    """Delayed-scale scalars across the tree (k+v per-head, or 2 per-tensor)."""
+    per = 2 if cfg.mla else 2 * cfg.n_kv_heads
+    return n_cache_layers(cfg) * per
+
+
+def storage_width(cfg, storage_dtype=None) -> int:
+    return jnp.dtype(storage_dtype or cfg.policy.compute_dtype).itemsize
+
+
+def decode_step_kv_bytes(cfg, lengths: Sequence[int],
+                         storage_dtype: Optional[str] = None) -> int:
+    """Semantic KV traffic of one continuous-batching decode step.
+
+    Each active slot with ``l`` tokens already cached reads its merged
+    ``l + 1`` rows (history plus the freshly appended one) and writes 1
+    new row, all at the storage width; an FP8 cache adds the f32 scale
+    vectors' round-trip (read for dequant, write-back of the refreshed
+    delayed scale).  This prices what a serving memory system *moves* —
+    not the CPU emulation's whole-tensor requantize — and since the
+    datapath dequantizes to the compute dtype before the GEMMs, flops
+    are identical across storage dtypes: FP8 vs FP16 at equal lengths
+    is a pure byte ratio.
+    """
+    w = storage_width(cfg, storage_dtype)
+    rows = sum(int(l) + 2 for l in lengths)  # (l + 1) reads + 1 write
+    data = w * token_elems(cfg) * rows
+    if storage_dtype is None:
+        return data
+    return data + 2 * 4 * n_scale_elems(cfg)  # f32 scale read + write
+
+
+def cache_size_bytes(cfg, batch: int, max_len: int,
+                     storage_dtype: Optional[str] = None) -> int:
+    """Resident bytes of ``init_cache``'s output (data + scale-state leaves)."""
+    w = storage_width(cfg, storage_dtype)
+    data = w * token_elems(cfg) * batch * max_len
+    if storage_dtype is None:
+        return data
+    # scale + amax_history + overflow_count per quantized tensor (4 B each)
+    state = n_scale_elems(cfg) * (1 + attention.SCALE_HISTORY + 1) * 4
+    return data + state
+
+
+def scale_health(cache: CacheTree) -> Dict[str, Dict[str, float]]:
+    """Max applied scale + total overflow count per quantized cache leaf."""
+    out: Dict[str, Dict[str, float]] = {}
+    for key, sub in cache.items():
+        for name in ("k", "v", "ckv", "kr"):
+            sc = sub.get(f"{name}_scale") if isinstance(sub, dict) else None
+            if sc is None:
+                continue
+            out[f"{key}/{name}"] = {
+                "max_scale": float(jnp.max(sc["scale"])),
+                "overflow_total": int(jnp.sum(sc["overflow_count"])),
+            }
+    return out

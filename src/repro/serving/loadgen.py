@@ -1,0 +1,121 @@
+"""Poisson load generator + latency/throughput metrics for the scheduler.
+
+Offered load is requests per *tick* (one tick == one batched decode
+step); the seeded ``numpy.random.default_rng`` stream makes every sweep
+reproducible bit for bit.  Per-request metrics are time-to-first-token
+(ticks, includes queueing) and end-to-end tokens/tick; aggregation is
+p50/p99 over the request population.  :func:`bench_rows` converts a
+sweep into ``serve/*`` rows for ``benchmarks/run.py`` /
+``BENCH_engine.json``, using the measured wall seconds-per-tick to
+express throughput in tokens/s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+
+__all__ = [
+    "LoadConfig", "poisson_requests", "run_load", "bench_rows",
+    "merge_bench_json",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadConfig:
+    rate: float              # offered load: requests per tick
+    n_requests: int = 8
+    prompt_len: int = 8
+    gen_len: int = 8
+    seed: int = 0
+
+
+def poisson_requests(cfg, lc: LoadConfig) -> List[Request]:
+    """Seeded Poisson arrivals with uniform random prompts over the vocab."""
+    rng = np.random.default_rng(lc.seed)
+    t, reqs = 0.0, []
+    for i in range(lc.n_requests):
+        t += float(rng.exponential(1.0 / lc.rate))
+        prompt = rng.integers(
+            0, cfg.vocab_size, size=lc.prompt_len).astype(np.int32)
+        reqs.append(Request(rid=i, arrival=round(t, 6), prompt=prompt,
+                            max_new_tokens=lc.gen_len))
+    return reqs
+
+
+def run_load(params, cfg, scfg: SchedulerConfig, lc: LoadConfig,
+             rules=None) -> Dict[str, float]:
+    """One offered-load point: run the scheduler to drain, aggregate."""
+    sched = Scheduler(params, cfg, scfg, rules=rules)
+    sched.submit(poisson_requests(cfg, lc))
+    t0 = time.perf_counter()
+    results = sched.run()
+    wall = time.perf_counter() - t0
+    ttft = np.array([r.ttft for r in results])
+    tpt = np.array([r.tokens_per_tick for r in results])
+    s_per_tick = wall / max(sched.clock, 1e-9)
+    fill = np.array([h["batch_fill"] for h in sched.health])
+    return {
+        "rate": lc.rate,
+        "n_requests": lc.n_requests,
+        "total_tokens": int(sum(len(r.tokens) for r in results)),
+        "ticks": float(sched.clock),
+        "decode_steps": len(sched.health),
+        "wall_s": wall,
+        "s_per_tick": s_per_tick,
+        "p50_ttft_ticks": float(np.percentile(ttft, 50)),
+        "p99_ttft_ticks": float(np.percentile(ttft, 99)),
+        "p50_tokens_per_s": float(np.percentile(tpt, 50) / s_per_tick),
+        "p99_tokens_per_s": float(np.percentile(tpt, 99) / s_per_tick),
+        "mean_batch_fill": float(fill.mean()) if len(fill) else 0.0,
+    }
+
+
+def bench_rows(params, cfg, scfg: SchedulerConfig, arch: str,
+               rates: Sequence[float], lc: Optional[LoadConfig] = None,
+               rules=None) -> List[tuple]:
+    """Sweep offered loads into ``(name, us, derived)`` benchmark rows."""
+    rows = []
+    for rate in rates:
+        point = dataclasses.replace(lc or LoadConfig(rate=rate), rate=rate)
+        m = run_load(params, cfg, scfg, point, rules=rules)
+        tag = f"serve/{arch}/r{rate:g}"
+        rows.append((
+            f"{tag}/ttft",
+            m["p50_ttft_ticks"] * m["s_per_tick"] * 1e6,
+            f"p50={m['p50_ttft_ticks']:.2f}t p99={m['p99_ttft_ticks']:.2f}t",
+        ))
+        rows.append((
+            f"{tag}/tps",
+            1e6 / max(m["p50_tokens_per_s"], 1e-9),  # us per token, p50
+            f"p50={m['p50_tokens_per_s']:.1f}tok/s "
+            f"p99={m['p99_tokens_per_s']:.1f}tok/s "
+            f"fill={m['mean_batch_fill']:.2f}",
+        ))
+    return rows
+
+
+def merge_bench_json(path: str, rows: Sequence[tuple],
+                     module: str = "serve_loadgen") -> None:
+    """Merge rows into ``BENCH_engine.json`` (same-name rows replaced)."""
+    doc = {"benchmarks": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    names = {name for name, _, _ in rows}
+    doc["benchmarks"] = [r for r in doc.get("benchmarks", [])
+                         if r.get("name") not in names]
+    for name, us, derived in rows:
+        doc["benchmarks"].append({
+            "name": name, "us_per_call": round(float(us), 3),
+            "derived": derived, "module": module,
+        })
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)

@@ -1,0 +1,292 @@
+"""Continuous-batching request scheduler over the Engine decode path.
+
+State machine (docs/serving.md): requests enter a FIFO **admission
+queue** stamped with arrival ticks; a free decode **slot** triggers a
+single-request **prefill** (batch 1, the request's actual prompt length)
+whose cache is inserted into the pooled decode cache at that slot; all
+occupied slots then advance together through batched **decode** steps
+with per-slot positions and per-slot kv lengths — the ragged
+``grouped_matmul``/``valid_rows`` path bills exactly the valid rows, so
+a half-empty batch is visibly half-billed.  A sequence that has emitted
+its budget **drains**: one final step absorbs its last token's KV (the
+cache-consistency invariant ``generate`` relies on), then the slot frees
+for the next queued request mid-flight.
+
+Time is a virtual clock: one tick per batched decode step,
+``prefill_ticks`` per prefill.  Everything host-side is deterministic —
+FIFO by ``(arrival, rid)``, lowest free slot wins, greedy argmax decode —
+so a seeded arrival trace pins the full admit/prefill/finish event log.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.models import transformer
+from repro.runtime import sharding
+from repro.serving import kv_cache
+
+__all__ = [
+    "Request", "SchedulerConfig", "RequestResult", "Scheduler",
+    "instrumented_decode_events",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    arrival: float          # ticks
+    prompt: np.ndarray      # (P,) int32 token ids
+    max_new_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    n_slots: int = 4
+    max_len: int = 64
+    storage_dtype: Optional[str] = None  # e.g. "float8_e4m3fn" (FP8 KV cache)
+    prefill_ticks: float = 1.0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    arrival: float
+    first_token_tick: Optional[float] = None
+    finish_tick: Optional[float] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    final_logits: Optional[np.ndarray] = None  # P(next token | full sequence)
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_tick - self.arrival
+
+    @property
+    def tokens_per_tick(self) -> float:
+        return len(self.tokens) / max(self.finish_tick - self.arrival, 1e-9)
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    pos: int        # next cache write position == rows currently valid
+    emitted: int    # tokens emitted so far
+    fed: int        # emitted tokens whose KV has been absorbed
+    max_new: int
+    last_token: int
+
+
+class Scheduler:
+    """FIFO admission → per-request prefill → pooled continuous decode."""
+
+    def __init__(self, params, cfg, scfg: SchedulerConfig,
+                 rules: Optional[sharding.Rules] = None):
+        if cfg.block_kind not in ("attn", "moe"):
+            raise ValueError(
+                f"the serving scheduler drives attn/moe decode caches, "
+                f"not {cfg.block_kind!r}")
+        if scfg.n_slots < 1:
+            raise ValueError("need at least one decode slot")
+        self.params, self.cfg, self.scfg = params, cfg, scfg
+        self.rules = rules
+        self.clock = 0.0
+        self.compute_dtype = cfg.policy.compute_dtype
+        self.cache = transformer.init_cache(
+            cfg, scfg.n_slots, scfg.max_len, dtype=self.compute_dtype,
+            storage_dtype=scfg.storage_dtype)
+        self.slots: List[Optional[_Slot]] = [None] * scfg.n_slots
+        self.pending: List[Request] = []       # submitted, arrival in future
+        self.queue: deque = deque()            # admitted, waiting for a slot
+        self.trace: List[Tuple] = []           # (event, tick, rid, ...)
+        self.health: List[Dict[str, float]] = []
+        self.results: Dict[int, RequestResult] = {}
+        self._prefills: Dict[int, Any] = {}
+
+        def _decode(params_, cache_, tokens_, pos_, sizes_):
+            with sharding.use_rules(rules), engine.op_scope("serve_decode"):
+                return transformer.serve_step(
+                    params_, cfg, tokens_, cache_, pos_,
+                    kv_group_sizes=sizes_)
+
+        def _insert(pool_, single_, slot_):
+            with engine.op_scope("serve_admit"):
+                return kv_cache.insert_slot(
+                    pool_, single_, slot_, self.compute_dtype)
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._insert = jax.jit(_insert, donate_argnums=(0,))
+
+    # ----------------------------------------------------------------- #
+    # Admission
+    # ----------------------------------------------------------------- #
+    def submit(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            if r.max_new_tokens < 1:
+                raise ValueError(f"request {r.rid}: max_new_tokens must be >= 1")
+            if len(r.prompt) + r.max_new_tokens > self.scfg.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.prompt)} + gen "
+                    f"{r.max_new_tokens} exceeds max_len {self.scfg.max_len}")
+            self.results[r.rid] = RequestResult(rid=r.rid, arrival=r.arrival)
+        self.pending.extend(requests)
+        self.pending.sort(key=lambda r: (r.arrival, r.rid))
+
+    def _admit(self) -> None:
+        while self.pending and self.pending[0].arrival <= self.clock:
+            r = self.pending.pop(0)
+            self.queue.append(r)
+            self.trace.append(("admit", self.clock, r.rid))
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    # ----------------------------------------------------------------- #
+    # Prefill (disaggregated: batch 1, the request's real prompt length)
+    # ----------------------------------------------------------------- #
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefills:
+            cfg, scfg, rules = self.cfg, self.scfg, self.rules
+
+            def pre(params_, prompt_):
+                with sharding.use_rules(rules), engine.op_scope("serve_prefill"):
+                    return transformer.prefill(
+                        params_, cfg, {"inputs": prompt_}, scfg.max_len,
+                        storage_dtype=scfg.storage_dtype)
+
+            self._prefills[plen] = jax.jit(pre)
+        return self._prefills[plen]
+
+    def _start(self) -> None:
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            r = self.queue.popleft()
+            prompt = jnp.asarray(np.asarray(r.prompt, np.int32))[None]
+            logits, single = self._prefill_fn(prompt.shape[1])(
+                self.params, prompt)
+            self.cache = self._insert(self.cache, single, jnp.int32(slot))
+            tok = int(jnp.argmax(logits[0]))
+            self.clock += self.scfg.prefill_ticks
+            res = self.results[r.rid]
+            res.first_token_tick = self.clock
+            res.tokens.append(tok)
+            self.slots[slot] = _Slot(
+                rid=r.rid, pos=prompt.shape[1], emitted=1, fed=0,
+                max_new=r.max_new_tokens, last_token=tok)
+            self.trace.append(
+                ("prefill", self.clock, r.rid, slot, prompt.shape[1]))
+            self._admit()  # the clock moved; later arrivals may be due now
+
+    # ----------------------------------------------------------------- #
+    # Decode (the whole slot pool, ragged over per-slot kv lengths)
+    # ----------------------------------------------------------------- #
+    def _active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def _decode_once(self) -> None:
+        n = self.scfg.n_slots
+        toks = np.zeros((n, 1), np.int32)
+        pos = np.zeros((n,), np.int32)
+        sizes = np.zeros((n,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                # parked: rewrites a row its next occupant overwrites anyway
+                pos[i] = self.scfg.max_len - 1
+                continue
+            toks[i, 0] = s.last_token
+            pos[i] = s.pos
+            sizes[i] = s.pos + 1  # valid kv rows after this step's append
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(sizes))
+        self.clock += 1.0
+        logits = np.asarray(logits)
+        active = 0
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            active += 1
+            s.fed += 1
+            s.pos += 1
+            res = self.results[s.rid]
+            if s.emitted < s.max_new:
+                tok = int(np.argmax(logits[i]))
+                s.emitted += 1
+                s.last_token = tok
+                res.tokens.append(tok)
+            if s.emitted >= s.max_new and s.fed >= s.emitted:
+                # the last emitted token's KV was absorbed this step: the
+                # cache is consistent with the emitted sequence at eviction
+                res.finish_tick = self.clock
+                res.final_logits = logits[i]
+                self.trace.append(("finish", self.clock, s.rid, i))
+                self.slots[i] = None
+        self.health.append({
+            "tick": self.clock,
+            "queue_depth": len(self.queue),
+            "pending": len(self.pending),
+            "active_slots": active,
+            "batch_fill": active / n,
+        })
+
+    # ----------------------------------------------------------------- #
+    # Drive
+    # ----------------------------------------------------------------- #
+    def step(self) -> bool:
+        """Advance one scheduler event; False once fully drained."""
+        self._admit()
+        self._start()
+        if self._active():
+            self._decode_once()
+            return True
+        if self.pending:  # idle until the next arrival
+            self.clock = max(self.clock, self.pending[0].arrival)
+            return True
+        return False
+
+    def run(self) -> List[RequestResult]:
+        while self.step():
+            pass
+        return [self.results[rid] for rid in sorted(self.results)]
+
+
+# --------------------------------------------------------------------- #
+# Instrumented (abstract) decode trace: exact ragged billing
+# --------------------------------------------------------------------- #
+def instrumented_decode_events(params, cfg, scfg: SchedulerConfig,
+                               kv_lengths: Sequence[int]):
+    """Trace one continuous-batching decode step abstractly and return the
+    Engine events, tagged under the ``serve_decode`` op scope.
+
+    ``kv_lengths`` are the per-slot valid kv rows *including* the token
+    appended by the step (what the scheduler passes as group sizes; 0 for
+    a parked slot).  Passing them concrete gives the grouped score GEMMs
+    static ``valid_rows`` billing — the runtime path traces the same ops
+    with traced sizes and falls back to dense billing.
+    """
+    n = scfg.n_slots
+    sizes = np.asarray(kv_lengths, np.int32)
+    if sizes.shape != (n,):
+        raise ValueError(f"need {n} per-slot lengths, got {sizes.shape}")
+    cabs = jax.eval_shape(lambda: transformer.init_cache(
+        cfg, n, scfg.max_len, dtype=cfg.policy.compute_dtype,
+        storage_dtype=scfg.storage_dtype))
+    tok = jax.ShapeDtypeStruct((n, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((n,), jnp.int32)
+    with engine.instrument() as events, engine.op_scope("serve_decode"):
+        jax.eval_shape(
+            lambda p_, c_, t_, q_: transformer.serve_step(
+                p_, cfg, t_, c_, q_, kv_group_sizes=sizes),
+            params, cabs, tok, pos)
+    return events

@@ -1,0 +1,108 @@
+"""CI serve-gates: the serving subsystem's perf contract.
+
+* loadgen produces p50/p99 TTFT + tokens/s rows (interpret backend);
+* decode GEMM events carry the serve op tags and exact ragged
+  valid_rows billing;
+* per-decode-step KV bytes match benchmarks/baselines/serve_bytes.json,
+  with the FP8 cache strictly below FP16 at identical engine flops
+  (same style as the PR-5 train-bytes gate).
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import engine
+from repro.models import transformer
+from repro.serving import (LoadConfig, SchedulerConfig, bench_rows,
+                           cache_size_bytes, decode_step_kv_bytes,
+                           instrumented_decode_events)
+
+BASELINE = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "benchmarks", "baselines", "serve_bytes.json")
+FP8 = "float8_e4m3fn"
+SLOTS, MAX_LEN = 4, 32
+
+
+def _baseline():
+    with open(BASELINE) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "deepseek-moe-16b"])
+def test_kv_bytes_pinned_fp8_below_fp16_same_flops(arch):
+    base = _baseline()
+    lengths = base["lengths"]
+    cfg = configs.get_reduced(arch)
+    fp16 = decode_step_kv_bytes(cfg, lengths)
+    fp8 = decode_step_kv_bytes(cfg, lengths, FP8)
+    assert fp16 == base[arch]["fp16_bytes"]
+    assert fp8 == base[arch]["fp8_bytes"]
+    assert fp8 < fp16  # strictly below, at identical flops (next assert)
+    params = transformer.abstract_params(cfg)
+    sizes = list(lengths) + [0] * (SLOTS - len(lengths))
+    flops = set()
+    for sd in (None, FP8):
+        scfg = SchedulerConfig(n_slots=SLOTS, max_len=MAX_LEN,
+                               storage_dtype=sd)
+        ev = instrumented_decode_events(params, cfg, scfg, sizes)
+        flops.add(int(engine.total_flops(ev)))
+    assert flops == {base[arch]["engine_flops"]}
+
+
+def test_fp8_cache_resident_bytes_below_fp16():
+    cfg = configs.get_reduced("yi-9b")
+    assert (cache_size_bytes(cfg, SLOTS, MAX_LEN, FP8)
+            < cache_size_bytes(cfg, SLOTS, MAX_LEN))
+
+
+def test_decode_events_serve_tagged_and_ragged_billing():
+    """Every GEMM of the scheduler's decode step is tagged serve_decode/*
+    and the grouped score GEMMs bill exactly sum(sizes) * Hkv rows."""
+    cfg = configs.get_reduced("yi-9b")
+    params = transformer.abstract_params(cfg)
+    sizes = [5, 10, 0, 18]
+    scfg = SchedulerConfig(n_slots=SLOTS, max_len=MAX_LEN, storage_dtype=FP8)
+    ev = instrumented_decode_events(params, cfg, scfg, sizes)
+    assert ev, "no engine events traced"
+    assert all(e.spec.op.startswith("serve_decode/") for e in ev)
+    grouped = [e for e in ev if e.spec.op.endswith("grouped_matmul")]
+    assert grouped, "decode did not dispatch the ragged grouped path"
+    want = sum(sizes) * cfg.n_kv_heads
+    assert all(e.spec.valid_rows == want for e in grouped)
+
+
+def test_decode_gemms_under_mixed_fp8_policy():
+    """FP8 end to end (tentpole part 3): with cfg under MIXED_FP8_E4M3 the
+    decode GEMMs carry E4M3 operand dtypes on top of the FP8 KV cache."""
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_reduced("yi-9b"),
+                              policy_name="mixed_fp8_e4m3")
+    params = transformer.abstract_params(cfg)
+    scfg = SchedulerConfig(n_slots=2, max_len=16, storage_dtype=FP8)
+    ev = instrumented_decode_events(params, cfg, scfg, [6, 0])
+    assert ev
+    assert all(e.spec.op.startswith("serve_decode/") for e in ev)
+    assert all(e.spec.x_dtype == FP8 and e.spec.w_dtype == FP8 for e in ev)
+
+
+def test_loadgen_emits_p50_p99_rows_interpret_backend():
+    """The acceptance sweep on the interpret (Pallas interpreter) backend:
+    ttft + tps rows per offered load, each carrying p50= and p99=."""
+    cfg = configs.get_reduced("yi-9b")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = SchedulerConfig(n_slots=2, max_len=8, storage_dtype=FP8)
+    lc = LoadConfig(rate=0.5, n_requests=3, prompt_len=4, gen_len=3, seed=0)
+    with engine.use_backend("interpret"):
+        rows = bench_rows(params, cfg, scfg, "yi-9b", [0.5], lc)
+    names = [name for name, _, _ in rows]
+    assert any(n.endswith("/ttft") for n in names)
+    assert any(n.endswith("/tps") for n in names)
+    for name, us, derived in rows:
+        assert name.startswith("serve/yi-9b/")
+        assert np.isfinite(us) and us > 0
+        assert "p50=" in derived and "p99=" in derived
