@@ -1,0 +1,75 @@
+"""Fault-tolerance benchmark rows (beyond-paper §Fault tolerance).
+
+Two families of ``ft/*`` rows land in BENCH_engine.json:
+
+* ``ft/collective_bytes_*`` — analytic gradient-all-reduce wire bytes for
+  one step of the reduced qwen3-1.7b under each compression kind (priced
+  like GEMM bytes: what a ring all-reduce moves, not what the CPU
+  simulation materializes).  Pinned exactly against
+  ``benchmarks/baselines/collective_bytes.json`` by the ft-gates CI job,
+  which also requires the strict ordering fp8 < fp16 < fp32.
+* ``ft/goodput_injected`` — an in-process crash/resume scenario (injected
+  failure at step 6 of 12, checkpoint every 4): the resumed incarnation's
+  goodput breakdown (useful/wall, recomputed steps, time lost to the
+  restart).  Wall-clock based, so CI only floors it
+  (``goodput_floor_injected`` in the same baselines file) rather than
+  pinning it.
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import transformer
+from repro.optim import Compressor
+from repro.checkpoint import CheckpointManager
+from repro.runtime.fault_tolerance import FailureInjector, TrainLoop
+
+WIRE_KINDS = ("none", "fp16", "int8", "fp8_e4m3", "fp8_e5m2")
+ARCH = "qwen3-1.7b"
+
+
+def wire_label(kind: str) -> str:
+    return "fp32" if kind == "none" else kind
+
+
+def _wire_rows():
+    params = transformer.abstract_params(configs.get_reduced(ARCH))
+    rows = []
+    for kind in WIRE_KINDS:
+        b = Compressor(kind).wire_bytes(params)
+        rows.append((f"ft/collective_bytes_{wire_label(kind)}", 0.0, str(b)))
+    return rows
+
+
+def _goodput_row():
+    @jax.jit
+    def step(state, batch):
+        w = state["w"] - 0.1 * (state["w"] - batch)
+        return {"w": w}, {"loss": jnp.sum((w - batch) ** 2)}
+
+    def batches(i):
+        return jnp.full((64,), 1.0)
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = CheckpointManager(d, keep=2)
+        init = {"w": jnp.zeros(64)}
+        crash = TrainLoop(step, ckpt, save_every=4,
+                          injector=FailureInjector(fail_at_step=6))
+        try:
+            crash.run(init, batches, 12, log=lambda s: None)
+        except RuntimeError:
+            pass  # the injected failure
+        out = TrainLoop(step, ckpt, save_every=4).run(
+            init, batches, 12, log=lambda s: None)
+    g = out["goodput"]
+    derived = (f"goodput={g['goodput']:.3f} restarts={g['restarts']} "
+               f"recomputed={g['recomputed_steps']} "
+               f"lost={g['time_lost_to_restart']:.3f}s")
+    return [("ft/goodput_injected", g["wall_time"] * 1e6, derived)]
+
+
+def run():
+    return _wire_rows() + _goodput_row()

@@ -24,7 +24,7 @@ from typing import List, Optional
 
 from benchmarks import (engine_instrument, fig3_energy_throughput,
                         fig4a_hw_vs_sw, fig4b_area_sweep, fig4cd_autoencoder,
-                        roofline_report, serve_loadgen, table1_soa)
+                        ft_goodput, roofline_report, serve_loadgen, table1_soa)
 from benchmarks.common import emit
 from repro.core import autotune, engine
 from repro.roofline import analysis
@@ -38,6 +38,7 @@ MODULES = [
     ("engine_instrument", engine_instrument),
     ("roofline_report", roofline_report),
     ("serve_loadgen", serve_loadgen),
+    ("ft_goodput", ft_goodput),
 ]
 
 DEFAULT_JSON = "BENCH_engine.json"

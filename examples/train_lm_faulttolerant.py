@@ -45,9 +45,15 @@ def main():
         handle_sigterm=True,
     )
     out = loop.run(state, ds.batch, args.steps)  # step-indexed: exact replay
+    g = out["goodput"]
     print(f"\ndone at step {out['last_step']}: "
           f"loss {out['history'][-1]['loss']:.4f}, "
           f"stragglers flagged: {out['straggler_steps']}")
+    print(f"goodput {g['goodput']:.3f} "
+          f"(useful {g['useful_time']:.1f}s / wall {g['wall_time']:.1f}s, "
+          f"{g['restarts']} restart(s), "
+          f"{g['recomputed_steps']} recomputed step(s), "
+          f"{g['time_lost_to_restart']:.1f}s lost to restarts)")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
-"""Atomic / async / elastic checkpointing."""
+"""Atomic / async / elastic / checksum-verified checkpointing."""
 
-from repro.checkpoint.checkpoint import CheckpointManager
+from repro.checkpoint.checkpoint import CheckpointCorruptError, CheckpointManager
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointCorruptError"]

@@ -1,15 +1,25 @@
-"""Atomic, async, elastic checkpointing.
+"""Atomic, async, elastic, *verified* checkpointing.
 
 Layout (one directory per step):
 
     <root>/step_000123.tmp/...   (while writing)
     <root>/step_000123/
-        manifest.json            tree structure, shapes, dtypes, metadata
+        manifest.json            tree structure, shapes, dtypes, per-leaf
+                                 crc32 checksums, metadata
         arrays.npz               flattened leaves (host-local shard or full)
 
 Guarantees:
   * **atomic** — written to ``.tmp`` then ``os.replace``d, so a crash never
     leaves a half checkpoint visible; ``latest()`` only sees complete dirs;
+  * **verified** — the manifest carries a crc32 per leaf, written from the
+    exact bytes that went into ``arrays.npz``; ``restore`` recomputes them
+    on read, so silent corruption (a truncated file that still unzips, a
+    flipped block) surfaces as :class:`CheckpointCorruptError` instead of
+    NaNs ten thousand steps later;
+  * **self-healing** — ``restore_latest`` walks checkpoints newest-first
+    and *skips past* corrupt or truncated ones to the newest valid step
+    (with a logged warning), so one bad write costs ``save_every`` steps,
+    not the run;
   * **async**  — ``save_async`` snapshots to host RAM synchronously (so
     training can mutate buffers) and writes on a background thread;
   * **elastic** — arrays are stored with their *logical* tree paths, not
@@ -25,20 +35,35 @@ import json
 import os
 import re
 import shutil
+import sys
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+import zipfile
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointCorruptError"]
 
 _STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint directory exists but its payload cannot be trusted:
+    truncated/undecodable arrays, a missing leaf, or a checksum mismatch.
+    ``restore_latest`` treats this (and only this) as "fall back to the
+    previous step"; structural mismatches against the restore target stay
+    hard ``ValueError``s — they mean the *caller* changed, not the disk."""
 
 
 def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
     leaves, treedef = jax.tree.flatten(tree)
     return {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}, treedef
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 class CheckpointManager:
@@ -67,7 +92,7 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- #
     def save(self, step: int, tree: Any, metadata: Optional[Dict] = None) -> str:
-        """Synchronous atomic save."""
+        """Synchronous atomic save (with per-leaf checksums)."""
         arrays, treedef = _flatten(tree)
         final = self._dir(step)
         tmp = final + ".tmp"
@@ -81,6 +106,7 @@ class CheckpointManager:
             "n_leaves": len(arrays),
             "shapes": {k: list(v.shape) for k, v in arrays.items()},
             "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "checksums": {k: _crc(v) for k, v in arrays.items()},
             "metadata": metadata or {},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -114,13 +140,40 @@ class CheckpointManager:
             raise err
 
     # ------------------------------------------------------------- #
+    def _load_verified(self, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Read + checksum-verify one checkpoint's payload.
+
+        Raises :class:`CheckpointCorruptError` for anything untrustworthy
+        on disk (unreadable manifest, truncated/undecodable npz, missing
+        leaves, checksum mismatch)."""
+        d = self._dir(step)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            arrays: Dict[str, np.ndarray] = {}
+            with np.load(os.path.join(d, "arrays.npz")) as data:
+                for i in range(manifest["n_leaves"]):
+                    arrays[f"leaf_{i}"] = data[f"leaf_{i}"]
+        except (OSError, EOFError, KeyError, ValueError,
+                zipfile.BadZipFile, json.JSONDecodeError) as e:
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} at {d} is unreadable "
+                f"({type(e).__name__}: {e})") from e
+        checksums = manifest.get("checksums")  # absent in pre-PR-7 ckpts
+        if checksums:
+            for k, arr in arrays.items():
+                want = checksums.get(k)
+                got = _crc(arr)
+                if want is not None and got != want:
+                    raise CheckpointCorruptError(
+                        f"checkpoint step {step}: checksum mismatch on {k} "
+                        f"(manifest {want}, disk {got})")
+        return arrays, manifest
+
     def restore(self, step: int, like: Any) -> Tuple[Any, Dict]:
         """Restore into the structure of ``like`` (any mesh/sharding — the
-        caller re-shards with device_put)."""
-        d = self._dir(step)
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        data = np.load(os.path.join(d, "arrays.npz"))
+        caller re-shards with device_put).  Payload is checksum-verified."""
+        arrays, manifest = self._load_verified(step)
         leaves, treedef = jax.tree.flatten(like)
         if len(leaves) != manifest["n_leaves"]:
             raise ValueError(
@@ -128,19 +181,31 @@ class CheckpointManager:
                 f"restore target has {len(leaves)}")
         out = []
         for i, leaf in enumerate(leaves):
-            arr = data[f"leaf_{i}"]
+            arr = arrays[f"leaf_{i}"]
             want = tuple(getattr(leaf, "shape", arr.shape))
             if tuple(arr.shape) != want:
                 raise ValueError(f"leaf_{i}: checkpoint {arr.shape} vs target {want}")
             out.append(arr)
         return jax.tree.unflatten(treedef, out), manifest["metadata"]
 
-    def restore_latest(self, like: Any) -> Optional[Tuple[int, Any, Dict]]:
-        step = self.latest()
-        if step is None:
-            return None
-        tree, meta = self.restore(step, like)
-        return step, tree, meta
+    def restore_latest(
+        self, like: Any, *, log: Optional[Callable[[str], None]] = None,
+    ) -> Optional[Tuple[int, Any, Dict]]:
+        """Restore the newest *valid* checkpoint, skipping past corrupt or
+        truncated ones (each skip logs a warning).  Returns None when no
+        valid checkpoint exists.  Structural mismatches (wrong leaf count
+        or shapes vs ``like``) still raise — the target is wrong, not the
+        disk."""
+        emit = log if log is not None else (
+            lambda msg: print(msg, file=sys.stderr))
+        for step in reversed(self.all_steps()):
+            try:
+                tree, meta = self.restore(step, like)
+                return step, tree, meta
+            except CheckpointCorruptError as e:
+                emit(f"[ckpt] WARNING: skipping corrupt checkpoint "
+                     f"step {step}: {e}")
+        return None
 
     # ------------------------------------------------------------- #
     def _gc(self) -> None:

@@ -22,6 +22,17 @@ printed with the fwd/bwd split — the Engine ops carry a custom VJP, so the
 backward GEMMs (``matmul_dx`` / ``matmul_dw``) are counted too (the CI
 train gate pins these totals against
 ``benchmarks/baselines/train_flops.json``).
+
+``--compress {none,fp16,int8,fp8,fp8_e4m3,fp8_e5m2}`` (optionally with
+``--dp-procs N``) switches to the data-parallel step with a compressed
+gradient wire: each shard's gradients cross the all-reduce at the wire
+width with fp32 error feedback kept locally (FP8 wires use
+``Fp8ScaleState`` delayed scaling).  ``--instrument`` then also prints the
+per-step collective wire bytes vs the fp32 wire, and — when a
+``--ckpt-dir`` fault-tolerant loop ran — the goodput breakdown
+(useful/wall, time lost to restarts, recomputed steps; the ft-gates CI job
+floor-gates the injected-failure scenario).  Simulate N processes on one
+machine with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
 from __future__ import annotations
@@ -265,6 +276,67 @@ def make_sharded_train_step(
 # --------------------------------------------------------------------- #
 # CLI end-to-end driver
 # --------------------------------------------------------------------- #
+def _print_goodput(out):
+    g = out.get("goodput")
+    if not g:
+        return
+    print(f"[ft] goodput={g['goodput']:.3f} "
+          f"useful={g['useful_time']:.2f}s wall={g['wall_time']:.2f}s "
+          f"lost_to_restart={g['time_lost_to_restart']:.2f}s "
+          f"recomputed_steps={g['recomputed_steps']} "
+          f"restarts={g['restarts']}")
+
+
+def _compressed_dp_main(args, cfg):
+    """Data-parallel training with a compressed gradient wire (and the
+    fault-tolerant loop when --ckpt-dir is set)."""
+    from repro.optim import Compressor
+    from repro.runtime import compat
+
+    ndev = args.dp_procs or len(jax.devices())
+    if len(jax.devices()) < ndev:
+        raise SystemExit(
+            f"--dp-procs {ndev} but jax sees {len(jax.devices())} devices; "
+            "simulate with XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={ndev}")
+    if args.batch % ndev:
+        raise SystemExit(f"--batch {args.batch} must divide by the "
+                         f"{ndev}-way data mesh")
+    mesh = compat.make_mesh((ndev,), ("data",))
+    comp = Compressor(args.compress)
+    opt = AdamW(lr=args.lr, warmup_steps=10)
+    step, init_fn = build_compressed_dp_train_step(cfg, opt, mesh, comp)
+    state = init_fn(jax.random.PRNGKey(args.seed))
+    ds = SyntheticLM(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed,
+        embed_dim=cfg.d_model if cfg.input_mode == "embeddings" else 0)
+
+    if args.instrument:
+        wire = comp.wire_bytes(state[0].params)
+        full = Compressor("none").wire_bytes(state[0].params)
+        print(f"[ft] gradient wire: kind={comp.kind} "
+              f"bytes/step={wire} fp32_bytes/step={full} "
+              f"ratio={full / max(wire, 1):.2f}x")
+
+    jstep = jax.jit(step)
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+        loop = TrainLoop(jstep, ckpt, save_every=args.save_every)
+        out = loop.run(state, ds.batch, args.steps)
+        print(f"final loss: {out['history'][-1]['loss']:.4f} "
+              f"(stragglers: {out['straggler_steps']})")
+        if args.instrument:
+            _print_goodput(out)
+    else:
+        metrics = None
+        for i in range(args.steps):
+            state, metrics = jstep(state, ds.batch(i))
+            if i % 10 == 0:
+                print(f"[{i}] loss={float(metrics['loss']):.4f}")
+        print(f"final loss: {float(metrics['loss']):.4f}")
+
+
 def _print_instrument_summary(events):
     """Per-op engine summary + the fwd/bwd GEMM flop split of one step."""
     from repro.roofline import analysis
@@ -342,7 +414,18 @@ def main(argv=None):
                         "train with FP8 storage + per-tensor scales)")
     p.add_argument("--instrument", action="store_true",
                    help="trace one step under engine.instrument() and print "
-                        "the per-op GEMM flop/byte summary before training")
+                        "the per-op GEMM flop/byte summary before training "
+                        "(plus wire bytes / goodput on the DP paths)")
+    p.add_argument("--compress", default="none",
+                   choices=("none", "fp16", "int8", "fp8", "fp8_e4m3",
+                            "fp8_e5m2"),
+                   help="gradient all-reduce wire for data-parallel "
+                        "training (fp8* = E4M3/E5M2 with delayed scaling "
+                        "+ error feedback)")
+    p.add_argument("--dp-procs", type=int, default=0,
+                   help="data-parallel width; 0 = all visible devices "
+                        "(simulate N on one host with XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=N)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -350,6 +433,8 @@ def main(argv=None):
         return _ae_main(args)
 
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
+    if args.compress != "none" or args.dp_procs:
+        return _compressed_dp_main(args, cfg)
     if args.fp16_scale:
         import dataclasses
         cfg = dataclasses.replace(cfg, policy_name="tpu_fp16")
@@ -380,6 +465,8 @@ def main(argv=None):
         out = loop.run(state, ds.batch, args.steps)
         print(f"final loss: {out['history'][-1]['loss']:.4f} "
               f"(stragglers: {out['straggler_steps']})")
+        if args.instrument:
+            _print_goodput(out)
     else:
         for i in range(args.steps):
             state, metrics = step(state, next(batches))

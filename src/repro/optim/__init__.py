@@ -1,17 +1,22 @@
 """Optimization substrate: AdamW/SGD, FP16 loss scaling, FP8 per-tensor
-delayed scaling, grad compression."""
+delayed scaling, compressed gradient collectives (fp16/int8/fp8 wires)."""
 
-from repro.optim.compression import Compressor
+from repro.optim.compression import (Compressor, Fp8LeafState,
+                                     collective_wire_bytes,
+                                     compressed_mean_allreduce)
 from repro.optim.optimizer import SGD, AdamW, OptState, clip_by_global_norm, global_norm
 from repro.optim.scale import (Fp8ScaleState, LossScaleState, adjust,
-                               fp8_scale_of, init_fp8_scale, init_scale,
-                               observe_amax, scale_loss, unscale_and_check,
-                               update_fp8_scale)
+                               fp8_scale_of, init_fp8_scale,
+                               init_fp8_scale_tree, init_scale, observe_amax,
+                               observe_amax_tree, scale_loss,
+                               unscale_and_check, update_fp8_scale)
 
 __all__ = [
     "AdamW", "SGD", "OptState", "clip_by_global_norm", "global_norm",
-    "Compressor", "LossScaleState", "adjust", "init_scale", "scale_loss",
+    "Compressor", "Fp8LeafState", "collective_wire_bytes",
+    "compressed_mean_allreduce",
+    "LossScaleState", "adjust", "init_scale", "scale_loss",
     "unscale_and_check",
     "Fp8ScaleState", "init_fp8_scale", "observe_amax", "fp8_scale_of",
-    "update_fp8_scale",
+    "update_fp8_scale", "init_fp8_scale_tree", "observe_amax_tree",
 ]

@@ -32,7 +32,7 @@ __all__ = [
     "LossScaleState", "init_scale", "scale_loss", "unscale_and_check",
     "adjust",
     "Fp8ScaleState", "init_fp8_scale", "observe_amax", "fp8_scale_of",
-    "update_fp8_scale",
+    "update_fp8_scale", "init_fp8_scale_tree", "observe_amax_tree",
 ]
 
 
@@ -143,3 +143,23 @@ def update_fp8_scale(state: Fp8ScaleState, amax: jax.Array,
         overflow_count=state.overflow_count
         + jnp.where(bad, 1, 0).astype(jnp.int32),
     )
+
+
+# --------------------------------------------------------------------- #
+# Tree-level delayed scaling (one Fp8ScaleState per gradient leaf — the
+# FP8 gradient wire in optim/compression.py hangs these off its
+# error-feedback state; any per-tensor-scaled training loop can reuse them)
+# --------------------------------------------------------------------- #
+def init_fp8_scale_tree(tree: Any, history_len: int = 16) -> Any:
+    """A pytree shaped like ``tree`` with one fresh :class:`Fp8ScaleState`
+    per leaf (per-tensor delayed scaling over a whole parameter tree)."""
+    return jax.tree.map(lambda _: init_fp8_scale(history_len), tree)
+
+
+def observe_amax_tree(states: Any, tree: Any) -> Any:
+    """Fold each leaf's amax into its matching scale state."""
+    flat_t, tdef = jax.tree.flatten(tree)
+    flat_s = jax.tree.flatten(
+        states, is_leaf=lambda x: isinstance(x, Fp8ScaleState))[0]
+    return jax.tree.unflatten(
+        tdef, [observe_amax(s, t) for s, t in zip(flat_s, flat_t)])

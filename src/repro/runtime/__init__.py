@@ -1,1 +1,9 @@
-"""Distributed runtime: sharding rules, fault tolerance, elasticity."""
+"""Distributed runtime: sharding rules, fault tolerance, elasticity.
+
+``fault_tolerance`` hardens one process's step loop (auto-resume from
+checksum-verified checkpoints, fault injection, straggler watchdog,
+goodput accounting that survives process death); ``elastic`` is the
+multi-process data-parallel worker that dies and comes back — including
+onto a different mesh shape.  See docs/fault_tolerance.md for the failure
+model and the bit-identical-resume contract.
+"""

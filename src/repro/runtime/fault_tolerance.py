@@ -1,15 +1,28 @@
-"""Fault-tolerant training loop: auto-resume, straggler watchdog, elasticity.
+"""Fault-tolerant training loop: auto-resume, fault injection, goodput.
 
 Designed for thousands of nodes, demonstrated on one:
 
   * **checkpoint/restart** — the loop always starts by probing the
-    CheckpointManager; any crash (or SIGTERM from a preemption) resumes from
-    the last complete step.  ``FailureInjector`` lets tests kill the loop at
-    an exact step and assert bit-identical continuation.
+    CheckpointManager; any crash (or SIGTERM from a preemption) resumes
+    from the newest *valid* checkpoint (corrupt/truncated ones are skipped
+    with a warning — checkpoint/checkpoint.py verifies per-leaf crc32s).
+    ``FailureInjector`` lets tests kill the loop at an exact step — by
+    exception, by hard process death (``os._exit``, the host-dies-mid-step
+    case), by dying *inside* a checkpoint write (the torn-write case the
+    atomic rename protects against), or by a SIGTERM delivered during the
+    save — and assert bit-identical continuation.
   * **straggler watchdog** — per-step wall times feed an EMA; steps slower
     than ``threshold x EMA`` increment a straggler counter and are logged.
     On real pods this signal feeds the scheduler's replace-node decision;
     here it is surfaced in metrics (tested with an artificial delay).
+  * **goodput accounting** — a :class:`GoodputMeter` persists a per-step
+    heartbeat next to the checkpoints, so a *resumed* run knows how far the
+    dead one got: ``goodput = useful_time / wall_clock`` where useful time
+    is only the step time that survived into a checkpoint or the final
+    state, with explicit ``time_lost_to_restart`` and ``recomputed_steps``
+    breakdowns.  Emitted as ``ft/*`` rows in BENCH_engine.json and printed
+    by ``launch/train.py --instrument``; the injected-failure scenario's
+    goodput is floor-gated in CI (ft-gates).
   * **elastic re-sharding** — checkpoints are logical (see checkpoint/), so
     ``reshard`` places a restored tree onto any new mesh: scale from N to M
     hosts between runs without conversion tools.
@@ -18,29 +31,85 @@ Designed for thousands of nodes, demonstrated on one:
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import signal
 import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
 
-__all__ = ["FailureInjector", "StragglerWatchdog", "TrainLoop", "reshard"]
+__all__ = [
+    "FailureInjector", "StragglerWatchdog", "GoodputMeter", "TrainLoop",
+    "reshard",
+]
 
 
 class FailureInjector:
-    """Deterministic fault injection for tests: raises at a given step."""
+    """Deterministic fault injection for tests — one-shot per instance.
 
-    def __init__(self, fail_at_step: Optional[int] = None):
+    Modes (all fire at ``fail_at_step`` and only once — ``fired`` is the
+    one-shot latch, so a loop that survives the fault does not re-die):
+
+    * ``"raise"``        — raise RuntimeError before the step runs (the
+      in-process crash; ``finally`` blocks and async flushes still run).
+    * ``"die"``          — ``os._exit(exit_code)`` before the step runs:
+      hard host death, no cleanup, no checkpoint flush.  Use from a worker
+      subprocess (runtime/elastic.py).
+    * ``"sigterm"``      — deliver a real SIGTERM to this process before
+      the step: with ``TrainLoop(handle_sigterm=True)`` the loop finishes
+      the step, checkpoints, and exits cleanly (the preemption path).
+    * ``"ckpt_crash"``   — die *inside* the first checkpoint write at or
+      after ``fail_at_step``: a torn ``.tmp`` payload is left behind and
+      the process hard-exits mid-save.  The atomic-rename contract means
+      resume must land on the previous complete checkpoint.
+    """
+
+    MODES = ("raise", "die", "sigterm", "ckpt_crash")
+
+    def __init__(self, fail_at_step: Optional[int] = None,
+                 mode: str = "raise", exit_code: int = 13):
+        if mode not in self.MODES:
+            raise ValueError(
+                f"unknown failure mode {mode!r}; known: {self.MODES}")
         self.fail_at_step = fail_at_step
+        self.mode = mode
+        self.exit_code = exit_code
         self.fired = False
 
+    def _armed(self, step: int) -> bool:
+        return (self.fail_at_step is not None and not self.fired
+                and step >= self.fail_at_step)
+
     def maybe_fail(self, step: int) -> None:
-        if self.fail_at_step is not None and step == self.fail_at_step and not self.fired:
-            self.fired = True
+        """Called by the loop at the top of each step."""
+        if self.mode not in ("raise", "die", "sigterm"):
+            return
+        if self.fail_at_step is None or self.fired or step != self.fail_at_step:
+            return
+        self.fired = True
+        if self.mode == "raise":
             raise RuntimeError(f"injected failure at step {step}")
+        if self.mode == "sigterm":
+            os.kill(os.getpid(), signal.SIGTERM)
+            return  # the handler only sets a flag; the loop drains cleanly
+        os._exit(self.exit_code)  # "die": host death, no cleanup
+
+    def maybe_fail_save(self, step: int, ckpt: CheckpointManager) -> None:
+        """Called by the loop just before a checkpoint save for ``step``.
+        ``ckpt_crash`` writes a torn ``.tmp`` payload (what a mid-write
+        crash leaves on disk) and hard-exits."""
+        if self.mode != "ckpt_crash" or not self._armed(step):
+            return
+        self.fired = True
+        tmp = ckpt._dir(step) + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            f.write(b"PK\x03\x04torn-mid-write")  # a truncated zip header
+        os._exit(self.exit_code)
 
 
 @dataclasses.dataclass
@@ -60,6 +129,111 @@ class StragglerWatchdog:
         elif not is_straggler:
             self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * step_time
         return is_straggler
+
+
+# --------------------------------------------------------------------- #
+# Goodput accounting
+# --------------------------------------------------------------------- #
+class GoodputMeter:
+    """Useful-work / wall-clock accounting that survives process death.
+
+    A tiny ``heartbeat.json`` is atomically rewritten in ``root`` every
+    step.  A crashed process cannot report its own loss, so the *next*
+    process reads the heartbeat on startup and accounts for it:
+
+    * ``recomputed_steps`` — steps the dead run executed past its last
+      checkpoint; the resumed run must redo them (step/data determinism
+      makes the redo bit-identical, but the first run's time was wasted).
+    * ``time_lost_to_restart`` — the dead run's post-checkpoint step time
+      plus the gap between its last heartbeat and the resumed run's start
+      (scheduler delay, re-init, recompile).
+    * ``useful_time`` — per-step time that became durable: it survived
+      into a checkpoint or into the final returned state.
+    * ``goodput = useful_time / (now - first_start)`` across *all*
+      incarnations of the run, not just the surviving one.
+    """
+
+    HEARTBEAT = "heartbeat.json"
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.useful_time = 0.0
+        self.useful_at_ckpt = 0.0
+        self.time_lost_to_restart = 0.0
+        self.recomputed_steps = 0
+        self.restarts = 0
+        self.first_start = time.time()
+        self.step = 0
+
+    # -- persistence ---------------------------------------------- #
+    @property
+    def _path(self) -> str:
+        return os.path.join(self.root, self.HEARTBEAT)
+
+    def _beat(self) -> None:
+        tmp = self._path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({
+                "step": self.step,
+                "wall": time.time(),
+                "first_start": self.first_start,
+                "useful_time": self.useful_time,
+                "useful_at_ckpt": self.useful_at_ckpt,
+                "time_lost_to_restart": self.time_lost_to_restart,
+                "recomputed_steps": self.recomputed_steps,
+                "restarts": self.restarts,
+            }, f)
+        os.replace(tmp, self._path)
+
+    # -- lifecycle ------------------------------------------------ #
+    def start_run(self, start_step: int) -> None:
+        """Attach to a (possibly restarted) run resuming at ``start_step``.
+        Reads the previous incarnation's heartbeat, if any, and books its
+        losses."""
+        if not os.path.exists(self._path):
+            self.step = start_step
+            return
+        try:
+            with open(self._path) as f:
+                hb = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            self.step = start_step
+            return  # a torn heartbeat only costs telemetry, never the run
+        now = time.time()
+        self.restarts = int(hb.get("restarts", 0)) + 1
+        self.first_start = float(hb.get("first_start", now))
+        self.useful_at_ckpt = float(hb.get("useful_at_ckpt", 0.0))
+        # work past the last checkpoint died with the process
+        self.useful_time = self.useful_at_ckpt
+        self.recomputed_steps = int(hb.get("recomputed_steps", 0)) + max(
+            0, int(hb.get("step", start_step)) - start_step)
+        self.time_lost_to_restart = (
+            float(hb.get("time_lost_to_restart", 0.0))
+            + (float(hb.get("useful_time", 0.0)) - self.useful_at_ckpt)
+            + max(0.0, now - float(hb.get("wall", now))))
+        self.step = start_step
+
+    def observe_step(self, step: int, dt: float) -> None:
+        self.useful_time += dt
+        self.step = step + 1  # the next step to run if we die right now
+        self._beat()
+
+    def on_checkpoint(self, step: int) -> None:
+        """All useful time so far is now durable."""
+        self.useful_at_ckpt = self.useful_time
+        self._beat()
+
+    def report(self) -> Dict[str, float]:
+        wall = max(time.time() - self.first_start, 1e-9)
+        return {
+            "goodput": self.useful_time / wall,
+            "wall_time": wall,
+            "useful_time": self.useful_time,
+            "time_lost_to_restart": self.time_lost_to_restart,
+            "recomputed_steps": self.recomputed_steps,
+            "restarts": self.restarts,
+        }
 
 
 def reshard(tree: Any, mesh, specs) -> Any:
@@ -88,6 +262,7 @@ class TrainLoop:
         watchdog: Optional[StragglerWatchdog] = None,
         injector: Optional[FailureInjector] = None,
         handle_sigterm: bool = False,
+        goodput: Optional[GoodputMeter] = None,
     ):
         self.step_fn = step_fn
         self.ckpt = ckpt
@@ -95,6 +270,7 @@ class TrainLoop:
         self.async_save = async_save
         self.watchdog = watchdog or StragglerWatchdog()
         self.injector = injector
+        self.goodput = goodput
         self._preempted = False
         if handle_sigterm:
             signal.signal(signal.SIGTERM, self._on_sigterm)
@@ -111,17 +287,34 @@ class TrainLoop:
         log_every: int = 10,
         log: Callable[[str], None] = print,
     ) -> Dict[str, Any]:
-        """``batches``: either an iterator (caller guarantees step alignment
-        after resume) or a callable ``step -> batch`` (preferred: replays
-        the exact stream after restart, matching the deterministic
-        pipeline's contract)."""
-        # ---- auto-resume ----
+        """``batches``: either an iterator (fresh runs only) or a callable
+        ``step -> batch`` (preferred: replays the exact stream after
+        restart, matching the deterministic pipeline's contract).  Resuming
+        from a checkpoint with a plain iterator is rejected: the iterator
+        would replay from batch 0 against a state at ``start_step``,
+        silently corrupting data/step alignment."""
+        # ---- auto-resume (skipping past corrupt checkpoints) ----
         state = init_state
         start_step = 0
-        restored = self.ckpt.restore_latest(init_state)
+        restored = self.ckpt.restore_latest(init_state, log=log)
         if restored is not None:
             start_step, state, meta = restored
             log(f"[ft] resumed from checkpoint step {start_step}")
+        if start_step > 0 and not callable(batches):
+            raise TypeError(
+                "TrainLoop.run is resuming from checkpoint step "
+                f"{start_step} but `batches` is a plain iterator, which "
+                "would replay the stream from batch 0 and misalign data "
+                "with the restored state. Pass a callable `step -> batch` "
+                "(e.g. the deterministic pipeline's `.batch`) so the "
+                "stream replays from the resume step.")
+
+        meter = self.goodput or GoodputMeter(self.ckpt.root)
+        meter.start_run(start_step)
+        if meter.restarts:
+            log(f"[ft] restart #{meter.restarts}: "
+                f"{meter.recomputed_steps} step(s) to recompute, "
+                f"{meter.time_lost_to_restart:.2f}s lost so far")
 
         history = []
         step = start_step
@@ -135,6 +328,7 @@ class TrainLoop:
                 jax.block_until_ready(metrics)
                 dt = time.perf_counter() - t0
                 straggler = self.watchdog.observe(dt)
+                meter.observe_step(step, dt)
                 if step % log_every == 0:
                     m = {k: float(np.asarray(v)) for k, v in metrics.items()}
                     log(f"[step {step}] {m} ({dt*1e3:.1f} ms)"
@@ -142,8 +336,11 @@ class TrainLoop:
                 history.append({k: float(np.asarray(v)) for k, v in metrics.items()})
                 next_step = step + 1
                 if next_step % self.save_every == 0 or self._preempted:
+                    if self.injector is not None:
+                        self.injector.maybe_fail_save(next_step, self.ckpt)
                     saver = self.ckpt.save_async if self.async_save else self.ckpt.save
                     saver(next_step, state, {"wall_time": time.time()})
+                    meter.on_checkpoint(next_step)
                     if self._preempted:
                         self.ckpt.wait()
                         log(f"[ft] preempted: checkpointed at step {next_step}, "
@@ -157,4 +354,6 @@ class TrainLoop:
             "history": history,
             "last_step": step,
             "straggler_steps": self.watchdog.straggler_steps,
+            "preempted": self._preempted,
+            "goodput": meter.report(),
         }

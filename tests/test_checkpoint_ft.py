@@ -1,6 +1,10 @@
 """Checkpointing + fault tolerance: atomicity, resume, stragglers, elasticity."""
 
+import json
 import os
+import signal
+import subprocess
+import sys
 import time
 
 import jax
@@ -8,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointCorruptError, CheckpointManager
 from repro.runtime.fault_tolerance import (FailureInjector, StragglerWatchdog,
                                            TrainLoop, reshard)
 
@@ -77,27 +81,49 @@ def test_crash_and_resume_bit_identical(tmp_path):
     uninterrupted run (deterministic data + checkpointed state)."""
     step = _toy_step()
     init = {"w": jnp.zeros(3), "step": jnp.int32(0)}
+    batch_fn = lambda i: jnp.ones(3)  # step-indexed: replays after restart
 
     # uninterrupted reference
     ref = CheckpointManager(str(tmp_path / "ref"), keep=2)
     out_ref = TrainLoop(step, ref, save_every=5).run(
-        init, _batches(), 12, log=lambda s: None)
+        init, batch_fn, 12, log=lambda s: None)
 
     # crashing run
     mgr = CheckpointManager(str(tmp_path / "crash"), keep=2)
     inj = FailureInjector(fail_at_step=7)
     loop = TrainLoop(step, mgr, save_every=5, injector=inj)
     with pytest.raises(RuntimeError):
-        loop.run(init, _batches(), 12, log=lambda s: None)
+        loop.run(init, batch_fn, 12, log=lambda s: None)
     assert mgr.latest() == 5  # last complete checkpoint
 
     # resumed run — data stream replays deterministically from step 5
     loop2 = TrainLoop(step, mgr, save_every=5)
-    out = loop2.run(init, _batches(), 12, log=lambda s: None)
+    out = loop2.run(init, batch_fn, 12, log=lambda s: None)
     np.testing.assert_allclose(
         np.asarray(out["final_state"]["w"]),
         np.asarray(out_ref["final_state"]["w"]), rtol=1e-7)
     assert int(out["final_state"]["step"]) == int(out_ref["final_state"]["step"])
+
+
+def test_resume_with_plain_iterator_rejected(tmp_path):
+    """Resuming from a checkpoint with a plain iterator would replay the
+    stream from batch 0 against a mid-run state — rejected loudly instead
+    of silently corrupting the data/step alignment."""
+    step = _toy_step()
+    init = {"w": jnp.zeros(3), "step": jnp.int32(0)}
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    TrainLoop(step, mgr, save_every=2).run(
+        init, lambda i: jnp.ones(3), 4, log=lambda s: None)
+    assert mgr.latest() == 4
+
+    with pytest.raises(TypeError, match="plain iterator"):
+        TrainLoop(step, mgr, save_every=2).run(
+            init, _batches(), 8, log=lambda s: None)
+    # fresh runs (no checkpoint yet) still accept iterators
+    fresh = CheckpointManager(str(tmp_path / "fresh"), keep=2)
+    out = TrainLoop(step, fresh, save_every=100).run(
+        init, _batches(), 3, log=lambda s: None)
+    assert out["last_step"] == 2
 
 
 def test_straggler_watchdog_flags_slow_steps():
@@ -123,6 +149,129 @@ def test_straggler_detection_in_loop(tmp_path):
                      watchdog=StragglerWatchdog(threshold=3.0))
     out = loop.run({"w": jnp.zeros(1)}, _batches(), 12, log=lambda s: None)
     assert out["straggler_steps"] >= 1
+
+
+# ------------------------------------------------------------------ #
+# Checksums + self-healing restore
+# ------------------------------------------------------------------ #
+def test_manifest_carries_per_leaf_checksums(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(3.0))
+    with open(os.path.join(mgr._dir(1), "manifest.json")) as f:
+        manifest = json.load(f)
+    assert set(manifest["checksums"]) == {"leaf_0", "leaf_1"}
+    assert all(isinstance(v, int) for v in manifest["checksums"].values())
+
+
+def test_corrupt_payload_raises_corrupt_error(tmp_path):
+    """A valid-looking npz whose bytes changed after the manifest was
+    written (silent corruption) fails the checksum, not the tests 10k
+    steps later."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree(1.5)
+    mgr.save(2, t)
+    leaves = {f"leaf_{i}": np.asarray(x)
+              for i, x in enumerate(jax.tree.leaves(t))}
+    leaves["leaf_0"] = np.zeros_like(leaves["leaf_0"])  # flipped block
+    np.savez(os.path.join(mgr._dir(2), "arrays.npz"), **leaves)
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        mgr.restore(2, jax.tree.map(np.asarray, t))
+
+
+def test_restore_latest_skips_corrupt_to_previous_valid(tmp_path):
+    """Truncate the newest checkpoint's payload: restore_latest must warn
+    and fall back to the previous valid step instead of crashing."""
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    t = _tree(0.0)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(float(s)))
+    with open(os.path.join(mgr._dir(3), "arrays.npz"), "wb") as f:
+        f.write(b"PK\x03\x04torn")  # truncated mid-write
+    warnings = []
+    got = mgr.restore_latest(jax.tree.map(np.asarray, t), log=warnings.append)
+    assert got is not None
+    step, tree, _ = got
+    assert step == 2
+    np.testing.assert_allclose(tree["a"], np.full((4, 3), 2.0))
+    assert any("skipping corrupt checkpoint step 3" in w for w in warnings)
+
+
+def test_restore_latest_all_corrupt_returns_none(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree(1.0)
+    mgr.save(1, t)
+    with open(os.path.join(mgr._dir(1), "arrays.npz"), "wb") as f:
+        f.write(b"garbage")
+    assert mgr.restore_latest(jax.tree.map(np.asarray, t),
+                              log=lambda s: None) is None
+
+
+# ------------------------------------------------------------------ #
+# Failure injector semantics
+# ------------------------------------------------------------------ #
+def test_failure_injector_is_one_shot():
+    inj = FailureInjector(fail_at_step=3, mode="raise")
+    inj.maybe_fail(2)  # not yet
+    with pytest.raises(RuntimeError, match="injected failure at step 3"):
+        inj.maybe_fail(3)
+    assert inj.fired
+    inj.maybe_fail(3)  # the latch holds: a survivor does not re-die
+
+
+def test_failure_injector_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown failure mode"):
+        FailureInjector(fail_at_step=1, mode="meteor")
+
+
+def test_straggler_ema_not_poisoned_numerically():
+    wd = StragglerWatchdog(threshold=2.0, ema_decay=0.5)
+    for _ in range(4):
+        wd.observe(0.10)
+    ema_before = wd.ema
+    assert wd.observe(10.0)            # extreme straggler
+    assert wd.observe(10.0)            # and again — still flagged
+    assert wd.ema == ema_before        # EMA untouched by either
+    assert wd.straggler_steps == 2
+
+
+# ------------------------------------------------------------------ #
+# Preemption: a real SIGTERM delivered to a real worker process
+# ------------------------------------------------------------------ #
+def test_sigterm_worker_checkpoints_and_exits_clean(tmp_path):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ckpt = tmp_path / "ckpt"
+    result = tmp_path / "out.json"
+    env = {**os.environ, "PYTHONPATH": os.path.join(root, "src"),
+           "JAX_PLATFORMS": "cpu"}
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.runtime.elastic",
+         "--ckpt", str(ckpt), "--steps", "500", "--save-every", "1",
+         "--dp", "1", "--compress", "none", "--handle-sigterm",
+         "--step-ms", "100", "--result", str(result), "--log-every", "1000"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env,
+        cwd=root)
+    try:
+        # wait until the loop is live (first heartbeat), then preempt it
+        hb = ckpt / "heartbeat.json"
+        for _ in range(600):
+            if hb.exists():
+                break
+            time.sleep(0.1)
+        else:
+            proc.kill()
+            pytest.fail("worker never reached its first step: "
+                        + proc.communicate()[0][-800:])
+        proc.send_signal(signal.SIGTERM)
+        out, _ = proc.communicate(timeout=120)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert proc.returncode == 0, out[-1200:]
+    assert "preempted: checkpointed at step" in out
+    with open(result) as f:
+        res = json.load(f)
+    assert res["preempted"] is True
+    assert res["last_step"] < 499  # it really stopped early
 
 
 def test_elastic_reshard_across_meshes(tmp_path):

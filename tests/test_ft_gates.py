@@ -1,0 +1,166 @@
+"""CI ft-gates: elastic fault-tolerant training acceptance tests.
+
+The contracts these pin (see docs/fault_tolerance.md):
+
+* **kill-and-resume bit-identical** — a worker process hard-killed at
+  step k (``os._exit``, no cleanup) and relaunched reaches a final params
+  digest identical to an uninterrupted run, on the fp32 wire AND on the
+  FP8-compressed wire (per-host error feedback and delayed-scale windows
+  are checkpointed with an explicit host axis, so the wire's history
+  survives the crash).
+* **torn checkpoint write** — dying mid-save leaves a ``.tmp`` payload the
+  atomic rename never published; resume lands on the previous complete
+  checkpoint and still converges to the reference digest.
+* **elastic resume** — a 4-process checkpoint continues on a 2-process
+  mesh: the per-host compression state is regrouped (residuals summed —
+  uncommunicated gradient mass conserved — scale stats take the group
+  max) and training keeps descending.
+* **collective bytes** — analytic wire bytes per gradient all-reduce are
+  pinned exactly against benchmarks/baselines/collective_bytes.json with
+  the strict ordering fp8 < fp16 < fp32.
+* **goodput floor** — the injected-failure benchmark scenario's goodput
+  (useful/wall across incarnations) stays above a pinned floor.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINES = os.path.join(ROOT, "benchmarks", "baselines",
+                         "collective_bytes.json")
+
+
+def _worker(ckpt, *, steps=8, save_every=2, dp=2, compress="none",
+            fail_step=None, fail_mode="die", result=None, extra=(),
+            timeout=300):
+    cmd = [sys.executable, "-m", "repro.runtime.elastic",
+           "--ckpt", str(ckpt), "--steps", str(steps),
+           "--save-every", str(save_every), "--dp", str(dp),
+           "--compress", compress, "--log-every", "100"]
+    if fail_step is not None:
+        cmd += ["--fail-step", str(fail_step), "--fail-mode", fail_mode]
+    if result is not None:
+        cmd += ["--result", str(result)]
+    cmd += list(extra)
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(ROOT, "src"),
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={dp}",
+           "JAX_PLATFORMS": "cpu"}
+    return subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=timeout, cwd=ROOT)
+
+
+def _result(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module", params=["none", "fp8_e4m3"])
+def reference_run(request, tmp_path_factory):
+    """Uninterrupted 8-step reference digest, one per wire kind."""
+    kind = request.param
+    d = tmp_path_factory.mktemp(f"ref_{kind}")
+    r = _worker(d / "ckpt", compress=kind, result=d / "out.json")
+    assert r.returncode == 0, (r.stdout[-800:], r.stderr[-800:])
+    return kind, _result(d / "out.json")
+
+
+def test_kill_and_resume_bit_identical(reference_run, tmp_path):
+    """Hard process death at step 5, relaunch, digest must match the
+    uninterrupted run exactly."""
+    kind, ref = reference_run
+    r = _worker(tmp_path / "ckpt", compress=kind, fail_step=5,
+                fail_mode="die")
+    assert r.returncode == 13, (r.returncode, r.stderr[-800:])
+
+    r2 = _worker(tmp_path / "ckpt", compress=kind,
+                 result=tmp_path / "out.json")
+    assert r2.returncode == 0, (r2.stdout[-800:], r2.stderr[-800:])
+    assert "resumed from checkpoint" in r2.stdout
+    out = _result(tmp_path / "out.json")
+    assert out["digest"] == ref["digest"], (
+        f"{kind}: resumed digest diverged from the uninterrupted run")
+    g = out["goodput"]
+    assert g["restarts"] == 1
+    assert g["recomputed_steps"] >= 1  # died at 5, last checkpoint at 4
+
+
+def test_torn_checkpoint_write_recovers(reference_run, tmp_path):
+    """Dying *inside* the step-4 checkpoint write leaves only a torn .tmp;
+    resume lands on step 2 and still reaches the reference digest."""
+    kind, ref = reference_run
+    r = _worker(tmp_path / "ckpt", compress=kind, fail_step=4,
+                fail_mode="ckpt_crash")
+    assert r.returncode == 13, (r.returncode, r.stderr[-800:])
+    names = os.listdir(tmp_path / "ckpt")
+    assert any(n.endswith(".tmp") for n in names), names
+    assert "step_000004" not in names  # the torn write was never published
+
+    r2 = _worker(tmp_path / "ckpt", compress=kind,
+                 result=tmp_path / "out.json")
+    assert r2.returncode == 0, (r2.stdout[-800:], r2.stderr[-800:])
+    assert "resumed from checkpoint step 2" in r2.stdout
+    assert _result(tmp_path / "out.json")["digest"] == ref["digest"]
+
+
+def test_elastic_resume_4_to_2(tmp_path):
+    """A dp=4 checkpoint continues on a dp=2 mesh: the per-host EF state
+    is regrouped on attach and the loss keeps falling."""
+    r4 = _worker(tmp_path / "ckpt", steps=4, dp=4, compress="fp8_e4m3",
+                 result=tmp_path / "out4.json")
+    assert r4.returncode == 0, (r4.stdout[-800:], r4.stderr[-800:])
+    out4 = _result(tmp_path / "out4.json")
+
+    r2 = _worker(tmp_path / "ckpt", steps=8, dp=2, compress="fp8_e4m3",
+                 result=tmp_path / "out2.json")
+    assert r2.returncode == 0, (r2.stdout[-800:], r2.stderr[-800:])
+    assert "elastic attach: regrouping" in r2.stdout
+    assert "resumed from checkpoint step 4" in r2.stdout
+    out2 = _result(tmp_path / "out2.json")
+    assert out2["dp"] == 2 and out2["last_step"] == 7
+    assert out2["loss"] < out4["loss"]
+
+
+# ------------------------------------------------------------------ #
+# Wire bytes + goodput gates (in-process)
+# ------------------------------------------------------------------ #
+def test_collective_bytes_pinned_and_ordered():
+    from repro import configs
+    from repro.models import transformer
+    from repro.optim import collective_wire_bytes
+
+    with open(BASELINES) as f:
+        base = json.load(f)
+    params = transformer.abstract_params(configs.get_reduced(base["arch"]))
+    got = {
+        "fp32": collective_wire_bytes("none", params),
+        "fp16": collective_wire_bytes("fp16", params),
+        "int8": collective_wire_bytes("int8", params),
+        "fp8_e4m3": collective_wire_bytes("fp8_e4m3", params),
+        "fp8_e5m2": collective_wire_bytes("fp8_e5m2", params),
+    }
+    assert got == base["collective_bytes"], (got, base["collective_bytes"])
+    assert got["fp8_e4m3"] < got["fp16"] < got["fp32"]
+    assert got["fp8_e5m2"] < got["fp16"] < got["fp32"]
+
+
+def test_bench_rows_and_goodput_floor():
+    """The ft_goodput benchmark module emits the ft/* rows ft-gates ships
+    into BENCH_engine.json, with bytes matching the baseline and the
+    injected-failure goodput above the pinned floor."""
+    from benchmarks import ft_goodput
+
+    with open(BASELINES) as f:
+        base = json.load(f)
+    rows = {name: (us, derived) for name, us, derived in ft_goodput.run()}
+    for kind, want in base["collective_bytes"].items():
+        assert rows[f"ft/collective_bytes_{kind}"][1] == str(want)
+    us, derived = rows["ft/goodput_injected"]
+    fields = dict(kv.split("=") for kv in derived.split())
+    assert float(fields["goodput"]) > base["goodput_floor_injected"], derived
+    assert int(fields["restarts"]) == 1
+    assert int(fields["recomputed"]) >= 1
