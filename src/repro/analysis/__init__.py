@@ -1,0 +1,35 @@
+"""Static analysis for the Engine's instrumentation contract.
+
+Three layers, all runnable offline (no TPU):
+
+* :mod:`repro.analysis.jaxpr_audit` — trace an entry point to a closed
+  jaxpr, collect every ``dot_general`` (recursing through
+  pjit/scan/while/remat/custom_vjp sub-jaxprs), and reconcile the multiset
+  against the ``GemmEvent`` stream from the same trace.  Contractions not
+  accounted by an Engine dispatch are *escaped GEMMs*.
+* :mod:`repro.analysis.dtype_audit` — precision-policy conformance over
+  the same jaxprs: fp64 anywhere, fp32 materialization off the declared
+  accumulation path, FP8 operands reaching a backend without the
+  ``"operand_dtypes"`` capability.
+* :mod:`repro.analysis.lint` — AST-level repo invariants (no raw GEMMs in
+  ``models/`` outside the manifest, ``os._exit`` confinement, frozen
+  ``GemmSpec`` mutation, module-level mutable event collectors) plus
+  static validation of shipped artifacts (autotune caches vs the VMEM
+  budget, baseline JSONs vs the analytic formulas).
+
+Known escapes live in the ratchet manifest
+``benchmarks/baselines/engine_escapes.json`` — the count only goes down.
+CLI entry points: ``python -m repro.analysis.audit`` and
+``python -m repro.analysis.lint`` (both wired into the ``static-gates``
+CI job).  See ``docs/static_analysis.md``.
+"""
+
+from repro.analysis.dtype_audit import DtypeFinding, audit_dtypes
+from repro.analysis.entries import ENTRY_POINTS, get_entry
+from repro.analysis.jaxpr_audit import (AuditResult, DotSite, collect_dots,
+                                        reconcile, trace_entry)
+
+__all__ = [
+    "AuditResult", "DotSite", "DtypeFinding", "ENTRY_POINTS",
+    "audit_dtypes", "collect_dots", "get_entry", "reconcile", "trace_entry",
+]

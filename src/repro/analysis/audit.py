@@ -1,0 +1,135 @@
+"""Escape-audit CLI: ``python -m repro.analysis.audit``.
+
+Runs the jaxpr escape auditor (:mod:`repro.analysis.jaxpr_audit`) and the
+precision conformance checks (:mod:`repro.analysis.dtype_audit`) over the
+registered entry points (:mod:`repro.analysis.entries`) and reconciles
+the escapes against the ratchet manifest
+``benchmarks/baselines/engine_escapes.json``.
+
+Exit status is non-zero when:
+
+* an entry's trace contains a contraction neither an Engine dispatch nor
+  the manifest accounts for (**the escape count grew** — route the GEMM
+  through the Engine or, exceptionally, add a manifest entry with a
+  justification note);
+* a manifest entry is no longer observed (**stale** — the escape was
+  fixed; delete its entry so the ratchet tightens);
+* the dtype audit finds fp64, off-policy fp32 materialization, or raw
+  FP8 operands in any entry's jaxpr;
+* a shipped precision policy violates its static invariants.
+
+``--json`` writes the full machine-readable report (uploaded as a CI
+artifact by the ``static-gates`` job).  See ``docs/static_analysis.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+from repro.analysis import dtype_audit, entries, jaxpr_audit
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), *[os.pardir] * 3))
+DEFAULT_MANIFEST = os.path.join(
+    _REPO_ROOT, "benchmarks", "baselines", "engine_escapes.json")
+
+
+def load_manifest(path: str) -> Dict[str, Any]:
+    with open(path) as fh:
+        m = json.load(fh)
+    m.setdefault("jaxpr", {})
+    m.setdefault("ast", [])
+    return m
+
+
+def ratchet_errors(entry: str, result: jaxpr_audit.AuditResult,
+                   manifest: Dict[str, Any]) -> List[str]:
+    """Compare one entry's escapes against its manifest section: new
+    escapes and stale entries are both errors (the count only moves
+    down, and it moves by editing the manifest in the same commit)."""
+    known = {e["fingerprint"]: int(e.get("count", 1))
+             for e in manifest.get("jaxpr", {}).get(entry, [])}
+    found = {s.fingerprint: s.count for s in result.escapes}
+    errors: List[str] = []
+    for fp, n in sorted(found.items()):
+        have = known.get(fp, 0)
+        if n > have:
+            errors.append(
+                f"{entry}: NEW escaped contraction (+{n - have}): {fp} — "
+                f"route it through the Engine (see docs/static_analysis.md)")
+    for fp, have in sorted(known.items()):
+        if found.get(fp, 0) < have:
+            errors.append(
+                f"{entry}: STALE manifest entry ({found.get(fp, 0)}/{have} "
+                f"observed): {fp} — the escape was fixed, delete it from "
+                f"engine_escapes.json so the ratchet tightens")
+    return errors
+
+
+def run(entry_names: List[str], manifest_path: str,
+        json_path: str = "") -> int:
+    manifest = load_manifest(manifest_path)
+    errors: List[str] = []
+    report: Dict[str, Any] = {"entries": {}, "errors": []}
+
+    for name in entry_names:
+        fn, args = entries.get_entry(name)
+        closed, events = jaxpr_audit.trace_entry(name, fn, args)
+        result = jaxpr_audit.reconcile(
+            name, jaxpr_audit.collect_dots(closed), events)
+        errors.extend(ratchet_errors(name, result, manifest))
+        findings = dtype_audit.audit_dtypes(closed, events)
+        errors.extend(f"{name}: dtype: {f.describe()}" for f in findings)
+        report["entries"][name] = result.to_json()
+        report["entries"][name]["dtype_findings"] = [
+            f.describe() for f in findings]
+        status = "clean" if not result.escapes else (
+            f"{sum(s.count for s in result.escapes)} escaped contraction(s)")
+        print(f"[audit] {name}: {result.n_dots} dot site(s), "
+              f"{result.n_events} engine event(s), {status}, "
+              f"{len(findings)} dtype finding(s)")
+        for s in result.escapes:
+            print(f"[audit]   escape: {s.describe()}")
+
+    policy_problems = dtype_audit.check_shipped_policies()
+    errors.extend(f"policy: {p}" for p in policy_problems)
+    report["policy_problems"] = policy_problems
+    report["errors"] = errors
+
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"[audit] report written to {json_path}")
+
+    if errors:
+        print(f"[audit] FAIL — {len(errors)} error(s):", file=sys.stderr)
+        for e in errors:
+            print(f"[audit]   {e}", file=sys.stderr)
+        return 1
+    print("[audit] OK — every contraction is Engine-accounted or "
+          "manifest-covered")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--entry", action="append", default=[],
+                    choices=sorted(entries.ENTRY_POINTS),
+                    help="entry point to audit (repeatable; default: all)")
+    ap.add_argument("--manifest", default=DEFAULT_MANIFEST,
+                    help="ratchet manifest path")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the machine-readable report here")
+    args = ap.parse_args(argv)
+    names = args.entry or sorted(entries.ENTRY_POINTS)
+    return run(names, args.manifest, args.json)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,102 @@
+"""Audited entry points: the traces the static gates run against.
+
+Each entry builds ``(fn, args)`` for :func:`repro.analysis.jaxpr_audit.
+trace_entry` — abstract arguments (``ShapeDtypeStruct`` trees) wherever
+the model exposes them, so the audit never materializes weights and runs
+in seconds on CPU.  The registry mirrors the CI-gated workloads:
+
+* ``ae_train`` — the AE train step (``value_and_grad`` of ``ae_loss``),
+  the same trace the ``train-gates`` flop baseline pins;
+* ``yi9b_decode`` — one continuous-batching decode step on reduced
+  yi-9b with the FP8 KV cache, the ``serve-gates`` trace;
+* ``deepseek_moe_fwd`` — reduced deepseek-moe forward (router, grouped
+  expert GEMMs, combiner);
+* ``xlstm_fwd`` — reduced xlstm forward: the sLSTM recurrent scan is the
+  repo's known jaxpr-layer escape (see
+  ``benchmarks/baselines/engine_escapes.json``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EntrySpec = Tuple[Callable[..., Any], Sequence[Any]]
+
+
+def _ae_train() -> EntrySpec:
+    from repro.core import precision as prec
+    from repro.data import SyntheticAE
+    from repro.models import autoencoder
+
+    params = autoencoder.init_ae(jax.random.PRNGKey(0))
+    x = jnp.asarray(SyntheticAE(batch=16).sample(0))
+
+    def step(p):
+        return jax.value_and_grad(
+            lambda q: autoencoder.ae_loss(q, x, policy=prec.PAPER_FP16)[0])(p)
+
+    return step, (params,)
+
+
+def _yi9b_decode() -> EntrySpec:
+    from repro import configs
+    from repro.models import transformer
+
+    cfg = configs.get_reduced("yi-9b")
+    params = transformer.abstract_params(cfg)
+    n, max_len = 4, 32
+    sizes = np.asarray([4, 9, 17, 0], np.int32)
+    cache = jax.eval_shape(lambda: transformer.init_cache(
+        cfg, n, max_len, dtype=cfg.policy.compute_dtype,
+        storage_dtype="float8_e4m3fn"))
+    tok = jax.ShapeDtypeStruct((n, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((n,), jnp.int32)
+
+    def step(p, c, t, q):
+        return transformer.serve_step(p, cfg, t, c, q, kv_group_sizes=sizes)
+
+    return step, (params, cache, tok, pos)
+
+
+def _lm_fwd(arch: str, batch: int, seq: int) -> EntrySpec:
+    from repro import configs
+    from repro.models import transformer
+
+    cfg = configs.get_reduced(arch)
+    params = transformer.abstract_params(cfg)
+    feed = {"inputs": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+    def fwd(p, b):
+        return transformer.forward(p, cfg, b)[0]
+
+    return fwd, (params, feed)
+
+
+def _deepseek_moe_fwd() -> EntrySpec:
+    return _lm_fwd("deepseek-moe-16b", batch=2, seq=16)
+
+
+def _xlstm_fwd() -> EntrySpec:
+    return _lm_fwd("xlstm-1.3b", batch=2, seq=16)
+
+
+ENTRY_POINTS: Dict[str, Callable[[], EntrySpec]] = {
+    "ae_train": _ae_train,
+    "yi9b_decode": _yi9b_decode,
+    "deepseek_moe_fwd": _deepseek_moe_fwd,
+    "xlstm_fwd": _xlstm_fwd,
+}
+
+
+def get_entry(name: str) -> EntrySpec:
+    try:
+        build = ENTRY_POINTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown audit entry {name!r}; known: {sorted(ENTRY_POINTS)}"
+        ) from None
+    return build()

@@ -1,0 +1,434 @@
+"""Repo-invariant linter: ``python -m repro.analysis.lint``.
+
+AST-level invariants the Engine architecture depends on, checkable
+without importing (let alone tracing) the code under test:
+
+* **no raw GEMMs in ``src/repro/models/``** — ``jnp.dot`` / ``matmul`` /
+  ``einsum`` / ``tensordot`` / ``lax.dot_general`` / the ``@`` operator
+  bypass GemmEvents, the autotuner, and every CI baseline.  Known sites
+  live in the ``"ast"`` section of the ratchet manifest
+  (``benchmarks/baselines/engine_escapes.json``), matched by
+  ``(file, call, equation)``; new sites and stale entries both fail.
+* **``os._exit`` confinement** — hard process death is the fault-
+  injection contract of ``runtime/fault_tolerance.py`` /
+  ``runtime/elastic.py``; anywhere else it skips ``atexit``/flush and
+  corrupts checkpoints outside the torn-write recovery path.
+* **no mutation of frozen ``GemmSpec``** — ``object.__setattr__`` (the
+  only way through a frozen dataclass) and attribute assignment to
+  spec-typed names break the dispatch-cache and event-identity
+  assumptions.
+* **no module-level mutable event collectors** — instrumentation state
+  is thread-local by contract (PR 1); a module-global list shared across
+  threads double-counts concurrent traces.
+
+Plus static validation of shipped artifacts:
+
+* autotune-cache JSONs — every entry's ``TileConfig`` must fit
+  ``tiling.vmem_bytes`` under the depth / fused-bwd / operand-storage
+  flags declared in its own key string;
+* baseline JSONs under ``benchmarks/baselines/`` — entries must satisfy
+  the ``GemmSpec`` analytic flop/byte identities (train total = fwd+bwd
+  = 3x inference, FP8 strictly below FP16 at equal flops, serve KV bytes
+  equal to the analytic ``decode_step_kv_bytes``, collective wire bytes
+  consistent with one parameter count across widths).
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import glob
+import json
+import os
+import sys
+from typing import Any, Dict, List, Tuple
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), *[os.pardir] * 3))
+DEFAULT_MANIFEST = os.path.join(
+    _REPO_ROOT, "benchmarks", "baselines", "engine_escapes.json")
+
+# call sites that contract arrays without going through the Engine
+_GEMM_ATTRS = {"dot", "matmul", "einsum", "tensordot", "vdot", "inner",
+               "dot_general"}
+_GEMM_MODULES = {"jnp", "np", "numpy", "lax", "jax"}
+_OS_EXIT_ALLOWED = {
+    os.path.join("runtime", "fault_tolerance.py"),
+    os.path.join("runtime", "elastic.py"),
+}
+# fields of the frozen GemmSpec (kept literal so the linter never imports
+# jax); drift is caught by tests/test_static_analysis.py
+_GEMMSPEC_FIELDS = {
+    "op", "tag", "m", "n", "k", "batch", "groups", "policy", "tile",
+    "epilogue", "w_shared", "layout", "valid_rows", "ragged_dim",
+    "grad_epilogue", "grad_mode", "fused_bwd", "fused_bias_grad",
+    "x_dtype", "w_dtype", "scaled",
+}
+
+
+class Violation(Tuple[str, int, str, str]):
+    """(file, line, rule, message) — a plain tuple with a formatter."""
+
+    def __str__(self) -> str:
+        f, line, rule, msg = self
+        return f"{f}:{line}: [{rule}] {msg}"
+
+
+def _v(path: str, line: int, rule: str, msg: str) -> Violation:
+    return Violation((os.path.relpath(path, _REPO_ROOT), line, rule, msg))
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jnp.einsum' for Attribute(Name('jnp'), 'einsum'), '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _einsum_equation(call: ast.Call) -> str:
+    if call.args and isinstance(call.args[0], ast.Constant) \
+            and isinstance(call.args[0].value, str):
+        return call.args[0].value
+    return ""
+
+
+# --------------------------------------------------------------------- #
+# AST rules
+# --------------------------------------------------------------------- #
+def _find_gemm_calls(path: str, tree: ast.Module) -> List[Dict[str, Any]]:
+    found: List[Dict[str, Any]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+            found.append({"file": os.path.relpath(path, _REPO_ROOT),
+                          "call": "@", "equation": "",
+                          "line": node.lineno})
+        elif isinstance(node, ast.Call):
+            name = _dotted(node.func)
+            head, _, attr = name.rpartition(".")
+            root = head.split(".")[0] if head else ""
+            if attr in _GEMM_ATTRS and root in _GEMM_MODULES:
+                found.append({
+                    "file": os.path.relpath(path, _REPO_ROOT),
+                    "call": f"{head.split('.')[-1]}.{attr}",
+                    "equation": (_einsum_equation(node)
+                                 if attr == "einsum" else ""),
+                    "line": node.lineno})
+    return found
+
+
+def _check_os_exit(path: str, tree: ast.Module) -> List[Violation]:
+    rel = os.path.relpath(path, os.path.join(_REPO_ROOT, "src", "repro"))
+    if rel in _OS_EXIT_ALLOWED:
+        return []
+    return [
+        _v(path, node.lineno, "os-exit",
+           "os._exit outside runtime/fault_tolerance.py / "
+           "runtime/elastic.py — hard death elsewhere skips flush/atexit "
+           "and corrupts checkpoints outside the torn-write recovery path")
+        for node in ast.walk(tree)
+        if isinstance(node, ast.Call) and _dotted(node.func) == "os._exit"]
+
+
+def _check_spec_mutation(path: str, tree: ast.Module) -> List[Violation]:
+    # the one legitimate frozen-dataclass escape hatch: a class
+    # normalizing ITSELF in __post_init__ via object.__setattr__(self, …)
+    post_init_ok = set()
+    for fn in ast.walk(tree):
+        if isinstance(fn, ast.FunctionDef) and fn.name == "__post_init__":
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Call)
+                        and _dotted(node.func) == "object.__setattr__"
+                        and node.args
+                        and isinstance(node.args[0], ast.Name)
+                        and node.args[0].id == "self"):
+                    post_init_ok.add(id(node))
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and _dotted(node.func) == "object.__setattr__" \
+                and id(node) not in post_init_ok:
+            out.append(_v(
+                path, node.lineno, "spec-mutation",
+                "object.__setattr__ outside __post_init__(self) defeats "
+                "frozen dataclasses (GemmSpec identity is load-bearing "
+                "for dispatch caching and event accounting)"))
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id.lower().endswith("spec")
+                        and t.attr in _GEMMSPEC_FIELDS):
+                    out.append(_v(
+                        path, node.lineno, "spec-mutation",
+                        f"assignment to {t.value.id}.{t.attr} — GemmSpec "
+                        f"is frozen; build a new spec with "
+                        f"dataclasses.replace instead"))
+    return out
+
+
+def _check_module_collectors(path: str, tree: ast.Module) -> List[Violation]:
+    """Instrumentation state must be thread-local (PR 1): a module-global
+    mutable named like an event sink is shared across threads."""
+    out: List[Violation] = []
+    mutable_calls = {"list", "dict", "set", "defaultdict", "deque",
+                     "OrderedDict", "Counter"}
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        else:
+            continue
+        mutable = isinstance(value, (ast.List, ast.Dict, ast.Set)) or (
+            isinstance(value, ast.Call)
+            and _dotted(value.func).split(".")[-1] in mutable_calls)
+        if not mutable:
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name) and any(
+                    w in t.id.lower() for w in ("event", "collector")):
+                out.append(_v(
+                    path, node.lineno, "module-collector",
+                    f"module-level mutable {t.id!r} looks like an event "
+                    f"collector — instrumentation state must live in "
+                    f"threading.local (engine.instrument's contract)"))
+    return out
+
+
+def lint_sources(src_root: str = "",
+                 manifest_path: str = DEFAULT_MANIFEST) -> List[Violation]:
+    src_root = src_root or os.path.join(_REPO_ROOT, "src", "repro")
+    with open(manifest_path) as fh:
+        manifest_ast = json.load(fh).get("ast", [])
+    allowed = {(e["file"], e["call"], e.get("equation", "")):
+               int(e.get("count", 1)) for e in manifest_ast}
+
+    violations: List[Violation] = []
+    gemm_sites: List[Dict[str, Any]] = []
+    for path in sorted(glob.glob(os.path.join(src_root, "**", "*.py"),
+                                 recursive=True)):
+        tree = ast.parse(open(path).read(), filename=path)
+        violations += _check_os_exit(path, tree)
+        violations += _check_spec_mutation(path, tree)
+        violations += _check_module_collectors(path, tree)
+        if os.path.sep + "models" + os.path.sep in path:
+            gemm_sites += _find_gemm_calls(path, tree)
+
+    # raw-GEMM ratchet: group found sites, diff against the manifest
+    found: Dict[Tuple[str, str, str], List[int]] = {}
+    for s in gemm_sites:
+        found.setdefault((s["file"], s["call"], s["equation"]),
+                         []).append(s["line"])
+    for key, lines in sorted(found.items()):
+        have = allowed.get(key, 0)
+        if len(lines) > have:
+            f, call, eq = key
+            eqs = f" ({eq!r})" if eq else ""
+            violations.append(Violation((
+                f, lines[0], "models-gemm",
+                f"raw {call}{eqs} x{len(lines)} at line(s) "
+                f"{lines} but the manifest allows {have} — route it "
+                f"through the Engine (engine.matmul/einsum2d) or, "
+                f"exceptionally, add a manifest entry with a note")))
+    for key, have in sorted(allowed.items()):
+        got = len(found.get(key, []))
+        if got < have:
+            f, call, eq = key
+            violations.append(Violation((
+                f, 0, "models-gemm",
+                f"STALE manifest entry: {call} {eq!r} ({got}/{have} "
+                f"observed) — the escape was fixed, delete it from "
+                f"engine_escapes.json so the ratchet tightens")))
+    return violations
+
+
+# --------------------------------------------------------------------- #
+# Artifact validation
+# --------------------------------------------------------------------- #
+_KEY_RE = __import__("re").compile(
+    r"^m(?P<m>\d+)-n(?P<n>\d+)-k(?P<k>\d+)"
+    r"-(?P<compute>[^-]+)-(?P<accum>[^-]+)-(?P<out>[^-]+)"
+    r"-(?P<epilogue>[^-]+)-(?P<backend>[^-]+)"
+    r"(?:-(?P<layout>nt|tn))?(?:-(?P<fbwd>fbwd))?(?:-d(?P<depth>\d+))?"
+    r"(?:-x(?P<xstore>[^-]+))?(?:-w(?P<wstore>[^-]+))?$")
+
+
+def validate_autotune_cache(path: str) -> List[Violation]:
+    """Every cached tile must fit the VMEM budget under the flags its own
+    key declares (depth, fused-bwd stream, per-operand storage)."""
+    from repro.core import tiling  # deferred: needs jax
+
+    out: List[Violation] = []
+    try:
+        with open(path) as fh:
+            cache = json.load(fh)
+    except (OSError, ValueError) as e:
+        return [_v(path, 0, "autotune-cache", f"unreadable cache: {e}")]
+    for key, entry in sorted(cache.items()):
+        if key.startswith("_"):
+            continue
+        m = _KEY_RE.match(key)
+        if not m:
+            out.append(_v(path, 0, "autotune-cache",
+                          f"unparseable key {key!r}"))
+            continue
+        try:
+            tile = tiling.TileConfig(bm=int(entry["bm"]), bn=int(entry["bn"]),
+                                     bk=int(entry["bk"]))
+        except (KeyError, TypeError) as e:
+            out.append(_v(path, 0, "autotune-cache",
+                          f"{key!r}: malformed entry ({e})"))
+            continue
+        need = tiling.vmem_bytes(
+            tile, m["compute"], m["accum"],
+            depth=int(m["depth"] or 2), fused_bwd=bool(m["fbwd"]),
+            x_dtype=m["xstore"] or None, w_dtype=m["wstore"] or None)
+        if need > tiling.DEFAULT_VMEM_BUDGET:
+            out.append(_v(
+                path, 0, "autotune-cache",
+                f"{key!r}: tile ({tile.bm},{tile.bn},{tile.bk}) needs "
+                f"{need} B of VMEM under depth={m['depth'] or 2}, over the "
+                f"{tiling.DEFAULT_VMEM_BUDGET} B budget — this cache was "
+                f"tuned against a different kernel geometry"))
+    return out
+
+
+def _load(base_dir: str, name: str) -> Any:
+    with open(os.path.join(base_dir, name)) as fh:
+        return json.load(fh)
+
+
+def validate_baselines(base_dir: str = "") -> List[Violation]:
+    """Cross-check the pinned baseline JSONs against the analytic
+    identities they are derived from (GemmSpec flop/byte formulas)."""
+    base_dir = base_dir or os.path.join(_REPO_ROOT, "benchmarks",
+                                        "baselines")
+    out: List[Violation] = []
+
+    def bad(name: str, msg: str):
+        out.append(_v(os.path.join(base_dir, name), 0, "baseline", msg))
+
+    eng = _load(base_dir, "engine_flops.json")
+    for k, v in eng.items():
+        if not k.startswith("_") and (not isinstance(v, int) or v <= 0):
+            bad("engine_flops.json", f"{k}: non-positive flops {v!r}")
+
+    tr = _load(base_dir, "train_flops.json")["ae_train_B16"]
+    if tr["total"] != tr["fwd"] + tr["bwd"]:
+        bad("train_flops.json", "total != fwd + bwd")
+    if tr["bwd"] != 2 * tr["fwd"]:
+        bad("train_flops.json",
+            "bwd != 2*fwd (pure-GEMM model: dX + dW per affine layer)")
+    if tr["fwd"] != eng["ae_fwd_B16"]:
+        bad("train_flops.json",
+            "train fwd != engine_flops.json ae_fwd_B16 (same trace)")
+
+    tb = _load(base_dir, "train_bytes.json")
+    fused, two = tb["ae_train_B16"]["fused"], tb["ae_train_B16"]["two_pass"]
+    if not fused["bwd"] < two["bwd"]:
+        bad("train_bytes.json", "fused bwd bytes not below two-pass")
+    fp8 = tb["ae_train_fp8"]
+    if not fp8["total"] < fp8["fp16_total"]:
+        bad("train_bytes.json", "FP8 train bytes not below FP16")
+    if fp8["engine_flops"] != tr["total"]:
+        bad("train_bytes.json",
+            "FP8 trace flops != FP16 train total (narrower storage drops "
+            "bytes, never flops)")
+
+    sv = _load(base_dir, "serve_bytes.json")
+    try:
+        from repro import configs            # deferred: needs jax
+        from repro.serving import decode_step_kv_bytes
+        for arch in ("yi-9b", "deepseek-moe-16b"):
+            cfg = configs.get_reduced(arch)
+            want16 = decode_step_kv_bytes(cfg, sv["lengths"])
+            want8 = decode_step_kv_bytes(cfg, sv["lengths"],
+                                         "float8_e4m3fn")
+            if sv[arch]["fp16_bytes"] != want16:
+                bad("serve_bytes.json",
+                    f"{arch}: fp16_bytes {sv[arch]['fp16_bytes']} != "
+                    f"analytic {want16}")
+            if sv[arch]["fp8_bytes"] != want8:
+                bad("serve_bytes.json",
+                    f"{arch}: fp8_bytes {sv[arch]['fp8_bytes']} != "
+                    f"analytic {want8}")
+            if not sv[arch]["fp8_bytes"] < sv[arch]["fp16_bytes"]:
+                bad("serve_bytes.json", f"{arch}: fp8 not below fp16")
+    except ImportError as e:
+        bad("serve_bytes.json", f"cannot recompute analytically: {e}")
+
+    co = _load(base_dir, "collective_bytes.json")["collective_bytes"]
+    n_params = co["fp32"] // 4
+    if co["fp32"] != 4 * n_params:
+        bad("collective_bytes.json", "fp32 bytes not 4 B/param")
+    if co["fp16"] != 2 * n_params:
+        bad("collective_bytes.json", "fp16 wire != 2 B/param of the fp32 "
+            "wire's parameter count")
+    for kind in ("fp8_e4m3", "int8"):
+        if kind in co and not n_params < co[kind] < co["fp16"]:
+            bad("collective_bytes.json",
+                f"{kind} wire must be 1 B/param + per-leaf scales: "
+                f"{n_params} < {co[kind]} < {co['fp16']} fails")
+    return out
+
+
+def validate_escape_manifest(path: str = DEFAULT_MANIFEST) -> List[Violation]:
+    out: List[Violation] = []
+    try:
+        with open(path) as fh:
+            m = json.load(fh)
+    except (OSError, ValueError) as e:
+        return [_v(path, 0, "manifest", f"unreadable manifest: {e}")]
+    for entry in m.get("ast", []):
+        f = entry.get("file", "")
+        if not os.path.exists(os.path.join(_REPO_ROOT, f)):
+            out.append(_v(path, 0, "manifest",
+                          f"ast entry names missing file {f!r}"))
+    for name, escapes in m.get("jaxpr", {}).items():
+        for e in escapes:
+            if "fingerprint" not in e or int(e.get("count", 0)) <= 0:
+                out.append(_v(path, 0, "manifest",
+                              f"jaxpr entry {name}: malformed {e!r}"))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------- #
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--manifest", default=DEFAULT_MANIFEST)
+    ap.add_argument("--autotune-cache", action="append", default=[],
+                    metavar="PATH", help="autotune cache JSON(s) to "
+                    "validate (repeatable)")
+    ap.add_argument("--no-artifacts", action="store_true",
+                    help="AST rules only (skip baseline/cache validation)")
+    args = ap.parse_args(argv)
+
+    violations = lint_sources(manifest_path=args.manifest)
+    violations += validate_escape_manifest(args.manifest)
+    if not args.no_artifacts:
+        violations += validate_baselines()
+        for path in args.autotune_cache:
+            violations += validate_autotune_cache(path)
+
+    for v in violations:
+        print(str(v), file=sys.stderr)
+    if violations:
+        print(f"[lint] FAIL — {len(violations)} violation(s)",
+              file=sys.stderr)
+        return 1
+    print("[lint] OK — repo invariants and shipped artifacts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

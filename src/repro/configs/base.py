@@ -11,7 +11,6 @@ Every assigned architecture provides:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

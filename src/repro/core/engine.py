@@ -288,6 +288,24 @@ class GemmSpec:
         return 2 * self.batch * self.m * self.valid_rows * self.k
 
     @property
+    def dense_flops(self) -> int:
+        """Flops of the *dense* contraction this spec lowers to
+        (``2 * B * G * M * N * K``), ignoring ragged ``valid_rows``
+        billing.
+
+        Ragged grouped GEMMs bill only their valid rows in :attr:`flops`,
+        but the ``dot_general`` the XLA backend emits is dense — masking
+        happens around it, not inside it.  ``dense_flops`` is therefore
+        the quantity the static escape auditor
+        (:mod:`repro.analysis.jaxpr_audit`) uses to reconcile engine
+        dispatches against the equations found in a traced jaxpr.  Pass
+        events (``*_dact`` / ``*_dbias`` / ``*_postep``) lower no
+        contraction and report 0."""
+        if is_pass_op(self.op):
+            return 0
+        return 2 * self.batch * self.groups * self.m * self.n * self.k
+
+    @property
     def bytes(self) -> int:
         """HBM-side operand + result bytes of one execution.
 
@@ -416,6 +434,24 @@ def total_flops(events: Sequence[GemmEvent]) -> int:
 
 def total_bytes(events: Sequence[GemmEvent]) -> int:
     return sum(ev.total_bytes for ev in events)
+
+
+def dispatch_footprint(events: Sequence[GemmEvent]) -> Dict[int, int]:
+    """Map ``dense_flops -> total dispatch count`` over an event stream.
+
+    The trace-capture hook for the static escape auditor: each non-pass
+    engine dispatch lowers to exactly one ``dot_general`` on the XLA
+    backend, costing :attr:`GemmSpec.dense_flops`, with trace multiplicity
+    ``count``.  The auditor subtracts this footprint from the multiset of
+    contractions found by walking the same trace's jaxpr; whatever remains
+    escaped the Engine."""
+    foot: Dict[int, int] = {}
+    for ev in events:
+        df = ev.spec.dense_flops
+        if df <= 0:
+            continue
+        foot[df] = foot.get(df, 0) + ev.count
+    return foot
 
 
 def summarize(events: Sequence[GemmEvent]) -> Dict[str, Dict[str, float]]:

@@ -69,11 +69,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import CompilerParams as _CompilerParams
-
 from repro.core import epilogues as epi
 from repro.core import precision as prec
 from repro.core import tiling
+from repro.kernels import CompilerParams as _CompilerParams
 
 __all__ = ["redmule_matmul_pallas", "redmule_matmul_batched_pallas", "LAYOUTS"]
 

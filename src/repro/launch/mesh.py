@@ -13,8 +13,6 @@ from __future__ import annotations
 
 from typing import Tuple
 
-import jax
-
 from repro.runtime import compat
 
 __all__ = ["make_production_mesh", "data_axes", "make_host_mesh"]

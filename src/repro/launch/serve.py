@@ -20,7 +20,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -38,19 +38,16 @@ machine with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 from __future__ import annotations
 
 import argparse
-import functools
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.checkpoint import CheckpointManager
 from repro.core import engine
 from repro.data import Prefetcher, SyntheticLM
-from repro.models import layers as L
 from repro.models import transformer
 from repro.optim import (AdamW, Compressor, OptState, adjust,
                          clip_by_global_norm, init_scale, scale_loss,

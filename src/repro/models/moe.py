@@ -33,6 +33,15 @@ from repro.runtime import compat, sharding
 __all__ = ["moe_schema", "moe_forward"]
 
 
+def _combine_policy(policy: prec.Policy) -> prec.Policy:
+    """Combiner precision: gate-weighted slot reduction in the datapath
+    compute dtype with an fp32 accumulator/output (like the router, the
+    combine wants full-precision arithmetic regardless of any FP8
+    storage the expert GEMMs declare)."""
+    return prec.Policy("moe_combine", policy.compute_dtype,
+                       jnp.float32, jnp.float32)
+
+
 def moe_schema(cfg) -> Dict[str, Any]:
     mo = cfg.moe
     d, E, f = cfg.d_model, mo.n_routed, mo.d_expert
@@ -150,10 +159,12 @@ def moe_forward(
     w_u = jnp.take_along_axis(w_slot, inv, axis=1)
     slot_u = jnp.take_along_axis(flat, dest_u[..., None], axis=1)  # (B,S*k,d)
     slot_u = sharding.constrain_both(slot_u, "batch", None, None)
-    contrib = slot_u * w_u[..., None].astype(slot_u.dtype)      # stay 16-bit
-    y = jnp.einsum(
-        "bskd->bsd", contrib.reshape(B, S, k, d),
-        preferred_element_type=jnp.float32).astype(x.dtype)
+    # combine is a contraction over the k routed slots — an Engine GEMM
+    # like any other (events, autotuned tiles), fp32-accumulated with the
+    # operands staying in the 16-bit compute dtype
+    y = engine.einsum2d(
+        "bskd,bsk->bsd", slot_u.reshape(B, S, k, d), w_u.reshape(B, S, k),
+        policy=_combine_policy(policy)).astype(x.dtype)
     y = sharding.constrain_both(y, "batch", None, None)
 
     if "shared" in params:
@@ -257,9 +268,10 @@ def moe_forward_shard_map(
         dest_u = jnp.take_along_axis(dest, inv, axis=1)
         w_u = jnp.take_along_axis(w_slot, inv, axis=1)
         slot_u = jnp.take_along_axis(flat, dest_u[..., None], axis=1)
-        contrib = slot_u * w_u[..., None].astype(slot_u.dtype)
-        y = jnp.einsum("bskd->bsd", contrib.reshape(Bl, S, k, d),
-                       preferred_element_type=jnp.float32).astype(x_l.dtype)
+        y = engine.einsum2d(
+            "bskd,bsk->bsd", slot_u.reshape(Bl, S, k, d),
+            w_u.reshape(Bl, S, k),
+            policy=_combine_policy(policy)).astype(x_l.dtype)
         # restore the model-replicated row layout
         y = jax.lax.all_gather(y, "model", axis=0, tiled=True)  # (B_loc, S, d)
 

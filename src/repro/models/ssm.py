@@ -14,7 +14,6 @@ paper-inapplicable — no GEMM shape in the recurrence); it runs as a
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -16,14 +16,12 @@ forward / loss_fn / serve_step / init_cache / count_params``.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core import precision as prec
 from repro.models import attention, layers, moe, ssm
 from repro.models.layers import Param
 from repro.runtime import sharding

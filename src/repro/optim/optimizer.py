@@ -7,7 +7,7 @@ the paper's FP16 regime keeps master state in the widest affordable type).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

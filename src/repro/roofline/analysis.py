@@ -24,12 +24,23 @@ Collectives inside ``while`` bodies (lax.scan layers, q-chunk loops) execute
 ``known_trip_count`` times — we build the computation call graph (while
 body/condition, fusion calls, conditionals) and multiply each computation's
 collectives by its effective trip multiplier.
+
+Relation to :mod:`repro.analysis.jaxpr_audit`: both walk a staged program,
+but at different layers and for different questions.  This module parses
+**post-compilation HLO text** — after SPMD partitioning, fusion, and
+layout assignment — to estimate *cost* (seconds per device); it sees what
+the hardware will actually run, but individual contractions have been
+fused beyond recognition.  The jaxpr auditor walks the **pre-lowering
+jaxpr** — before XLA touches it — to check *provenance*: every
+``dot_general`` still corresponds 1:1 to a Python-level contraction
+there, so it can be reconciled against the Engine's ``GemmEvent`` stream
+and escapes attributed to a source path.  Use this module to ask "how
+long", the auditor to ask "who issued this GEMM".
 """
 
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -10,7 +10,7 @@ difference lives in exactly one place.
 from __future__ import annotations
 
 import contextlib
-from typing import Optional, Sequence, Tuple
+from typing import Sequence
 
 import jax
 
