@@ -6,18 +6,53 @@ two offered loads each — the ``serve/*`` rows land in BENCH_engine.json
 so the serving latency/throughput trajectory is diffable across commits
 (absolute numbers are host-CPU emulation timings; the load-vs-latency
 *shape* and the batch-fill ratios are the signal).
+
+The ``serve/*/slo_*`` rows replay the pinned SLO scenario from
+``benchmarks/baselines/serve_slo.json`` — deadlines, bounded admission,
+and one injected serving fault (``nan_logits`` / ``kv_corrupt``) per
+run — so the serve-goodput cost of recovery is diffable too (the gate
+itself lives in tests/test_serve_resilience.py, the
+``serve-resilience-gates`` CI job).
 """
 
 import dataclasses
+import json
+import os
 
 import jax
 
 from repro import configs
 from repro.models import transformer
-from repro.serving import LoadConfig, SchedulerConfig, bench_rows
+from repro.runtime.fault_tolerance import FailureInjector
+from repro.serving import LoadConfig, SchedulerConfig, bench_rows, slo_rows
 
 ARCHS = ("yi-9b", "deepseek-moe-16b")
 RATES = (0.25, 1.0)
+SLO_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                            "serve_slo.json")
+
+
+def _slo_scenario_rows():
+    with open(SLO_BASELINE) as f:
+        sc = json.load(f)["scenario"]
+    cfg = configs.get_reduced(sc["arch"])
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = SchedulerConfig(
+        n_slots=sc["n_slots"], max_len=sc["max_len"],
+        storage_dtype=sc["storage_dtype"], max_queue=sc["max_queue"],
+        audit_every=sc["audit_every"])
+    lc = LoadConfig(
+        rate=sc["rate"], n_requests=sc["n_requests"],
+        prompt_len=sc["prompt_len"], gen_len=sc["gen_len"], seed=sc["seed"],
+        deadline_ticks=sc["deadline_ticks"], max_retries=sc["max_retries"])
+    rows = []
+    for mode in (None, "nan_logits", "kv_corrupt"):
+        injector = None if mode is None else FailureInjector(
+            fail_at_step=sc["inject_step"], mode=mode)
+        r, _ = slo_rows(params, cfg, scfg, sc["arch"], lc, injector=injector,
+                        tag=f"slo_{mode}" if mode else "slo")
+        rows += r
+    return rows
 
 
 def run():
@@ -32,4 +67,5 @@ def run():
         lc = LoadConfig(rate=1.0, n_requests=6, prompt_len=6, gen_len=6,
                         seed=0)
         rows += bench_rows(params, cfg, scfg, arch, RATES, lc)
+    rows += _slo_scenario_rows()
     return rows

@@ -9,6 +9,10 @@ in seconds on CPU.  The registry mirrors the CI-gated workloads:
   the same trace the ``train-gates`` flop baseline pins;
 * ``yi9b_decode`` — one continuous-batching decode step on reduced
   yi-9b with the FP8 KV cache, the ``serve-gates`` trace;
+* ``serve_recover`` — the serving resilience rebuild path
+  (docs/serving.md failure model): re-prefill of ``prompt + emitted``,
+  the batch-1 replay decode step, and the slot re-insert into the FP8
+  pool — the ``serve-resilience-gates`` trace;
 * ``deepseek_moe_fwd`` — reduced deepseek-moe forward (router, grouped
   expert GEMMs, combiner);
 * ``xlstm_fwd`` — reduced xlstm forward: the sLSTM recurrent scan is the
@@ -62,6 +66,36 @@ def _yi9b_decode() -> EntrySpec:
     return step, (params, cache, tok, pos)
 
 
+def _serve_recover() -> EntrySpec:
+    from repro import configs
+    from repro.models import transformer
+    from repro.serving import kv_cache
+
+    cfg = configs.get_reduced("yi-9b")
+    params = transformer.abstract_params(cfg)
+    n, max_len, plen = 4, 32, 12
+    pool = jax.eval_shape(lambda: transformer.init_cache(
+        cfg, n, max_len, dtype=cfg.policy.compute_dtype,
+        storage_dtype="float8_e4m3fn"))
+    seq = jax.ShapeDtypeStruct((1, plen), jnp.int32)
+    tok = jax.ShapeDtypeStruct((1, 1), jnp.int32)
+    sizes = np.asarray([plen + 1], np.int32)  # static ragged billing
+
+    def recover(p, pool_, seq_, tok_):
+        # the scheduler's _rebuild_slot: re-prefill the absorbed tokens,
+        # replay the poisoned decode step batch-1, re-insert the slot
+        _, single = transformer.prefill(
+            p, cfg, {"inputs": seq_}, max_len,
+            storage_dtype="float8_e4m3fn")
+        row, single = transformer.serve_step(
+            p, cfg, tok_, single, jnp.int32(plen), kv_group_sizes=sizes)
+        pool2 = kv_cache.insert_slot(pool_, single, jnp.int32(2),
+                                     cfg.policy.compute_dtype)
+        return row, pool2
+
+    return recover, (params, pool, seq, tok)
+
+
 def _lm_fwd(arch: str, batch: int, seq: int) -> EntrySpec:
     from repro import configs
     from repro.models import transformer
@@ -87,6 +121,7 @@ def _xlstm_fwd() -> EntrySpec:
 ENTRY_POINTS: Dict[str, Callable[[], EntrySpec]] = {
     "ae_train": _ae_train,
     "yi9b_decode": _yi9b_decode,
+    "serve_recover": _serve_recover,
     "deepseek_moe_fwd": _deepseek_moe_fwd,
     "xlstm_fwd": _xlstm_fwd,
 }

@@ -151,19 +151,36 @@ def generate(params, cfg, prompts: jax.Array, gen_len: int,
 # --------------------------------------------------------------------- #
 # CLI
 # --------------------------------------------------------------------- #
+def _parse_inject(spec: str):
+    """``MODE@STEP`` -> FailureInjector with a serving mode (docs/serving.md),
+    e.g. ``nan_logits@2``, ``kv_corrupt@3``, ``prefill_crash@1``."""
+    from repro.runtime.fault_tolerance import FailureInjector
+    mode, _, at = spec.partition("@")
+    if mode not in FailureInjector.SERVING_MODES or not at.isdigit():
+        raise SystemExit(
+            f"--inject wants MODE@STEP with MODE in "
+            f"{FailureInjector.SERVING_MODES}, got {spec!r}")
+    return FailureInjector(fail_at_step=int(at), mode=mode)
+
+
 def _run_sched(cfg, params, args) -> None:
     if args.policy:
         # FP8 end to end: the decode GEMMs dispatch under the policy's
         # per-operand storage dtypes (MIXED_FP8_E4M3 by default), on top
         # of the FP8 KV cache selected by --storage
         cfg = dataclasses.replace(cfg, policy_name=args.policy)
+    resilient = bool(args.inject or args.deadline or args.max_queue)
+    audit = args.audit_every if args.audit_every is not None else \
+        (1 if args.inject else 0)
     scfg = sched_lib.SchedulerConfig(
         n_slots=args.slots, max_len=args.prompt_len + args.gen + 4,
-        storage_dtype=args.storage or None)
+        storage_dtype=args.storage or None,
+        max_queue=args.max_queue or None, audit_every=audit)
     rates = [float(r) for r in args.rates.split(",")]
     lc = loadgen_lib.LoadConfig(
         rate=rates[0], n_requests=args.requests,
-        prompt_len=args.prompt_len, gen_len=args.gen, seed=args.seed)
+        prompt_len=args.prompt_len, gen_len=args.gen, seed=args.seed,
+        deadline_ticks=args.deadline or None, max_retries=args.retries)
 
     if args.instrument:
         # one sweep under instrumentation: the jit traces of the serving
@@ -192,6 +209,20 @@ def _run_sched(cfg, params, args) -> None:
 
     rows = loadgen_lib.bench_rows(
         params, cfg, scfg, cfg.name, rates, lc)
+    if resilient:
+        # the SLO scenario: deadlines / bounded queue / injected fault at
+        # the first offered rate — a fresh one-shot injector per run
+        injector = _parse_inject(args.inject) if args.inject else None
+        tag = f"slo_{injector.mode}" if injector else "slo"
+        srows, m = loadgen_lib.slo_rows(
+            params, cfg, scfg, cfg.name, lc, injector=injector, tag=tag)
+        rows += srows
+        print(f"[slo] goodput={m['slo_goodput']:.4f} "
+              f"deadline_hit={m['deadline_hit_rate']:.3f} "
+              f"finished={m['n_finished']}/{m['n_requests']} "
+              f"retries={m['retries']} abandons={m['abandons']} "
+              f"recoveries={m['slo_recoveries']:.0f} "
+              f"shed={m['slo_shed']:.0f} expired={m['slo_expired']:.0f}")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
     if args.json:
@@ -229,6 +260,22 @@ def main(argv=None):
                         "('' keeps the arch default)")
     p.add_argument("--json", default="BENCH_engine.json",
                    help="--sched: merge rows into this file ('' to skip)")
+    p.add_argument("--inject", default="",
+                   help="--sched: serving fault MODE@STEP "
+                        "(nan_logits/kv_corrupt at the Nth decode step, "
+                        "prefill_crash at the Nth prefill); adds the "
+                        "serve/*/slo_* recovery rows")
+    p.add_argument("--deadline", type=float, default=0.0,
+                   help="--sched: per-request deadline budget in ticks "
+                        "(0 = none); expired work is evicted")
+    p.add_argument("--max-queue", type=int, default=0,
+                   help="--sched: bounded admission queue (0 = unbounded); "
+                        "overflow is rejected with retry_after")
+    p.add_argument("--retries", type=int, default=2,
+                   help="--sched: loadgen client retry budget per rejection")
+    p.add_argument("--audit-every", type=int, default=None,
+                   help="--sched: KV checksum audit cadence in decode steps "
+                        "(default: 1 when --inject is set, else off)")
     args = p.parse_args(argv)
 
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)

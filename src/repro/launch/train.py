@@ -175,45 +175,63 @@ def build_compressed_dp_train_step(
     The per-shard gradient is computed inside shard_map over the data axes
     (params replicated, batch sharded); the cross-shard mean runs on the
     compressor's wire dtype (fp16/int8 + error feedback) instead of fp32 —
-    the distributed-optimization trick for slow inter-pod links.  State
-    carries the fp32 error-feedback buffers.
+    the distributed-optimization trick for slow inter-pod links.
 
-    Returns (step, init_fn) where state = (TrainState, ef_tree).
+    The error-feedback state (fp32 residual + fp8 scale windows) is
+    genuinely per-host — each host accumulates the residual of *its* batch
+    shard — so it carries an explicit leading host axis, sharded over the
+    data axes.  Storing it "replicated" would silently checkpoint only
+    host 0's residual (shard_map's ``check_rep=False`` stamps the
+    out-spec without verifying it), breaking bit-identical kill/resume.
+
+    Returns (step, init_fn) where state = (TrainState, ef_hosts).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as Pspec
 
     dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    ndev = 1
+    for a in dp:
+        ndev *= mesh.shape[a]
 
     def init_fn(rng):
         state = init_state(rng, cfg, opt)
-        return state, compressor.init(state.params)
+        ef = compressor.init(state.params)
+        if ef is not None:
+            ef = jax.tree.map(lambda l: jnp.stack([l] * ndev), ef)
+        return state, ef
 
     def step(state_and_ef, batch):
-        state, ef = state_and_ef
+        state, ef_hosts = state_and_ef
 
-        def local(params, ef_l, batch_l):
+        def local(params, ef_h, batch_l):
             loss, grads = jax.value_and_grad(
                 lambda p: transformer.loss_fn(p, cfg, batch_l)[0])(params)
+            # strip this host's slot off the leading host axis, compress,
+            # and put the new residual back in the same slot
+            ef_l = (jax.tree.map(lambda x: x[0], ef_h)
+                    if ef_h is not None else None)
             wire, ef2 = compressor.compress(grads, ef_l)
             mean_g = compressor.psum_wire(wire, dp)
+            ef2_h = (jax.tree.map(lambda x: x[None], ef2)
+                     if ef2 is not None else None)
             loss = jax.lax.pmean(loss, dp)
-            return mean_g, ef2, loss
+            return mean_g, ef2_h, loss
 
         pspec = jax.tree.map(lambda _: Pspec(), state.params)
-        espec = jax.tree.map(lambda _: Pspec(), ef)
+        espec = jax.tree.map(lambda _: Pspec(dp), ef_hosts)
         bspec = jax.tree.map(lambda _: Pspec(dp), batch)
-        mean_g, ef, loss = shard_map(
+        mean_g, ef_hosts, loss = shard_map(
             local, mesh,
             in_specs=(pspec, espec, bspec),
             out_specs=(pspec, espec, Pspec()),
             check_rep=False,
-        )(state.params, ef, batch)
+        )(state.params, ef_hosts, batch)
 
         mean_g, gnorm = clip_by_global_norm(mean_g, clip_norm)
         updates, new_opt = opt.update(mean_g, state.opt, state.params)
         params = opt.apply(state.params, updates)
-        return (TrainState(params, new_opt, state.scale), ef), {
+        return (TrainState(params, new_opt, state.scale), ef_hosts), {
             "loss": loss, "grad_norm": gnorm}
 
     return step, init_fn
@@ -287,8 +305,12 @@ def _print_goodput(out):
 def _compressed_dp_main(args, cfg):
     """Data-parallel training with a compressed gradient wire (and the
     fault-tolerant loop when --ckpt-dir is set)."""
+    import json
+
     from repro.optim import Compressor
     from repro.runtime import compat
+    from repro.runtime.elastic import _digest
+    from repro.runtime.fault_tolerance import FailureInjector
 
     ndev = args.dp_procs or len(jax.devices())
     if len(jax.devices()) < ndev:
@@ -316,12 +338,33 @@ def _compressed_dp_main(args, cfg):
               f"bytes/step={wire} fp32_bytes/step={full} "
               f"ratio={full / max(wire, 1):.2f}x")
 
-    jstep = jax.jit(step)
+    # Canonical placement — the bit-identical-resume invariant (mirrors
+    # runtime/elastic.py).  A resumed process's first step receives host
+    # (np) arrays from the checkpoint while a clean run's steps receive
+    # the previous step's device outputs; pinned in_/out_shardings force
+    # every step of every incarnation through one executable and one
+    # placement: TrainState replicated, EF sharded over the host axis,
+    # batch sharded over data.
+    rep = NamedSharding(mesh, P())
+    dp_sh = NamedSharding(mesh, P("data"))
+    ts0, ef0 = jax.eval_shape(init_fn, jax.random.PRNGKey(args.seed))
+    state_sh = (jax.tree.map(lambda _: rep, ts0),
+                jax.tree.map(lambda _: dp_sh, ef0))
+    jstep = jax.jit(step, in_shardings=(state_sh, dp_sh),
+                    out_shardings=(state_sh, rep))
+    injector = None
+    if args.fail_step is not None:
+        injector = FailureInjector(fail_at_step=args.fail_step,
+                                   mode=args.fail_mode)
+    final_state, final_loss = state, float("nan")
     if args.ckpt_dir:
         ckpt = CheckpointManager(args.ckpt_dir, keep=2)
-        loop = TrainLoop(jstep, ckpt, save_every=args.save_every)
+        loop = TrainLoop(jstep, ckpt, save_every=args.save_every,
+                         injector=injector)
         out = loop.run(state, ds.batch, args.steps)
-        print(f"final loss: {out['history'][-1]['loss']:.4f} "
+        final_state = out["final_state"]
+        final_loss = float(out["history"][-1]["loss"])
+        print(f"final loss: {final_loss:.4f} "
               f"(stragglers: {out['straggler_steps']})")
         if args.instrument:
             _print_goodput(out)
@@ -331,7 +374,18 @@ def _compressed_dp_main(args, cfg):
             state, metrics = jstep(state, ds.batch(i))
             if i % 10 == 0:
                 print(f"[{i}] loss={float(metrics['loss']):.4f}")
-        print(f"final loss: {float(metrics['loss']):.4f}")
+        final_state, final_loss = state, float(metrics["loss"])
+        print(f"final loss: {final_loss:.4f}")
+    if args.result:
+        res = {
+            "digest": _digest(final_state[0].params),
+            "ef_digest": _digest(final_state[1]),
+            "opt_digest": _digest(final_state[0].opt),
+            "loss": final_loss,
+        }
+        with open(args.result, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"[ft] result digests -> {args.result}")
 
 
 def _print_instrument_summary(events):
@@ -423,6 +477,16 @@ def main(argv=None):
                    help="data-parallel width; 0 = all visible devices "
                         "(simulate N on one host with XLA_FLAGS="
                         "--xla_force_host_platform_device_count=N)")
+    p.add_argument("--fail-step", type=int, default=None,
+                   help="inject a failure at this step on the compressed-DP "
+                        "path (kill/resume digest testing; needs --ckpt-dir)")
+    p.add_argument("--fail-mode", default="die",
+                   choices=("raise", "die", "sigterm", "ckpt_crash"),
+                   help="failure kind for --fail-step")
+    p.add_argument("--result", default="",
+                   help="write final params/EF/opt sha256 digests + loss as "
+                        "JSON (compressed-DP path; bit-identical-resume "
+                        "verification)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 

@@ -66,23 +66,52 @@ class FailureInjector:
       after ``fail_at_step``: a torn ``.tmp`` payload is left behind and
       the process hard-exits mid-save.  The atomic-rename contract means
       resume must land on the previous complete checkpoint.
+
+    Serving modes (consumed by ``serving/scheduler.py`` via :meth:`fires`;
+    no-ops in the training loop — see docs/serving.md for the detection
+    and recovery each one exercises):
+
+    * ``"nan_logits"``    — poison the decode output of one slot at the
+      ``fail_at_step``-th batched decode step (NaN logits, the FP8
+      scale-overflow failure shape).
+    * ``"kv_corrupt"``    — bit-flip the stored KV rows of one slot after
+      the ``fail_at_step``-th decode step (caught by the checksum audit).
+    * ``"prefill_crash"`` — raise inside the ``fail_at_step``-th prefill
+      dispatch (the scheduler retries; one-shot, so the retry succeeds).
+
+    ``target`` optionally names the victim request id for the serving
+    modes; ``None`` lets the scheduler pick the lowest-rid active slot.
     """
 
-    MODES = ("raise", "die", "sigterm", "ckpt_crash")
+    SERVING_MODES = ("nan_logits", "kv_corrupt", "prefill_crash")
+    MODES = ("raise", "die", "sigterm", "ckpt_crash") + SERVING_MODES
 
     def __init__(self, fail_at_step: Optional[int] = None,
-                 mode: str = "raise", exit_code: int = 13):
+                 mode: str = "raise", exit_code: int = 13,
+                 target: Optional[int] = None):
         if mode not in self.MODES:
             raise ValueError(
                 f"unknown failure mode {mode!r}; known: {self.MODES}")
         self.fail_at_step = fail_at_step
         self.mode = mode
         self.exit_code = exit_code
+        self.target = target
         self.fired = False
 
     def _armed(self, step: int) -> bool:
         return (self.fail_at_step is not None and not self.fired
                 and step >= self.fail_at_step)
+
+    def fires(self, step: int, mode: str) -> bool:
+        """One-shot serving-fault trigger: True exactly once, at the first
+        call whose ``step`` counter has reached ``fail_at_step`` with a
+        matching ``mode``.  The serving scheduler owns the counters —
+        ``prefill_crash`` counts prefill attempts, ``nan_logits`` and
+        ``kv_corrupt`` count batched decode steps (both 1-based)."""
+        if self.mode != mode or not self._armed(step):
+            return False
+        self.fired = True
+        return True
 
     def maybe_fail(self, step: int) -> None:
         """Called by the loop at the top of each step."""

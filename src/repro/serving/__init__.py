@@ -1,22 +1,29 @@
 """Serving subsystem: the first layer above the Engine that models
 production traffic — continuous-batching scheduler, FP8 KV cache
-admission + byte accounting, Poisson load generation (docs/serving.md).
+admission + byte accounting, Poisson load generation, and the
+resilience layer (deadlines, admission control, fault recovery, serve
+goodput) (docs/serving.md).
 """
 
-from repro.serving.kv_cache import (cache_size_bytes, decode_step_kv_bytes,
-                                    insert_slot, is_fp8_cache, scale_health)
+from repro.serving.kv_cache import (cache_size_bytes, corrupt_slot_rows,
+                                    decode_step_kv_bytes, insert_slot,
+                                    is_fp8_cache, scale_health,
+                                    slot_checksum)
 from repro.serving.loadgen import (LoadConfig, bench_rows, merge_bench_json,
-                                   poisson_requests, run_load)
+                                   poisson_requests, run_load, slo_rows)
+from repro.serving.resilience import (Rejection, ServeGoodputMeter,
+                                      ShedPolicy, SlotGuard)
 from repro.serving.scheduler import (Request, RequestResult, Scheduler,
                                      SchedulerConfig,
                                      instrumented_decode_events)
 from repro.serving.specs import decode_cache_specs
 
 __all__ = [
-    "cache_size_bytes", "decode_step_kv_bytes", "insert_slot",
-    "is_fp8_cache", "scale_health",
+    "cache_size_bytes", "corrupt_slot_rows", "decode_step_kv_bytes",
+    "insert_slot", "is_fp8_cache", "scale_health", "slot_checksum",
     "LoadConfig", "bench_rows", "merge_bench_json", "poisson_requests",
-    "run_load",
+    "run_load", "slo_rows",
+    "Rejection", "ServeGoodputMeter", "ShedPolicy", "SlotGuard",
     "Request", "RequestResult", "Scheduler", "SchedulerConfig",
     "instrumented_decode_events",
     "decode_cache_specs",

@@ -18,14 +18,22 @@ per-head delayed scales).  This module owns the two serving-side pieces:
   either way, which is also why flops are identical across storage
   dtypes), so cache-storage traffic needs its own model.  These feed the
   ``benchmarks/baselines/serve_bytes.json`` CI gate.
+
+* Slot integrity (:func:`slot_checksum`, :func:`corrupt_slot_rows`) —
+  CRC32 over one slot's *stored* KV rows (raw bytes, so FP8 and FP16
+  pools are covered uniformly), used by the scheduler's audit cadence
+  to detect bit-flipped cache state, plus the matching deterministic
+  corruptor the fault injector uses (docs/serving.md failure model).
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence
+import zlib
+from typing import Any, Dict, Iterator, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import precision as prec
 from repro.models import attention
@@ -35,7 +43,8 @@ CacheTree = Dict[str, Any]
 __all__ = [
     "is_fp8_cache", "insert_slot", "n_cache_layers", "token_elems",
     "n_scale_elems", "storage_width", "decode_step_kv_bytes",
-    "cache_size_bytes", "scale_health",
+    "cache_size_bytes", "scale_health", "iter_kv_leaves",
+    "slot_checksum", "corrupt_slot_rows",
 ]
 
 
@@ -114,6 +123,86 @@ def insert_slot(pool: CacheTree, single: CacheTree, slot,
             "slot insertion supports attn/moe (gqa/MLA) caches only")
 
     return {key: sub(pool[key], single[key]) for key in pool}
+
+
+# --------------------------------------------------------------------- #
+# Slot integrity: checksums + deterministic corruption
+# --------------------------------------------------------------------- #
+def iter_kv_leaves(cache: CacheTree) -> Iterator[Tuple[str, str, Any, int]]:
+    """Yield ``(key, name, leaf, batch_axis)`` for every KV data leaf.
+
+    Covers the gqa (``k``/``v``, trailing ``(B, Hkv, T, hd)``) and MLA
+    (``ckv``/``kr``, trailing ``(B, T, r)``) subtrees, stacked or not;
+    scale-state leaves are skipped.  The sequence axis is always the
+    second-to-last axis of the leaf.
+    """
+    for key, sub in cache.items():
+        if not isinstance(sub, dict):
+            continue
+        if "k" in sub:
+            names, tail = ("k", "v"), 4
+        elif "ckv" in sub:
+            names, tail = ("ckv", "kr"), 3
+        else:
+            continue
+        for name in names:
+            leaf = sub[name]
+            yield key, name, leaf, leaf.ndim - tail
+
+
+def slot_checksum(cache: CacheTree, slot: int, length: int) -> int:
+    """CRC32 over the raw stored bytes of one slot's first ``length`` rows.
+
+    Hashes the *storage* representation (FP8 codes or FP16 halves) of
+    every cached layer, so any bit flip in the slot's valid rows changes
+    the digest.  Pool-wide scale state is deliberately excluded: under
+    ratcheted delayed scaling an unrelated slot's admission may requantize
+    the whole pool, which is why the scheduler re-arms guards after every
+    cache mutation rather than only at insert.
+    """
+    crc = 0
+    for _key, _name, leaf, bax in iter_kv_leaves(cache):
+        arr = np.asarray(leaf)
+        rows = np.take(arr, int(slot), axis=bax)[..., :int(length), :]
+        crc = zlib.crc32(np.ascontiguousarray(rows).tobytes(), crc)
+    return crc
+
+
+def corrupt_slot_rows(cache: CacheTree, slot: int,
+                      rows: Sequence[int]) -> CacheTree:
+    """Bit-flip the stored bytes of ``rows`` in one slot (fault injection).
+
+    Deterministic (XOR ``0xFF`` on every byte of the named rows across
+    all cached layers), dtype-agnostic, and confined to ``slot`` — the
+    matching :func:`slot_checksum` audit must flag exactly this slot and
+    no co-resident one.  Returns a new cache tree; scale state is left
+    untouched (real corruption hits the payload, and detection must not
+    depend on the corruptor being polite).
+    """
+    idx = np.asarray(sorted({int(r) for r in rows}), np.intp)
+
+    def flip(leaf, bax):
+        arr = np.array(leaf)  # host copy we can mutate in place
+        sel: list = [slice(None)] * arr.ndim
+        sel[bax] = int(slot)
+        slot_view = arr[tuple(sel)]
+        row_sel: list = [slice(None)] * slot_view.ndim
+        row_sel[-2] = idx
+        chunk = np.ascontiguousarray(slot_view[tuple(row_sel)])
+        flipped = (chunk.view(np.uint8) ^ np.uint8(0xFF)).view(chunk.dtype)
+        slot_view[tuple(row_sel)] = flipped
+        return jnp.asarray(arr)
+
+    out: CacheTree = {}
+    flipped_leaves = {(k, n): flip(leaf, bax)
+                      for k, n, leaf, bax in iter_kv_leaves(cache)}
+    for key, sub in cache.items():
+        if not isinstance(sub, dict):
+            out[key] = sub
+            continue
+        out[key] = {name: flipped_leaves.get((key, name), leaf)
+                    for name, leaf in sub.items()}
+    return out
 
 
 # --------------------------------------------------------------------- #

@@ -1,13 +1,22 @@
-"""Poisson load generator + latency/throughput metrics for the scheduler.
+"""Poisson load generator + latency/throughput/SLO metrics for the scheduler.
 
 Offered load is requests per *tick* (one tick == one batched decode
 step); the seeded ``numpy.random.default_rng`` stream makes every sweep
 reproducible bit for bit.  Per-request metrics are time-to-first-token
 (ticks, includes queueing) and end-to-end tokens/tick; aggregation is
-p50/p99 over the request population.  :func:`bench_rows` converts a
-sweep into ``serve/*`` rows for ``benchmarks/run.py`` /
-``BENCH_engine.json``, using the measured wall seconds-per-tick to
-express throughput in tokens/s.
+p50/p99 over the **finished** request population — rejected, shed, and
+expired requests are excluded explicitly (their latency properties are
+``nan`` by contract) and reported through their own counters.
+:func:`bench_rows` converts a sweep into ``serve/*`` rows for
+``benchmarks/run.py`` / ``BENCH_engine.json``, using the measured wall
+seconds-per-tick to express throughput in tokens/s.
+
+The generator is also the well-behaved *client* of the admission-control
+loop (docs/serving.md): a ``queue_full`` rejection is retried up to
+``max_retries`` times with exponential backoff seeded-jittered on top of
+the server's ``retry_after`` hint; invalid rejections and exhausted
+retry budgets count as abandons.  :func:`slo_rows` runs one (optionally
+fault-injected) scenario and emits the CI-gated ``serve/*/slo_*`` rows.
 """
 
 from __future__ import annotations
@@ -16,7 +25,7 @@ import dataclasses
 import json
 import os
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -24,7 +33,7 @@ from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
 
 __all__ = [
     "LoadConfig", "poisson_requests", "run_load", "bench_rows",
-    "merge_bench_json",
+    "slo_rows", "merge_bench_json",
 ]
 
 
@@ -35,6 +44,12 @@ class LoadConfig:
     prompt_len: int = 8
     gen_len: int = 8
     seed: int = 0
+    deadline_ticks: Optional[float] = None  # per-request budget from arrival
+    n_priorities: int = 1    # round-robin priority classes (shed ordering)
+    max_retries: int = 0     # client retry budget per rejected request
+    backoff_base: float = 2.0
+    backoff_init_ticks: float = 1.0
+    jitter_ticks: float = 0.5
 
 
 def poisson_requests(cfg, lc: LoadConfig) -> List[Request]:
@@ -46,36 +61,94 @@ def poisson_requests(cfg, lc: LoadConfig) -> List[Request]:
         prompt = rng.integers(
             0, cfg.vocab_size, size=lc.prompt_len).astype(np.int32)
         reqs.append(Request(rid=i, arrival=round(t, 6), prompt=prompt,
-                            max_new_tokens=lc.gen_len))
+                            max_new_tokens=lc.gen_len,
+                            deadline_ticks=lc.deadline_ticks,
+                            priority=i % max(lc.n_priorities, 1)))
     return reqs
 
 
+def _pct(values: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(values), q)) if len(values) \
+        else float("nan")
+
+
 def run_load(params, cfg, scfg: SchedulerConfig, lc: LoadConfig,
-             rules=None) -> Dict[str, float]:
-    """One offered-load point: run the scheduler to drain, aggregate."""
-    sched = Scheduler(params, cfg, scfg, rules=rules)
-    sched.submit(poisson_requests(cfg, lc))
+             rules=None, injector=None) -> Dict[str, float]:
+    """One offered-load point: drive to drain with client-side retries.
+
+    The drive loop steps the scheduler and, after every step, replays any
+    new ``queue_full`` rejections as resubmissions delayed by the server's
+    ``retry_after`` plus exponential backoff (``backoff_init_ticks *
+    backoff_base**attempt``) plus seeded uniform jitter — deterministic
+    end to end.  Aggregation skips unfinished requests explicitly.
+    """
+    sched = Scheduler(params, cfg, scfg, rules=rules, injector=injector)
+    reqs = {r.rid: r for r in poisson_requests(cfg, lc)}
+    sched.submit(list(reqs.values()))
+    rng = np.random.default_rng(lc.seed + 0x5EED)
+    attempts: Dict[int, int] = {}
+    retries = abandons = seen = 0
     t0 = time.perf_counter()
-    results = sched.run()
+    while True:
+        progressed = sched.step()
+        resubmit = []
+        for rej in sched.rejections[seen:]:
+            if rej.retry_after is None:  # invalid: retrying cannot help
+                abandons += 1
+                continue
+            a = attempts.get(rej.rid, 0)
+            if a >= lc.max_retries:
+                abandons += 1
+                continue
+            attempts[rej.rid] = a + 1
+            retries += 1
+            delay = (rej.retry_after
+                     + lc.backoff_init_ticks * lc.backoff_base ** a
+                     + float(rng.uniform(0.0, lc.jitter_ticks)))
+            resubmit.append(dataclasses.replace(
+                reqs[rej.rid], arrival=round(rej.tick + delay, 6)))
+        seen = len(sched.rejections)
+        if resubmit:
+            sched.submit(resubmit)
+        if not progressed and not resubmit:
+            break
     wall = time.perf_counter() - t0
-    ttft = np.array([r.ttft for r in results])
-    tpt = np.array([r.tokens_per_tick for r in results])
+
+    results = [sched.results[rid] for rid in sorted(sched.results)]
+    finished = [r for r in results if r.status == "finished"]
     s_per_tick = wall / max(sched.clock, 1e-9)
     fill = np.array([h["batch_fill"] for h in sched.health])
-    return {
+    if lc.deadline_ticks is None:
+        hits = len(finished)
+    else:
+        hits = sum(1 for r in finished
+                   if r.finish_tick - r.arrival <= lc.deadline_ticks)
+    ttft = [r.ttft for r in finished]
+    tpt = [r.tokens_per_tick for r in finished]
+    metrics = {
         "rate": lc.rate,
         "n_requests": lc.n_requests,
+        "n_finished": len(finished),
+        "n_unfinished": len(results) - len(finished),
         "total_tokens": int(sum(len(r.tokens) for r in results)),
         "ticks": float(sched.clock),
         "decode_steps": len(sched.health),
         "wall_s": wall,
         "s_per_tick": s_per_tick,
-        "p50_ttft_ticks": float(np.percentile(ttft, 50)),
-        "p99_ttft_ticks": float(np.percentile(ttft, 99)),
-        "p50_tokens_per_s": float(np.percentile(tpt, 50) / s_per_tick),
-        "p99_tokens_per_s": float(np.percentile(tpt, 99) / s_per_tick),
+        "p50_ttft_ticks": _pct(ttft, 50),
+        "p99_ttft_ticks": _pct(ttft, 99),
+        "p50_tokens_per_s": _pct(tpt, 50) / s_per_tick,
+        "p99_tokens_per_s": _pct(tpt, 99) / s_per_tick,
         "mean_batch_fill": float(fill.mean()) if len(fill) else 0.0,
+        "retries": retries,
+        "abandons": abandons,
+        "retry_rate": retries / lc.n_requests,
+        "abandon_rate": abandons / lc.n_requests,
+        "deadline_hit_rate": hits / lc.n_requests,
     }
+    for key, val in sched.goodput.report().items():
+        metrics[f"slo_{key}"] = val
+    return metrics
 
 
 def bench_rows(params, cfg, scfg: SchedulerConfig, arch: str,
@@ -100,6 +173,26 @@ def bench_rows(params, cfg, scfg: SchedulerConfig, arch: str,
             f"fill={m['mean_batch_fill']:.2f}",
         ))
     return rows
+
+
+def slo_rows(params, cfg, scfg: SchedulerConfig, arch: str, lc: LoadConfig,
+             rules=None, injector=None,
+             tag: str = "slo") -> Tuple[List[tuple], Dict[str, float]]:
+    """One SLO scenario (deadlines / bounded queue / optional injected
+    fault) as ``(name, us, derived)`` rows plus the raw metrics.
+
+    The ``derived`` string carries the gated quantities —
+    ``serve-resilience-gates`` parses ``goodput=``/``hit=`` against the
+    floors in ``benchmarks/baselines/serve_slo.json``.
+    """
+    m = run_load(params, cfg, scfg, lc, rules=rules, injector=injector)
+    derived = (
+        f"goodput={m['slo_goodput']:.4f} hit={m['deadline_hit_rate']:.3f} "
+        f"retries={m['retries']} abandons={m['abandons']} "
+        f"recoveries={m['slo_recoveries']:.0f} shed={m['slo_shed']:.0f} "
+        f"expired={m['slo_expired']:.0f} rejected={m['slo_rejected']:.0f}")
+    rows = [(f"serve/{arch}/{tag}_goodput", m["wall_s"] * 1e6, derived)]
+    return rows, m
 
 
 def merge_bench_json(path: str, rows: Sequence[tuple],

@@ -125,6 +125,50 @@ def test_elastic_resume_4_to_2(tmp_path):
     assert out2["loss"] < out4["loss"]
 
 
+def _lm_worker(ckpt, *, steps=6, save_every=2, dp=2, fail_step=None,
+               result=None, timeout=420):
+    """launch/train.py compressed-DP LM path (vs elastic's toy MLP)."""
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "qwen3-1.7b", "--reduced", "--steps", str(steps),
+           "--batch", "4", "--seq", "16", "--compress", "fp8_e4m3",
+           "--dp-procs", str(dp), "--ckpt-dir", str(ckpt),
+           "--save-every", str(save_every), "--seed", "0"]
+    if fail_step is not None:
+        cmd += ["--fail-step", str(fail_step), "--fail-mode", "die"]
+    if result is not None:
+        cmd += ["--result", str(result)]
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(ROOT, "src"),
+           "XLA_FLAGS": f"--xla_force_host_platform_device_count={dp}",
+           "JAX_PLATFORMS": "cpu"}
+    return subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=timeout, cwd=ROOT)
+
+
+def test_lm_compressed_dp_kill_resume_bit_identical(tmp_path):
+    """The LM training CLI (launch/train.py --compress fp8_e4m3
+    --ckpt-dir) carries the per-host EF axis and the pinned canonical
+    placement, so a worker hard-killed mid-run resumes to params, EF,
+    and optimizer digests identical to an uninterrupted run."""
+    ref = _lm_worker(tmp_path / "ref", result=tmp_path / "ref.json")
+    assert ref.returncode == 0, (ref.stdout[-800:], ref.stderr[-800:])
+    want = _result(tmp_path / "ref.json")
+
+    r = _lm_worker(tmp_path / "ckpt", fail_step=5)
+    assert r.returncode == 13, (r.returncode, r.stderr[-800:])
+
+    r2 = _lm_worker(tmp_path / "ckpt", result=tmp_path / "out.json")
+    assert r2.returncode == 0, (r2.stdout[-800:], r2.stderr[-800:])
+    assert "resumed from checkpoint" in r2.stdout
+    out = _result(tmp_path / "out.json")
+    assert out["digest"] == want["digest"], "params diverged after resume"
+    assert out["ef_digest"] == want["ef_digest"], \
+        "per-host error-feedback state diverged after resume"
+    assert out["opt_digest"] == want["opt_digest"], \
+        "optimizer moments diverged after resume"
+    assert out["loss"] == want["loss"]
+
+
 # ------------------------------------------------------------------ #
 # Wire bytes + goodput gates (in-process)
 # ------------------------------------------------------------------ #

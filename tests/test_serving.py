@@ -198,12 +198,30 @@ def test_scheduler_moe_fp8_smoke():
 
 
 def test_scheduler_rejects_oversized_request(yi):
+    """An invalid request is rejected per-request — structured Rejection,
+    trace event, results entry — and never aborts the rest of the batch
+    (the old contract raised out of submit() and dropped everything)."""
     cfg, params = yi
     sched = Scheduler(params, cfg, SchedulerConfig(n_slots=1, max_len=8))
-    with pytest.raises(ValueError, match="exceeds max_len"):
-        sched.submit([Request(rid=0, arrival=0.0,
-                              prompt=np.zeros(6, np.int32),
-                              max_new_tokens=4)])
+    good = Request(rid=2, arrival=0.0, prompt=np.zeros(3, np.int32),
+                   max_new_tokens=3)
+    sched.submit([
+        Request(rid=0, arrival=0.0, prompt=np.zeros(6, np.int32),
+                max_new_tokens=4),                      # oversized
+        Request(rid=1, arrival=0.0, prompt=np.zeros(3, np.int32),
+                max_new_tokens=0),                      # invalid budget
+        good,                                           # must still run
+    ])
+    assert [(r.rid, r.reason) for r in sched.rejections] == \
+        [(0, "oversized"), (1, "invalid")]
+    assert all(r.retry_after is None for r in sched.rejections)
+    assert sched.results[0].status == "rejected"
+    assert sched.results[1].status == "rejected"
+    assert ("reject", 0.0, 0, "oversized") in sched.trace
+    results = sched.run()
+    ok = sched.results[good.rid]
+    assert ok.status == "finished" and len(ok.tokens) == 3
+    assert len(results) == 3
 
 
 # --------------------------------------------------------------------- #
