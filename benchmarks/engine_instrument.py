@@ -131,9 +131,89 @@ def _ae_train_fp8_row() -> Row:
         f"bytes_drop_flops_dont={'OK' if ok else 'MISMATCH'}")
 
 
+def _attn_flash_row() -> Row:
+    """First-class flash attention: tuned sweep geometry + exact bill.
+
+    ``autotune_attention`` picks (bq, bkv) for the shape and records it
+    under the ``attnc`` sweep key; the dispatch below resolves that tile
+    from the cache.  The derived column carries the causal vs dense flop
+    bills (skipped KV blocks are free) and the kernel vs reference byte
+    bills (the flash sweep never round-trips the S x T score tensor) —
+    CI pins these via engine_flops.json / train_bytes.json."""
+    B, H, S, D = 2, 4, 256, 64
+    res = autotune.autotune_attention(S, S, D, policy=prec.FP32,
+                                      backend="interpret", causal=True)
+    key = jax.random.PRNGKey(5)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, S, D), jnp.float32)
+    k = jax.random.normal(kk, (B, H, S, D), jnp.float32)
+    v = jax.random.normal(kv, (B, H, S, D), jnp.float32)
+
+    # the identity check bills a fixed bq=bkv=128 geometry (the
+    # engine_flops.json pins) — the tuner may legitimately pick a
+    # single-pair tile where causal has nothing to skip
+    bq = bkv = 128
+
+    def trace(causal, backend):
+        with engine.instrument() as events:
+            jax.eval_shape(lambda a, b, c: engine.attention(
+                a, b, c, causal=causal, bq=bq, bkv=bkv, policy=prec.FP32,
+                backend=backend), q, k, v)
+        return events
+
+    ev_c = trace(True, "interpret")
+    ev_d = trace(False, "interpret")
+    ev_r = trace(True, "xla")
+    fc = int(engine.total_flops(ev_c))
+    fd = int(engine.total_flops(ev_d))
+    bk_ = int(sum(e.total_bytes for e in ev_c))
+    br = int(sum(e.total_bytes for e in ev_r))
+    pairs = autotune._attn_pairs(S, S, bq, bkv, causal=True)
+    want = 2 * 2 * B * H * pairs * bq * bkv * D  # score + PV GEMMs
+    ok = fc == want and fc < fd and bk_ < br
+    return (
+        "engine/attn_flash", 0.0,
+        f"tuned_bq={res.tile.bm} tuned_bkv={res.tile.bn} "
+        f"tuned_us={res.us:.1f} pairs={pairs} "
+        f"flops_causal={fc} flops_dense={fd} bytes_kernel={bk_} "
+        f"bytes_reference={br} bill_exact={'OK' if ok else 'MISMATCH'}")
+
+
+def _attn_linear_row() -> Row:
+    """Chunked linear attention (mLSTM/SSD state sweep): tuned chunk +
+    the four per-chunk GEMM bills (intra score/PV, inter-chunk read,
+    state update) — groups = number of chunks, state stores once."""
+    B, H, S, dk, dv = 2, 4, 256, 32, 64
+    res = autotune.autotune_attention(S, dk, dv, policy=prec.FP32,
+                                      backend="interpret",
+                                      kind="linear_attention")
+    key = jax.random.PRNGKey(6)
+    kq, kk, kv, kg = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (B, H, S, dk), jnp.float32)
+    k = jax.random.normal(kk, (B, H, S, dk), jnp.float32)
+    v = jax.random.normal(kv, (B, H, S, dv), jnp.float32)
+    g = -jnp.abs(jax.random.normal(kg, (B, H, S), jnp.float32)) * 0.1
+    with engine.instrument() as events:
+        jax.eval_shape(lambda a, b, c, d: engine.linear_attention(
+            a, b, c, d, backend="interpret"), q, k, v, g)
+    c = res.tile.bm
+    n = -(-S // c)
+    got = int(engine.total_flops(events))
+    want = 2 * B * H * n * c * (c * dk + c * dv + 2 * dk * dv)
+    st = next(e for e in events
+              if e.spec.op == "linear_attention_state")
+    ok = got == want and st.bytes == B * H * dk * dv * 4
+    return (
+        "engine/attn_linear", 0.0,
+        f"chunk={c} tuned_us={res.us:.1f} chunks={n} flops={got} "
+        f"analytic_flops={want} state_bytes={st.bytes} "
+        f"bill_exact={'OK' if ok else 'MISMATCH'}")
+
+
 def run() -> list[Row]:
     rows: list[Row] = [_linear_hotpath_row(), _ae_train_bytes_row(),
-                       _ae_train_fp8_row()]
+                       _ae_train_fp8_row(), _attn_flash_row(),
+                       _attn_linear_row()]
     m = perf_model.DEFAULT_MODEL
 
     # --- AE forward: recorded events vs the paper's analytic enumeration ---

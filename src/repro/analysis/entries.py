@@ -15,8 +15,11 @@ in seconds on CPU.  The registry mirrors the CI-gated workloads:
   pool — the ``serve-resilience-gates`` trace;
 * ``deepseek_moe_fwd`` — reduced deepseek-moe forward (router, grouped
   expert GEMMs, combiner);
-* ``xlstm_fwd`` — reduced xlstm forward: the sLSTM recurrent scan is the
-  repo's known jaxpr-layer escape (see
+* ``xlstm_fwd`` — reduced xlstm forward: mLSTM chunked linear attention
+  (now the Engine's first-class ``linear_attention`` op) plus the sLSTM
+  recurrent scan, whose per-timestep GEMM was the repo's last
+  jaxpr-layer escape until it moved onto ``engine.einsum2d`` — every
+  entry point now reconciles to zero escapes (see
   ``benchmarks/baselines/engine_escapes.json``).
 """
 

@@ -62,7 +62,7 @@ _GEMMSPEC_FIELDS = {
     "op", "tag", "m", "n", "k", "batch", "groups", "policy", "tile",
     "epilogue", "w_shared", "layout", "valid_rows", "ragged_dim",
     "grad_epilogue", "grad_mode", "fused_bwd", "fused_bias_grad",
-    "x_dtype", "w_dtype", "scaled",
+    "x_dtype", "w_dtype", "scaled", "io_bytes",
 }
 
 
@@ -256,7 +256,8 @@ _KEY_RE = __import__("re").compile(
     r"-(?P<compute>[^-]+)-(?P<accum>[^-]+)-(?P<out>[^-]+)"
     r"-(?P<epilogue>[^-]+)-(?P<backend>[^-]+)"
     r"(?:-(?P<layout>nt|tn))?(?:-(?P<fbwd>fbwd))?(?:-d(?P<depth>\d+))?"
-    r"(?:-x(?P<xstore>[^-]+))?(?:-w(?P<wstore>[^-]+))?$")
+    r"(?:-x(?P<xstore>[^-]+))?(?:-w(?P<wstore>[^-]+))?"
+    r"(?:-S(?P<sweep>[^-]+))?$")
 
 
 def validate_autotune_cache(path: str) -> List[Violation]:
@@ -284,6 +285,11 @@ def validate_autotune_cache(path: str) -> List[Violation]:
         except (KeyError, TypeError) as e:
             out.append(_v(path, 0, "autotune-cache",
                           f"{key!r}: malformed entry ({e})"))
+            continue
+        if m["sweep"]:
+            # attention sweep keys: (bq, bkv) / chunk geometries ride in a
+            # TileConfig but budget VMEM by the sweep kernels' own scratch
+            # shapes, not the GEMM pipeline formula — skip the GEMM check
             continue
         need = tiling.vmem_bytes(
             tile, m["compute"], m["accum"],
@@ -318,6 +324,12 @@ def validate_baselines(base_dir: str = "") -> List[Violation]:
     for k, v in eng.items():
         if not k.startswith("_") and (not isinstance(v, int) or v <= 0):
             bad("engine_flops.json", f"{k}: non-positive flops {v!r}")
+    causal = eng["attn_flash_fwd_B2_H4_S256_D64_causal"]
+    dense = eng["attn_flash_fwd_B2_H4_S256_D64_dense"]
+    if not causal < dense:
+        bad("engine_flops.json",
+            "causal attention flops not below dense at the same geometry "
+            "(causally dead KV blocks must be excluded from the bill)")
 
     tr = _load(base_dir, "train_flops.json")["ae_train_B16"]
     if tr["total"] != tr["fwd"] + tr["bwd"]:
@@ -340,6 +352,15 @@ def validate_baselines(base_dir: str = "") -> List[Violation]:
         bad("train_bytes.json",
             "FP8 trace flops != FP16 train total (narrower storage drops "
             "bytes, never flops)")
+    attn = tb["attn_fwd_B2_H4_S96_D16"]
+    if not attn["kernel"]["bytes"] < attn["reference"]["bytes"]:
+        bad("train_bytes.json",
+            "attention kernel bytes not below the reference composition "
+            "(the flash sweep must not round-trip the S x T score tensor)")
+    if not attn["kernel"]["flops"] < attn["reference"]["flops"]:
+        bad("train_bytes.json",
+            "causal attention kernel flops not below the dense reference "
+            "(skipped KV blocks must be excluded from the bill)")
 
     sv = _load(base_dir, "serve_bytes.json")
     try:

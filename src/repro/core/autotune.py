@@ -57,6 +57,9 @@ __all__ = [
     "record_tile",
     "clear_cache",
     "cache_stats",
+    "attention_cost_us",
+    "linear_attention_cost_us",
+    "autotune_attention",
 ]
 
 ENV_VAR = "REPRO_AUTOTUNE_CACHE"
@@ -97,7 +100,16 @@ class AutotuneKey:
     ``xstore``/``wstore`` key per-operand *storage* dtypes ("" = same as
     ``compute``): an FP8-stored operand halves its DMA stream and VMEM
     tile, so mixed-precision dispatches must not share tuned tiles with
-    uniform ones of the same logical shape."""
+    uniform ones of the same logical shape.
+
+    ``sweep`` ("" for plain GEMMs) keys the Engine's attention ops, whose
+    tile is a *sweep* geometry rather than an M/N/K block: ``"attn"`` /
+    ``"attnc"`` (non-causal / causal flash attention — the key's m/n/k
+    carry bucketed S/D/T and the stored tile's bm/bn carry (bq, bkv)) and
+    ``"lattn"`` (chunked linear attention — bm carries the chunk).  Sweep
+    entries select a KV-walk schedule, not a VMEM-budgeted GEMM block, so
+    artifact validation (``analysis.lint``) skips the VMEM check for
+    them."""
 
     m: int
     n: int
@@ -112,6 +124,7 @@ class AutotuneKey:
     depth: int = 2
     xstore: str = ""   # "" = same as compute (uniform-precision policies)
     wstore: str = ""
+    sweep: str = ""    # "" = plain GEMM; "attn"/"attnc"/"lattn" = attention
 
     def to_str(self) -> str:
         ep = self.epilogue or "none"
@@ -130,6 +143,8 @@ class AutotuneKey:
             base = f"{base}-x{self.xstore}"
         if self.wstore:
             base = f"{base}-w{self.wstore}"
+        if self.sweep:
+            base = f"{base}-S{self.sweep}"
         return base
 
 
@@ -165,6 +180,7 @@ def canonical_key(
     pipeline_depth: int = 2,
     x_dtype=None,
     w_dtype=None,
+    sweep: str = "",
 ) -> AutotuneKey:
     return AutotuneKey(
         m=bucket_dim(m), n=bucket_dim(n), k=bucket_dim(k),
@@ -178,6 +194,7 @@ def canonical_key(
         depth=pipeline_depth,
         xstore=_store_name(x_dtype, policy.compute_dtype),
         wstore=_store_name(w_dtype, policy.compute_dtype),
+        sweep=sweep,
     )
 
 
@@ -268,6 +285,7 @@ def cached_tile(
     pipeline_depth: int = 2,
     x_dtype=None,
     w_dtype=None,
+    sweep: str = "",
 ) -> Optional[tiling.TileConfig]:
     """Cache-only lookup (LRU, then the JSON file).  Never tunes."""
     global _hits, _misses
@@ -275,7 +293,8 @@ def cached_tile(
                         epilogue=epilogue, layout=layout,
                         fused_bwd=fused_bwd,
                         pipeline_depth=pipeline_depth,
-                        x_dtype=x_dtype, w_dtype=w_dtype).to_str()
+                        x_dtype=x_dtype, w_dtype=w_dtype,
+                        sweep=sweep).to_str()
     with _lock:
         t = _lru.get(key)
         if t is None:
@@ -609,3 +628,121 @@ def autotune_gemm(
         record_tile(key, best, source=mode, us=best_us)
     return AutotuneResult(key=key, tile=best, us=best_us, source=mode,
                           n_candidates=len(cands), scores=tuple(scores))
+
+
+# --------------------------------------------------------------------- #
+# Attention sweep tuning (the Engine's "attention" capability)
+# --------------------------------------------------------------------- #
+def _attn_pairs(s: int, t: int, bq: int, bkv: int, *, causal: bool,
+                q_offset: int = 0) -> int:
+    """Executed (q-block, kv-block) pairs of one flash sweep — causally
+    dead KV blocks are skipped by the kernel, so they cost nothing."""
+    s_pad = _round_up(max(int(s), 1), bq)
+    t_pad = _round_up(max(int(t), 1), bkv)
+    if not causal:
+        return (s_pad // bq) * (t_pad // bkv)
+    pairs = 0
+    for qi in range(s_pad // bq):
+        for ki in range(t_pad // bkv):
+            if ki * bkv < q_offset + qi * bq + bq:
+                pairs += 1
+    return pairs
+
+
+def attention_cost_us(
+    s: int, t: int, d: int, bq: int, bkv: int, *,
+    policy: prec.Policy,
+    causal: bool = True,
+) -> float:
+    """Roofline cost model of one flash-attention sweep, in µs.
+
+    Per executed block pair: the score GEMM (2·bq·bkv·d) and the PV GEMM
+    (2·bq·bkv·d) run on VMEM-resident tiles; K and V stream once per pair,
+    Q and the output move once per Q block (the store-once schedule).
+    Causally skipped pairs cost nothing (see :func:`_attn_pairs`)."""
+    cb = jnp.dtype(policy.compute_dtype).itemsize
+    pairs = _attn_pairs(s, t, bq, bkv, causal=causal)
+    s_pad = _round_up(max(int(s), 1), bq)
+    flops = pairs * 4.0 * bq * bkv * d
+    hbm = (2 * s_pad * d * cb            # q in, out back
+           + pairs * 2 * bkv * d * cb)   # k + v per executed pair
+    cost = max(hbm / _HBM_BW, flops / _PEAK_FLOPS) + pairs * _STEP_OVERHEAD_S
+    return cost * 1e6
+
+
+def linear_attention_cost_us(
+    s: int, dk: int, dv: int, chunk: int, *,
+    policy: prec.Policy,
+) -> float:
+    """Roofline cost model of one chunked linear-attention sweep, in µs.
+
+    The state lives in VMEM across the whole sweep (stored once); per
+    chunk the four GEMMs (intra score/PV, inter, state update) run on
+    streamed q/k/v/g tiles.  Chunks are sequential, so each pays the step
+    overhead."""
+    cb = jnp.dtype(policy.compute_dtype).itemsize
+    s_pad = _round_up(max(int(s), 1), chunk)
+    nc = s_pad // chunk
+    flops = nc * 2.0 * chunk * (chunk * dk + chunk * dv + 2 * dk * dv)
+    hbm = (s_pad * (2 * dk + 2 * dv) * cb  # q, k in; v in, out back
+           + s_pad * 4                     # log-decay row (f32)
+           + dk * dv * 4)                  # the state, stored once
+    cost = max(hbm / _HBM_BW, flops / _PEAK_FLOPS) + nc * _STEP_OVERHEAD_S
+    return cost * 1e6
+
+
+def autotune_attention(
+    s: int, t: int, d: int, *,
+    policy=None,
+    backend: str = "pallas",
+    kind: str = "attention",
+    causal: bool = True,
+    record: bool = True,
+) -> AutotuneResult:
+    """Tune an attention sweep geometry and record it under its sweep key.
+
+    ``kind="attention"`` sweeps (bq, bkv) block pairs for the flash kernel
+    (``t`` is the KV length, ``d`` the head dim); ``kind="linear_attention"``
+    sweeps the chunk size (``t`` is dk, ``d`` is dv).  Scored with the
+    analytic cost models above — attention sweeps have no wall-clock mode
+    yet (the winners ship via ``REPRO_AUTOTUNE_CACHE`` like GEMM tiles).
+    The stored :class:`~repro.core.tiling.TileConfig` encodes the sweep:
+    ``bm=bq, bn=bkv`` (flash) or ``bm=bn=bk=chunk`` (linear)."""
+    policy = prec.resolve(policy)
+    scores: List[Tuple[Tuple[int, int, int], float]] = []
+    best: Optional[tiling.TileConfig] = None
+    best_us = float("inf")
+    if kind == "attention":
+        sweep = "attnc" if causal else "attn"
+        for bq in (128, 256, 512):
+            if bq > _round_up(max(int(s), 1), 128):
+                continue
+            for bkv in (128, 256, 512, 1024):
+                if bkv > _round_up(max(int(t), 1), 128):
+                    continue
+                us = attention_cost_us(s, t, d, bq, bkv, policy=policy,
+                                       causal=causal)
+                tile = tiling.TileConfig(bm=bq, bn=bkv, bk=bkv)
+                scores.append(((tile.bm, tile.bn, tile.bk), us))
+                if us < best_us:
+                    best, best_us = tile, us
+    elif kind == "linear_attention":
+        sweep = "lattn"
+        dk, dv = t, d
+        for chunk in (32, 64, 128, 256):
+            if chunk > _round_up(max(int(s), 1), 32):
+                continue
+            us = linear_attention_cost_us(s, dk, dv, chunk, policy=policy)
+            tile = tiling.TileConfig(bm=chunk, bn=chunk, bk=chunk)
+            scores.append(((chunk, chunk, chunk), us))
+            if us < best_us:
+                best, best_us = tile, us
+    else:
+        raise ValueError(f"unknown attention kind {kind!r}")
+    assert best is not None, "no sweep candidates for this shape"
+    key = canonical_key(s, t, d, policy=policy, backend=backend,
+                        sweep=sweep)
+    if record:
+        record_tile(key, best, source="model", us=best_us)
+    return AutotuneResult(key=key, tile=best, us=best_us, source="model",
+                          n_candidates=len(scores), scores=tuple(scores))

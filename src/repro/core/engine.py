@@ -136,7 +136,7 @@ import dataclasses
 import functools
 import os
 import threading
-from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -165,6 +165,8 @@ __all__ = [
     "linear",
     "grouped_matmul",
     "einsum2d",
+    "attention",
+    "linear_attention",
     "is_backward_op",
     "is_pass_op",
     "instrument",
@@ -236,6 +238,14 @@ class GemmSpec:
         storage): the engine quantizes ``q = v / s`` before the GEMM and
         multiplies the scale product back into the accumulator after —
         scale scalars are metadata here, their bytes are negligible.
+      io_bytes: exact HBM operand + result bytes of one execution, when
+        the generic per-slot formula below cannot express them.  The
+        attention sweeps set this: their operands are shared across many
+        per-block GEMMs (Q is read once per Q block, not once per score
+        GEMM; the linear-attention state never leaves VMEM until the final
+        store), so the engine bills each sweep's true traffic here and
+        :attr:`bytes` returns it verbatim.  None (all plain GEMMs) keeps
+        the formula.
     """
 
     op: str
@@ -260,6 +270,7 @@ class GemmSpec:
     x_dtype: Optional[str] = None
     w_dtype: Optional[str] = None
     scaled: bool = False
+    io_bytes: Optional[int] = None
 
     def __post_init__(self):
         if self.layout not in ("nn", "nt", "tn"):
@@ -329,6 +340,8 @@ class GemmSpec:
         pays one byte per element while the output (and the streamed
         derivative residual) stay at the out/compute width — narrower
         storage drops bytes, never flops."""
+        if self.io_bytes is not None:
+            return self.io_bytes
         cb = jnp.dtype(self.policy.compute_dtype).itemsize
         ob = jnp.dtype(self.policy.out_dtype).itemsize
         ab = jnp.dtype(self.policy.accum_dtype).itemsize
@@ -524,6 +537,18 @@ class BackendSpec:
       flag only ever see compute-dtype operands: the engine widens the
       (already-quantized) values before dispatch, an HBM-side cast pass
       billed at the wide width.
+    * ``"attention"`` — the backend implements the fused attention sweeps
+      and ``attention_fn`` must be provided:
+      ``attention_fn(kind, operands, **params)`` where ``kind`` is
+      ``"attention"`` (operands ``(q, k, v)`` of shape ``(BH, S, D)`` /
+      ``(BH_kv, T, D)``, params ``group / causal / scale / bq / bkv /
+      t_valid / q_offset``, returns ``(BH, S, D)``) or
+      ``"linear_attention"`` (operands ``(q, k, v, log_g)`` of shape
+      ``(BH, S, dk)`` / ``(BH, S, dv)`` / ``(BH, S)``, param ``chunk``,
+      returns ``(out (BH, S, dv), state (BH, dk, dv) fp32)``).  Operands
+      arrive pre-cast and pre-padded to the block geometry; backends
+      without this flag are served by the engine's reference composition
+      of :func:`einsum2d` calls, so every backend answers attention.
     """
 
     name: str
@@ -531,6 +556,7 @@ class BackendSpec:
     available: Union[bool, Callable[[], bool]] = True
     description: str = ""
     capabilities: frozenset = frozenset()
+    attention_fn: Optional[Callable[..., Any]] = None
 
     def is_available(self) -> bool:
         a = self.available
@@ -550,6 +576,7 @@ def register_backend(
     available: Union[bool, Callable[[], bool]] = True,
     description: str = "",
     capabilities=(),
+    attention_fn: Optional[Callable[..., Any]] = None,
 ) -> BackendSpec:
     """Register (or replace) a GEMM backend under ``name``.
 
@@ -563,11 +590,16 @@ def register_backend(
         raise ValueError(f"backend name must be a non-empty string, got {name!r}")
     caps = frozenset(capabilities)
     unknown = caps - {"fused_epilogue", "tiled", "layouts",
-                      "fused_bwd_epilogue", "operand_dtypes"}
+                      "fused_bwd_epilogue", "operand_dtypes", "attention"}
     if unknown:
         raise ValueError(f"unknown backend capabilities: {sorted(unknown)}")
+    if "attention" in caps and attention_fn is None:
+        raise ValueError(
+            f"backend {name!r} declares the 'attention' capability but "
+            "provides no attention_fn")
     spec = BackendSpec(name=name, fn=fn, available=available,
-                       description=description, capabilities=caps)
+                       description=description, capabilities=caps,
+                       attention_fn=attention_fn)
     _REGISTRY[name] = spec
     return spec
 
@@ -864,6 +896,27 @@ def _interpret_fn(xc: jax.Array, wc: jax.Array, *, spec: GemmSpec,
                       bias_grad=bias_grad)
 
 
+def _pallas_attention(kind: str, operands, *, interpret: bool = False,
+                      **params):
+    """The "attention" capability for the Pallas backends (see
+    :class:`BackendSpec`): dispatch to the fused sweep kernels."""
+    from repro.kernels import flash_attention, chunked_linear_attention
+
+    if kind == "attention":
+        q, k, v = operands
+        return flash_attention.flash_attention_pallas(
+            q, k, v, interpret=interpret, **params)
+    if kind == "linear_attention":
+        q, k, v, log_g = operands
+        return chunked_linear_attention.chunked_linear_attention_pallas(
+            q, k, v, log_g, interpret=interpret, **params)
+    raise ValueError(f"unknown attention kind {kind!r}")
+
+
+def _interpret_attention(kind: str, operands, **params):
+    return _pallas_attention(kind, operands, interpret=True, **params)
+
+
 register_backend(
     "xla", _xla_fn,
     capabilities=("layouts", "operand_dtypes"),
@@ -876,22 +929,25 @@ register_backend(
     "pallas", _pallas_fn,
     available=lambda: jax.default_backend() == "tpu",
     capabilities=("fused_epilogue", "tiled", "layouts",
-                  "fused_bwd_epilogue", "operand_dtypes"),
+                  "fused_bwd_epilogue", "operand_dtypes", "attention"),
+    attention_fn=_pallas_attention,
     description="TPU Pallas RedMulE kernel (double-buffered in-kernel "
                 "K-loop, store-once Z with the bias+activation epilogue "
                 "fused into the store; nt/tn entry points serve the "
                 "backward pass without materialized transposes, with "
                 "act' applied to dZ on load and the bias grad accumulated "
                 "in the dW pass — ds never touches HBM; FP8 storage tiles "
-                "DMA narrow and upcast on load inside the K-loop)")
+                "DMA narrow and upcast on load inside the K-loop; fused "
+                "flash / chunked-linear attention sweeps)")
 register_backend(
     "interpret", _interpret_fn,
     capabilities=("fused_epilogue", "tiled", "layouts",
-                  "fused_bwd_epilogue", "operand_dtypes"),
+                  "fused_bwd_epilogue", "operand_dtypes", "attention"),
+    attention_fn=_interpret_attention,
     description="the same Pallas kernel body in interpreter mode "
                 "(CPU CI; bit-faithful to the kernel's schedule, fused "
-                "forward and backward epilogues, transpose layouts and "
-                "FP8 upcast-on-load included)")
+                "forward and backward epilogues, transpose layouts, "
+                "FP8 upcast-on-load and the attention sweeps included)")
 
 
 # Fused epilogue registry — shared with the kernels (repro.core.epilogues)
@@ -1532,6 +1588,301 @@ _linear_call_nobias.defvjp(_linear_nobias_fwd, _linear_nobias_bwd)
 
 
 # --------------------------------------------------------------------- #
+# Attention ops ("attention" capability)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class _AttnCtx:
+    """Static context of one attention dispatch (the custom-VJP
+    nondiff argument).  Duck-types :class:`_GradCtx` for
+    :func:`_emit_fwd` — ``spec`` / ``backend`` / ``count`` carry the
+    same meaning; ``extra`` holds the sweep's companion GEMM specs
+    (PV, inter, state-update), emitted with identical classification."""
+
+    kind: str
+    spec: GemmSpec
+    backend: str
+    count: int
+    extra: Tuple[GemmSpec, ...] = ()
+    group: int = 1
+    causal: bool = True
+    scale: float = 1.0
+    q_offset: int = 0
+    t_valid: int = 0
+    bq: int = 256
+    bkv: int = 512
+    chunk: int = 64
+    policy: prec.Policy = prec.FP32
+
+
+def _attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         group: int, causal: bool, scale: float,
+                         q_offset: int, t_valid: int,
+                         policy: prec.Policy, backend: str) -> jax.Array:
+    """Reference attention as a composition of :func:`einsum2d` calls.
+
+    Serves backends without the ``"attention"`` capability (XLA) and the
+    ``custom_vjp`` backward of the kernel path: both score and PV GEMMs
+    re-enter the registry and self-bill, so jaxpr audits reconcile with
+    no attention-specific rules.  Numerics match the flash kernel's
+    contract: fp32 scores/softmax, fully-masked query rows return exact
+    zeros (the kernel's ``l == 0`` guard)."""
+    B, Hq, S, D = q.shape
+    _, Hkv, T, Dv = v.shape
+    qg = q.reshape(B, Hkv, group, S, D)
+    scores_pol = dataclasses.replace(
+        policy, name=policy.name + "_scores",
+        output_dtype=jnp.float32, faithful_accum=False)
+    s = DEFAULT_ENGINE.einsum2d("bhgsd,bhtd->bhgst", qg, k,
+                                policy=scores_pol, backend=backend)
+    s = s * jnp.float32(scale)
+    rows = q_offset + jnp.arange(S, dtype=jnp.int32)
+    cols = jnp.arange(T, dtype=jnp.int32)
+    mask = cols[None, :] < t_valid
+    if causal:
+        mask = mask & (cols[None, :] <= rows[:, None])
+    else:
+        mask = jnp.broadcast_to(mask, (S, T))
+    s = jnp.where(mask, s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(axis=-1)[:, None], p, jnp.float32(0.0))
+    out = DEFAULT_ENGINE.einsum2d(
+        "bhgst,bhtd->bhgsd", p.astype(policy.compute_dtype), v,
+        policy=policy, backend=backend)
+    return out.reshape(B, Hq, S, Dv).astype(policy.out_dtype)
+
+
+def _linear_attention_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                                log_g: jax.Array, *, chunk: int,
+                                state: Optional[jax.Array],
+                                backend: str) -> Tuple[jax.Array, jax.Array]:
+    """Reference chunked linear-attention state sweep (mLSTM/SSD form)
+    over ``(B, H, S, d)`` operands, composed of registry dispatches.
+
+    The per-chunk recurrence matches the Pallas kernel exactly: an fp32
+    intra-chunk score GEMM with the decay matrix ``A``, an intra-chunk
+    PV GEMM, the inter-chunk ``q·exp(L) @ state`` read, and the decayed
+    ``k^T·v`` state update.  Returns ``(out fp32, state fp32)``."""
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    f32 = prec.FP32
+    pad = (-S) % chunk
+    if pad:
+        zq = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        q = jnp.pad(q, zq)
+        k = jnp.pad(k, zq)
+        v = jnp.pad(v, [(0, 0), (0, 0), (0, pad), (0, 0)])
+        log_g = jnp.pad(log_g, [(0, 0), (0, 0), (0, pad)])
+    Sp = S + pad
+    n = Sp // chunk
+    qf = q.astype(jnp.float32).reshape(B, H, n, chunk, dk)
+    kf = k.astype(jnp.float32).reshape(B, H, n, chunk, dk)
+    vf = v.astype(jnp.float32).reshape(B, H, n, chunk, dv)
+    gf = log_g.astype(jnp.float32).reshape(B, H, n, chunk)
+    S0 = (jnp.zeros((B, H, dk, dv), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(S_prev, xs):
+        qc, kc, vc, gc = xs
+        L = jnp.cumsum(gc, axis=-1)                    # (B, H, chunk)
+        Ltot = L[..., -1:]
+        Dm = L[..., :, None] - L[..., None, :]
+        A = jnp.where(causal[None, None], jnp.exp(Dm), 0.0)
+        s = DEFAULT_ENGINE.einsum2d("bhik,bhjk->bhij", qc, kc,
+                                    policy=f32, backend=backend) * A
+        out = DEFAULT_ENGINE.matmul(s, vc, policy=f32, backend=backend)
+        out = out + DEFAULT_ENGINE.matmul(
+            qc * jnp.exp(L)[..., None], S_prev, policy=f32, backend=backend)
+        kdec = kc * jnp.exp(Ltot - L)[..., None]
+        S_new = jnp.exp(Ltot)[..., None] * S_prev + DEFAULT_ENGINE.matmul(
+            jnp.swapaxes(kdec, -1, -2), vc, policy=f32, backend=backend)
+        return S_new, out
+
+    with repeat(n):
+        S_fin, outs = jax.lax.scan(
+            step, S0, (jnp.moveaxis(qf, 2, 0), jnp.moveaxis(kf, 2, 0),
+                       jnp.moveaxis(vf, 2, 0), jnp.moveaxis(gf, 2, 0)))
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, Sp, dv)[:, :, :S]
+    return out, S_fin
+
+
+def _attention_specs(*, B: int, Hq: int, S: int, T: int, D: int, Dv: int,
+                     bq: int, bkv: int, causal: bool, q_offset: int,
+                     policy: prec.Policy) -> Tuple[GemmSpec, ...]:
+    """Per-sweep event specs for one flash-attention dispatch.
+
+    ``groups`` is the number of **executed** (Q-block, KV-block) pairs —
+    causally skipped blocks are excluded, so billed flops are exact.
+    ``io_bytes`` carries the sweep's true HBM traffic: Q is read once
+    per Q row, K/V stream once per executed pair, the output stores
+    once (the kernel's store-once Z contract)."""
+    pairs = autotune._attn_pairs(S, T, bq, bkv, causal=causal,
+                                 q_offset=q_offset)
+    S_pad = -(-S // bq) * bq
+    BHq = B * Hq
+    cb = jnp.dtype(policy.compute_dtype).itemsize
+    ob = jnp.dtype(policy.out_dtype).itemsize
+    tile = tiling.TileConfig(bm=bq, bn=bkv, bk=bkv)
+    score = GemmSpec(
+        op="attention_score", tag="bsd,btd->bst", m=bq, n=D, k=bkv,
+        batch=BHq, groups=pairs, policy=policy, tile=tile,
+        io_bytes=BHq * (S_pad * D + pairs * bkv * D) * cb)
+    pv = GemmSpec(
+        op="attention_pv", tag="bst,btd->bsd", m=bq, n=bkv, k=Dv,
+        batch=BHq, groups=pairs, policy=policy, tile=tile,
+        io_bytes=BHq * (pairs * bkv * Dv * cb + S_pad * Dv * ob))
+    return (score, pv)
+
+
+def _linear_attention_specs(*, B: int, H: int, S: int, dk: int, dv: int,
+                            chunk: int, in_bytes: int) -> Tuple[GemmSpec, ...]:
+    """Event specs for one chunked linear-attention sweep: the four
+    per-chunk GEMMs (intra-chunk score, intra-chunk PV, inter-chunk
+    state read, state update) billed separately, ``groups`` = number of
+    chunks.  The running state lives in VMEM across the whole sweep and
+    stores once (fp32), exactly like the kernel."""
+    S_pad = -(-S // chunk) * chunk
+    n = S_pad // chunk
+    BH = B * H
+    f32 = prec.FP32
+    tile = tiling.TileConfig(bm=chunk, bn=chunk, bk=chunk)
+    score = GemmSpec(
+        op="linear_attention_score", tag="bik,bjk->bij",
+        m=chunk, n=dk, k=chunk, batch=BH, groups=n, policy=f32, tile=tile,
+        io_bytes=BH * S_pad * (2 * dk * in_bytes + 4))
+    pv = GemmSpec(
+        op="linear_attention_pv", tag="bij,bjv->biv",
+        m=chunk, n=chunk, k=dv, batch=BH, groups=n, policy=f32, tile=tile,
+        io_bytes=BH * S_pad * dv * in_bytes)
+    inter = GemmSpec(
+        op="linear_attention_inter", tag="bik,bkv->biv",
+        m=chunk, n=dk, k=dv, batch=BH, groups=n, policy=f32, tile=tile,
+        io_bytes=BH * S_pad * dv * in_bytes)
+    state = GemmSpec(
+        op="linear_attention_state", tag="bki,bkv->biv",
+        m=dk, n=chunk, k=dv, batch=BH, groups=n, policy=f32, tile=tile,
+        io_bytes=BH * dk * dv * 4)
+    return (score, pv, inter, state)
+
+
+def _attention_kernel_dispatch(actx: _AttnCtx, q: jax.Array, k: jax.Array,
+                               v: jax.Array) -> jax.Array:
+    """Pad, flatten and hand the operands to the backend's flash kernel,
+    emitting the sweep's events with remat classification."""
+    pol = actx.policy
+    comp = pol.compute_dtype
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    S_pad = -(-S // actx.bq) * actx.bq
+    T_pad = -(-T // actx.bkv) * actx.bkv
+    qc = q.astype(comp)
+    kc = k.astype(comp)
+    vc = v.astype(comp)
+    if S_pad != S:
+        qc = jnp.pad(qc, [(0, 0), (0, 0), (0, S_pad - S), (0, 0)])
+    if T_pad != T:
+        zt = [(0, 0), (0, 0), (0, T_pad - T), (0, 0)]
+        kc = jnp.pad(kc, zt)
+        vc = jnp.pad(vc, zt)
+    _emit_fwd(actx, actx.spec, actx.extra)
+    fn = get_backend(actx.backend).attention_fn
+    out = fn("attention",
+             (qc.reshape(B * Hq, S_pad, D),
+              kc.reshape(B * Hkv, T_pad, D),
+              vc.reshape(B * Hkv, T_pad, D)),
+             group=actx.group, causal=actx.causal, scale=actx.scale,
+             bq=actx.bq, bkv=actx.bkv, t_valid=actx.t_valid,
+             q_offset=actx.q_offset)
+    out = out.reshape(B, Hq, S_pad, D)[:, :, :S]
+    return out.astype(pol.out_dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _attention_call(actx: _AttnCtx, q: jax.Array, k: jax.Array,
+                    v: jax.Array) -> jax.Array:
+    return _attention_kernel_dispatch(actx, q, k, v)
+
+
+def _attention_call_fwd(actx, q, k, v):
+    return _attention_kernel_dispatch(actx, q, k, v), (q, k, v)
+
+
+def _attention_call_bwd(actx, res, do):
+    # Flash-style backward schedule: recompute the forward as the
+    # reference einsum2d composition and differentiate through it — the
+    # recompute and all four backward GEMMs re-enter the registry on the
+    # same backend, each self-billing its events.
+    q, k, v = res
+
+    def ref(q_, k_, v_):
+        return _attention_reference(
+            q_, k_, v_, group=actx.group, causal=actx.causal,
+            scale=actx.scale, q_offset=actx.q_offset, t_valid=actx.t_valid,
+            policy=actx.policy, backend=actx.backend)
+
+    with repeat(actx.count):
+        _, vjp = jax.vjp(ref, q, k, v)
+        dq, dk, dv = vjp(do)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_attention_call.defvjp(_attention_call_fwd, _attention_call_bwd)
+
+
+def _linear_attention_kernel_dispatch(
+        actx: _AttnCtx, q: jax.Array, k: jax.Array, v: jax.Array,
+        log_g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    chunk = actx.chunk
+    pad = (-S) % chunk
+    if pad:
+        zs = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        q = jnp.pad(q, zs)
+        k = jnp.pad(k, zs)
+        v = jnp.pad(v, [(0, 0), (0, 0), (0, pad), (0, 0)])
+        log_g = jnp.pad(log_g, [(0, 0), (0, 0), (0, pad)])
+    Sp = S + pad
+    _emit_fwd(actx, actx.spec, actx.extra)
+    fn = get_backend(actx.backend).attention_fn
+    out, st = fn("linear_attention",
+                 (q.reshape(B * H, Sp, dk), k.reshape(B * H, Sp, dk),
+                  v.reshape(B * H, Sp, dv),
+                  log_g.astype(jnp.float32).reshape(B * H, Sp)),
+                 chunk=chunk)
+    out = out.reshape(B, H, Sp, dv)[:, :, :S].astype(jnp.float32)
+    return out, st.reshape(B, H, dk, dv)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _linear_attention_call(actx: _AttnCtx, q, k, v, log_g):
+    return _linear_attention_kernel_dispatch(actx, q, k, v, log_g)
+
+
+def _linear_attention_call_fwd(actx, q, k, v, log_g):
+    out = _linear_attention_kernel_dispatch(actx, q, k, v, log_g)
+    return out, (q, k, v, log_g)
+
+
+def _linear_attention_call_bwd(actx, res, cts):
+    q, k, v, log_g = res
+
+    def ref(q_, k_, v_, g_):
+        return _linear_attention_reference(
+            q_, k_, v_, g_, chunk=actx.chunk, state=None,
+            backend=actx.backend)
+
+    with repeat(actx.count):
+        _, vjp = jax.vjp(ref, q, k, v, log_g)
+        grads = vjp(cts)
+    return tuple(g.astype(p.dtype) for g, p in zip(grads, (q, k, v, log_g)))
+
+
+_linear_attention_call.defvjp(_linear_attention_call_fwd,
+                              _linear_attention_call_bwd)
+
+
+# --------------------------------------------------------------------- #
 # The Engine
 # --------------------------------------------------------------------- #
 class Engine:
@@ -1863,6 +2214,145 @@ class Engine:
         z = z.reshape([dims[l] for l in cur])
         return jnp.transpose(z, [cur.index(l) for l in out_lab])
 
+    def attention(
+        self,
+        q: jax.Array,
+        k: jax.Array,
+        v: jax.Array,
+        *,
+        causal: bool = True,
+        scale: Optional[float] = None,
+        q_offset: int = 0,
+        t_valid: Optional[int] = None,
+        bq: Optional[int] = None,
+        bkv: Optional[int] = None,
+        policy=None,
+        backend: Optional[str] = None,
+    ) -> jax.Array:
+        """Fused scaled-dot-product attention as a first-class engine op.
+
+        Shapes: ``q: (B, Hq, S, D)``, ``k/v: (B, Hkv, T, Dv)`` with
+        ``Hq % Hkv == 0`` (GQA group = ``Hq // Hkv``; the kernel maps KV
+        heads in its index maps, never materializing per-q-head copies).
+        ``t_valid`` masks the padded KV tail (cols >= t_valid are dead),
+        ``q_offset`` is the absolute position of query row 0 for the
+        causal mask (``col <= q_offset + row``).  Fully-masked query rows
+        return exact zeros.  Output: ``(B, Hq, S, Dv)`` in the policy's
+        output dtype.
+
+        Backends with the ``"attention"`` capability run the flash sweep
+        (online softmax, store-once output, causally dead KV blocks
+        skipped), billed as ``attention_score`` / ``attention_pv``
+        :class:`GemmEvent` pairs whose ``groups`` count only executed
+        blocks and whose ``io_bytes`` carry the sweep's true HBM traffic.
+        Block sizes resolve explicit ``bq``/``bkv`` > the autotune cache
+        (sweep key ``attnc``/``attn``) > a shape-fitted heuristic.  Other
+        backends (XLA) get the reference :func:`einsum2d` composition —
+        identical numerics contract, events self-billed by the inner
+        dispatches.  ``jax.grad`` re-enters the registry either way (the
+        kernel path's ``custom_vjp`` recomputes via the reference, flash
+        style: no S×T tensor is saved between forward and backward)."""
+        policy = self.resolve_policy(policy)
+        b = self.resolve_backend(backend)
+        if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+            raise ValueError(
+                f"attention needs (B, H, S, D) operands, got "
+                f"{q.shape} / {k.shape} / {v.shape}")
+        B, Hq, S, D = q.shape
+        _, Hkv, T, Dv = v.shape
+        if k.shape != (B, Hkv, T, D):
+            raise ValueError(f"k/v shape mismatch: {k.shape} vs {v.shape}")
+        if q.shape[0] != k.shape[0] or q.shape[-1] != k.shape[-1]:
+            raise ValueError(f"q/k shape mismatch: {q.shape} vs {k.shape}")
+        if Hq % Hkv != 0:
+            raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+        group = Hq // Hkv
+        scale = float(D ** -0.5 if scale is None else scale)
+        q_offset = int(q_offset)
+        t_valid = T if t_valid is None else min(int(t_valid), T)
+        if not (get_backend(b).supports("attention") and Dv == D):
+            return _attention_reference(
+                q, k, v, group=group, causal=causal, scale=scale,
+                q_offset=q_offset, t_valid=t_valid, policy=policy,
+                backend=b)
+        if bq is None or bkv is None:
+            t = autotune.cached_tile(
+                S, T, D, policy=policy, backend=b,
+                sweep="attnc" if causal else "attn")
+            if t is not None:
+                bq = bq or t.bm
+                bkv = bkv or t.bn
+        bq = int(bq) if bq else min(256, -(-S // 8) * 8)
+        bkv = int(bkv) if bkv else min(512, -(-T // 8) * 8)
+        specs = _attention_specs(
+            B=B, Hq=Hq, S=S, T=T, D=D, Dv=Dv, bq=bq, bkv=bkv,
+            causal=causal, q_offset=q_offset, policy=policy)
+        actx = _AttnCtx(
+            kind="attention", spec=specs[0], backend=b,
+            count=_repeat_multiplier(), extra=specs[1:], group=group,
+            causal=causal, scale=scale, q_offset=q_offset,
+            t_valid=t_valid, bq=bq, bkv=bkv, policy=policy)
+        return _attention_call(actx, q, k, v)
+
+    def linear_attention(
+        self,
+        q: jax.Array,
+        k: jax.Array,
+        v: jax.Array,
+        log_g: jax.Array,
+        *,
+        chunk: Optional[int] = None,
+        state: Optional[jax.Array] = None,
+        backend: Optional[str] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Chunked linear attention (mLSTM/SSD state sweep) as a
+        first-class engine op.
+
+        Shapes: ``q/k: (B, H, S, dk)``, ``v: (B, H, S, dv)``,
+        ``log_g: (B, H, S)`` per-step log decay; optional ``state``
+        carries an ``(B, H, dk, dv)`` fp32 recurrent state in (decode /
+        chunked prefill).  Returns ``(out (B, H, S, dv) fp32,
+        state (B, H, dk, dv) fp32)``.
+
+        Backends with the ``"attention"`` capability run the fused sweep
+        kernel when no state is carried in (the kernel owns the zero
+        init), billed as four per-chunk GEMM events
+        (``linear_attention_{score,pv,inter,state}``) with ``groups`` =
+        number of chunks and exact ``io_bytes`` (the running state never
+        leaves VMEM until its single final store).  The chunk size
+        resolves explicit ``chunk`` > autotune cache (sweep key
+        ``lattn``) > 64.  Other backends — and state carry-in — run the
+        reference chunked scan, whose dispatches self-bill."""
+        b = self.resolve_backend(backend)
+        if q.ndim != 4 or k.ndim != 4 or v.ndim != 4 or log_g.ndim != 3:
+            raise ValueError(
+                f"linear_attention needs (B, H, S, d) q/k/v and "
+                f"(B, H, S) log_g, got {q.shape} / {k.shape} / "
+                f"{v.shape} / {log_g.shape}")
+        B, H, S, dk = q.shape
+        dv = v.shape[-1]
+        if k.shape != q.shape or v.shape[:3] != q.shape[:3] \
+                or log_g.shape != q.shape[:3]:
+            raise ValueError(
+                f"operand shape mismatch: {q.shape} / {k.shape} / "
+                f"{v.shape} / {log_g.shape}")
+        if chunk is None:
+            t = autotune.cached_tile(S, dk, dv, policy=prec.FP32,
+                                     backend=b, sweep="lattn")
+            chunk = t.bm if t is not None else 64
+        chunk = int(chunk)
+        if not (get_backend(b).supports("attention") and state is None):
+            return _linear_attention_reference(
+                q, k, v, log_g, chunk=chunk, state=state, backend=b)
+        specs = _linear_attention_specs(
+            B=B, H=H, S=S, dk=dk, dv=dv, chunk=chunk,
+            in_bytes=jnp.dtype(q.dtype).itemsize)
+        actx = _AttnCtx(
+            kind="linear_attention", spec=specs[0], backend=b,
+            count=_repeat_multiplier(), extra=specs[1:], chunk=chunk,
+            policy=prec.FP32)
+        return _linear_attention_call(actx, q, k, v, log_g)
+
     # expose the collectors on the instance too, for discoverability
     instrument = staticmethod(instrument)
     repeat = staticmethod(repeat)
@@ -1928,7 +2418,17 @@ def einsum2d(eq, x, w, **kwargs) -> jax.Array:
     return DEFAULT_ENGINE.einsum2d(eq, x, w, **kwargs)
 
 
+def attention(q, k, v, **kwargs) -> jax.Array:
+    return DEFAULT_ENGINE.attention(q, k, v, **kwargs)
+
+
+def linear_attention(q, k, v, log_g, **kwargs):
+    return DEFAULT_ENGINE.linear_attention(q, k, v, log_g, **kwargs)
+
+
 matmul.__doc__ = Engine.matmul.__doc__
 linear.__doc__ = Engine.linear.__doc__
 grouped_matmul.__doc__ = Engine.grouped_matmul.__doc__
 einsum2d.__doc__ = Engine.einsum2d.__doc__
+attention.__doc__ = Engine.attention.__doc__
+linear_attention.__doc__ = Engine.linear_attention.__doc__

@@ -30,7 +30,8 @@ _NEG_INF = -1e30
 
 def _kernel(
     q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-    *, kv_tiles: int, bq: int, bkv: int, causal: bool, scale: float, t_valid: int,
+    *, kv_tiles: int, bq: int, bkv: int, causal: bool, scale: float,
+    t_valid: int, q_offset: int,
 ):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
@@ -47,7 +48,7 @@ def _kernel(
     # Causal: a KV block strictly after the last query row of this Q block
     # contributes nothing — skip it (the grid-restriction optimization is
     # handled by the wrapper for the common S == T case).
-    run = (not causal) or (kv_start < q_start + bq)
+    run = (not causal) or (kv_start < q_offset + q_start + bq)
 
     @pl.when(run)
     def _step():
@@ -61,7 +62,8 @@ def _kernel(
         col = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         mask = col < t_valid                         # padded tail of KV
         if causal:
-            row = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            row = q_offset + q_start + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0)
             mask = mask & (col <= row)
         s = jnp.where(mask, s, _NEG_INF)
 
@@ -69,6 +71,10 @@ def _kernel(
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
         p = jnp.exp(s - m_new)                       # (bq, bkv)
+        # A fully-masked row has m_new == _NEG_INF, so exp(s - m_new) above
+        # evaluates to exp(0) == 1 on its masked columns; zero them so l and
+        # acc stay exactly 0 for rows with no visible KV position.
+        p = jnp.where(mask, p, 0.0)
         alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
 
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
@@ -80,13 +86,18 @@ def _kernel(
 
     @pl.when(ki == kv_tiles - 1)
     def _store_once():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        # Fully-masked rows (t_valid == 0, or every KV block causally
+        # skipped) have l == 0 AND acc == 0: guard the divide so they store
+        # exact zeros instead of NaN.
+        l = l_ref[...]
+        l_inv = jnp.where(l == 0.0, 1.0, 1.0 / l)
+        o_ref[0] = (acc_ref[...] * l_inv).astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("group", "causal", "scale", "bq", "bkv", "t_valid", "interpret"),
+    static_argnames=("group", "causal", "scale", "bq", "bkv", "t_valid",
+                     "q_offset", "interpret"),
 )
 def flash_attention_pallas(
     q: jax.Array,
@@ -99,12 +110,15 @@ def flash_attention_pallas(
     bq: int = 256,
     bkv: int = 512,
     t_valid: Optional[int] = None,
+    q_offset: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
     """q: (BHq, S, D), k/v: (BHkv, T, D) with BHq == BHkv * group.
 
     S and T must be multiples of bq / bkv (the ops wrapper pads); ``t_valid``
-    marks the unpadded KV length for masking.  Returns (BHq, S, D).
+    marks the unpadded KV length for masking, ``q_offset`` the absolute
+    position of query row 0 (causal mask: col <= q_offset + row).
+    Returns (BHq, S, D).
     """
     BHq, S, D = q.shape
     BHkv, T, _ = k.shape
@@ -119,7 +133,7 @@ def flash_attention_pallas(
     kernel = functools.partial(
         _kernel,
         kv_tiles=grid[2], bq=bq, bkv=bkv, causal=causal,
-        scale=float(scale), t_valid=int(t_valid),
+        scale=float(scale), t_valid=int(t_valid), q_offset=int(q_offset),
     )
     return pl.pallas_call(
         kernel,

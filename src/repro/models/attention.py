@@ -40,6 +40,15 @@ __all__ = [
 NEG_INF = jnp.float32(-1e30)
 
 
+def _static_int(x) -> Optional[int]:
+    """Concrete scalar -> int; None for traced values or per-slot arrays
+    (those keep the mask-driven chunked path)."""
+    try:
+        return int(x)
+    except Exception:
+        return None
+
+
 # --------------------------------------------------------------------- #
 # Schemas
 # --------------------------------------------------------------------- #
@@ -221,8 +230,6 @@ def chunked_attention(
             q, k, v, q_offset=q_offset, kv_valid=kv_valid, window=window,
             kv_group_sizes=kv_group_sizes, scale=scale,
             scores_policy=scores_policy, policy=policy)
-    kt = jnp.swapaxes(k, -1, -2)[:, :, None]  # (B, Hkv, 1, hd, T)
-    vb = v[:, :, None]
     # Decode: pin the attention dots to the sequence-sharded KV layout —
     # scores/pv become partial over the seq shards (small softmax
     # all-reduces) instead of GSPMD "involuntarily rematerializing" the
@@ -230,6 +237,25 @@ def chunked_attention(
     # all-gather).  Training keeps GSPMD's head-sharded schedule.
     rules = sharding.current_rules()
     pin = rules is not None and rules.serve_attention
+    if (window is None and not pin and v.shape[-1] == hd
+            and engine.backend_supports(engine.default_backend(),
+                                        "attention")):
+        # First-class engine op: the backend's fused flash sweep (same
+        # numerics contract and identical billed flops as the q-chunked
+        # path below, but online-softmax in VMEM with causally dead KV
+        # blocks skipped).  Backends without the capability keep the
+        # q-chunked path — the engine's reference composition would
+        # materialize the full S x T score tensor.  Traced
+        # offsets/lengths (serving's per-slot decode) also stay here.
+        off_i = _static_int(q_offset)
+        kvv_i = _static_int(kv_valid)
+        if off_i is not None and kvv_i is not None:
+            out = engine.attention(
+                q.reshape(B, Hkv * G, S, hd), k, v, causal=causal,
+                scale=scale, q_offset=off_i, t_valid=kvv_i, policy=policy)
+            return out.reshape(B, Hkv, G, S, -1)
+    kt = jnp.swapaxes(k, -1, -2)[:, :, None]  # (B, Hkv, 1, hd, T)
+    vb = v[:, :, None]
 
     def c(x, *axes):
         return sharding.constrain(x, *axes) if pin else x

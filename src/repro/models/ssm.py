@@ -53,68 +53,15 @@ def chunked_linear_attention(
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (out (B,H,S,dv), final_state (B,H,dk,dv)).
 
-    backend="pallas" uses the VMEM-resident-state kernel
-    (kernels/chunked_linear_attention.py — the store-once rule applied to
-    the recurrence); default: pallas on TPU, xla elsewhere.  Falls back to
-    the xla path when an initial state is carried in (decode prefix) or the
-    sequence is not chunk-aligned."""
-    B, H, S, dk = q.shape
-    b = backend or ("pallas" if jax.default_backend() == "tpu" else "xla")
-    if b in ("pallas", "interpret") and state is None and S % chunk == 0:
-        from repro.kernels.chunked_linear_attention import (
-            chunked_linear_attention_pallas)
-
-        dv_ = v.shape[-1]
-        out, st = chunked_linear_attention_pallas(
-            q.reshape(B * H, S, dk), k.reshape(B * H, S, dk),
-            v.reshape(B * H, S, dv_),
-            log_g.reshape(B * H, S).astype(jnp.float32),
-            chunk=chunk, interpret=(b == "interpret"))
-        return (out.reshape(B, H, S, dv_).astype(jnp.float32),
-                st.reshape(B, H, dk, dv_))
-    dv = v.shape[-1]
-    n = -(-S // chunk)
-    pad = n * chunk - S
-    if pad:
-        padt = [(0, 0), (0, 0), (0, pad)]
-        q = jnp.pad(q, padt + [(0, 0)])
-        k = jnp.pad(k, padt + [(0, 0)])
-        v = jnp.pad(v, padt + [(0, 0)])
-        log_g = jnp.pad(log_g, padt)  # pad decay 0 => exp(0)=1, k=0 is inert
-
-    qf = q.astype(jnp.float32).reshape(B, H, n, chunk, dk)
-    kf = k.astype(jnp.float32).reshape(B, H, n, chunk, dk)
-    vf = v.astype(jnp.float32).reshape(B, H, n, chunk, dv)
-    gf = log_g.astype(jnp.float32).reshape(B, H, n, chunk)
-
-    if state is None:
-        state = jnp.zeros((B, H, dk, dv), jnp.float32)
-
-    idx = jnp.arange(chunk)
-    causal = idx[:, None] >= idx[None, :]  # i >= j
-
-    def step(S_prev, xs):
-        qc, kc, vc, gc = xs  # (B,H,c,·)
-        L = jnp.cumsum(gc, axis=-1)            # (B,H,c) inclusive decay-log
-        Ltot = L[..., -1:]
-        # intra-chunk: A_ij = exp(L_i - L_j) for i >= j
-        D = L[..., :, None] - L[..., None, :]
-        A = jnp.where(causal[None, None], jnp.exp(D), 0.0)
-        s = engine.einsum2d("bhik,bhjk->bhij", qc, kc, policy=_F32) * A
-        out = engine.matmul(s, vc, policy=_F32)
-        # inter-chunk: q_i decayed from chunk start against carried state
-        out = out + engine.matmul(qc * jnp.exp(L)[..., None], S_prev, policy=_F32)
-        # state update: S' = exp(Ltot) S + sum_j exp(Ltot - L_j) k_j v_j
-        kdec = kc * jnp.exp(Ltot - L)[..., None]
-        S_new = jnp.exp(Ltot)[..., None] * S_prev + engine.matmul(
-            jnp.swapaxes(kdec, -1, -2), vc, policy=_F32)
-        return S_new, out
-
-    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (qf, kf, vf, gf))
-    with engine.repeat(n):  # chunk scan: body traced once, runs n times
-        state, outs = jax.lax.scan(step, state, xs)
-    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, n * chunk, dv)[:, :, :S]
-    return out, state
+    A thin wrapper over the Engine's first-class ``linear_attention`` op:
+    backends with the ``"attention"`` capability (pallas / interpret) run
+    the VMEM-resident-state kernel (the store-once rule applied to the
+    recurrence) when no initial state is carried in; everything else —
+    including state carry-in (decode prefix) — runs the engine's
+    reference chunked scan.  Either way every GEMM of the sweep is billed
+    through the registry."""
+    return engine.linear_attention(
+        q, k, v, log_g, chunk=chunk, state=state, backend=backend)
 
 
 def linear_attention_step(
@@ -129,7 +76,8 @@ def linear_attention_step(
         jnp.exp(log_g.astype(jnp.float32))[..., None, None] * state
         + k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
     )
-    out = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    out = engine.einsum2d("bhk,bhkv->bhv", q.astype(jnp.float32), state,
+                          policy=_F32)
     return out, state
 
 
@@ -237,7 +185,8 @@ def slstm_block(
     r = params["r_gates"].astype(jnp.float32)
 
     def step(st, wx_t):  # wx_t: (B, 4, H, hd)
-        rec = jnp.einsum("bhd,hde->bhe", st["h"], r).reshape(B, H, 4, hd)
+        rec = engine.einsum2d("bhd,hde->bhe", st["h"], r,
+                              policy=_F32).reshape(B, H, 4, hd)
         g = wx_t + rec.transpose(0, 2, 1, 3) + b[None]
         z_t, i_t, f_t, o_t = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
         log_f = -jax.nn.softplus(-(f_t + 3.0))
@@ -249,7 +198,8 @@ def slstm_block(
         h = jax.nn.sigmoid(o_t) * c / jnp.maximum(jnp.abs(n), 1.0)
         return {"c": c, "n": n, "h": h, "m": m_new}, h
 
-    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    with engine.repeat(S):  # time scan: body traced once, runs S times
+        state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
     h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
     h = layers.rmsnorm(h, params["norm"])
     y = h + layers.mlp_glu(params["ffn"], h, act=cfg.act, policy=policy)

@@ -19,11 +19,17 @@ discovering the contract by breaking models:
   row-sum of the derivative-adjusted dZ, and ``act'`` applied on load;
 * **operand_dtypes**: FP8-stored operands (upcast-on-load) produce the
   same result as pre-upcast compute-dtype operands.
+* **attention** (every backend — capable backends answer with their
+  fused sweep kernels, the rest through the engine's reference
+  composition): ``engine.attention`` over {dense, causal, GQA} and
+  ``engine.linear_attention`` over {fresh, chunked-state carry-in}
+  match fp32 numpy oracles (materialized-softmax attention; the
+  token-by-token decay recurrence).
 
 Each check raises ``AssertionError`` with a readable message naming the
-backend and the violated clause; the negative test registers a
-deliberately contract-violating dummy backend and asserts the harness
-catches it with exactly such a message.
+backend and the violated clause; the negative tests register
+deliberately contract-violating dummy backends and assert the harness
+catches them with exactly such a message.
 """
 
 import dataclasses
@@ -199,19 +205,101 @@ def check_operand_dtypes(backend: str) -> None:
             f"to the compute dtype on load, changing bytes, not values")
 
 
+def _attention_oracle(q, k, v, *, group, causal, scale, t_valid):
+    """fp32 numpy oracle: materialized K/V per q-head, dense softmax,
+    fully-masked rows exact zeros (the engine's documented contract)."""
+    qf, kf, vf = _f32(q), _f32(k), _f32(v)
+    S, T = qf.shape[2], kf.shape[2]
+    kr = np.repeat(kf, group, axis=1)
+    vr = np.repeat(vf, group, axis=1)
+    s = np.einsum("bhsd,bhtd->bhst", qf, kr) * scale
+    mask = np.arange(T)[None, :] < t_valid
+    if causal:
+        mask = mask & (np.arange(T)[None, :] <= np.arange(S)[:, None])
+    else:
+        mask = np.broadcast_to(mask, (S, T))
+    s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    p = np.where(mask.any(axis=-1)[..., None], p, 0.0)
+    return np.einsum("bhst,bhtd->bhsd", p, vr)
+
+
+def _linear_attention_oracle(q, k, v, log_g, state=None):
+    """fp32 numpy oracle: the token-by-token recurrence
+    S_t = exp(g_t) S_{t-1} + k_t v_t^T, out_t = q_t @ S_t."""
+    qf, kf, vf, gf = _f32(q), _f32(k), _f32(v), _f32(log_g)
+    B, H, S, dk = qf.shape
+    dv = vf.shape[-1]
+    st = np.zeros((B, H, dk, dv), np.float32) if state is None else _f32(state)
+    outs = []
+    for t in range(S):
+        st = (np.exp(gf[:, :, t])[..., None, None] * st
+              + np.einsum("bhk,bhv->bhkv", kf[:, :, t], vf[:, :, t]))
+        outs.append(np.einsum("bhk,bhkv->bhv", qf[:, :, t], st))
+    return np.stack(outs, axis=2), st
+
+
+def check_attention(backend: str) -> None:
+    """engine.attention / engine.linear_attention on this backend match
+    the fp32 oracles for {dense, causal, GQA, chunked-state}.  Every
+    backend must answer: capable ones with their fused sweep kernels,
+    the rest through the engine's reference einsum2d composition."""
+    policy = prec.FP32
+    B, Hkv, S, T, D = 2, 2, 19, 26, 8
+    rng = np.random.default_rng(11)
+
+    def arr(shape):
+        return jnp.asarray(rng.normal(size=shape) * 0.3, jnp.float32)
+
+    k = arr((B, Hkv, T, D))
+    v = arr((B, Hkv, T, D))
+    for what, group, causal, t_valid in (
+            ("attention (dense)", 1, False, T),
+            ("attention (causal)", 1, True, T),
+            ("attention (GQA, causal, ragged t_valid)", 3, True, T - 5)):
+        q = arr((B, Hkv * group, S, D))
+        got = engine.attention(q, k, v, causal=causal, t_valid=t_valid,
+                               policy=policy, backend=backend)
+        want = _attention_oracle(q, k, v, group=group, causal=causal,
+                                 scale=D**-0.5, t_valid=t_valid)
+        _close(got, want, policy, what=what, backend=backend)
+
+    H, dk, dv, Sl = 2, 6, 10, 23
+    q2, k2 = arr((B, H, Sl, dk)), arr((B, H, Sl, dk))
+    v2 = arr((B, H, Sl, dv))
+    g2 = -jnp.abs(arr((B, H, Sl))) * 0.3
+    want_o, want_s = _linear_attention_oracle(q2, k2, v2, g2)
+    got_o, got_s = engine.linear_attention(q2, k2, v2, g2, chunk=8,
+                                           backend=backend)
+    _close(got_o, want_o, policy, what="attention (linear, chunked sweep)",
+           backend=backend)
+    _close(got_s, want_s, policy, what="attention (linear, final state)",
+           backend=backend)
+    state0 = arr((B, H, dk, dv))
+    want_o, want_s = _linear_attention_oracle(q2, k2, v2, g2, state=state0)
+    got_o, got_s = engine.linear_attention(q2, k2, v2, g2, chunk=8,
+                                           state=state0, backend=backend)
+    _close(got_o, want_o, policy, what="attention (linear, state carry-in)",
+           backend=backend)
+    _close(got_s, want_s, policy,
+           what="attention (linear, carried final state)", backend=backend)
+
+
 CONTRACT_CHECKS = {
     "base": check_base,
     "fused_epilogue": check_fused_epilogue,
     "layouts": check_layouts,
     "fused_bwd_epilogue": check_fused_bwd_epilogue,
     "operand_dtypes": check_operand_dtypes,
+    "attention": check_attention,
 }
 
 # "tiled" has no standalone value contract: it only promises spec.tile is
 # honored as block geometry, which the base check already exercises by
 # resolving real tiles.  Everything else is executable above.
 CONTRACTS = ("base", "fused_epilogue", "layouts", "fused_bwd_epilogue",
-             "operand_dtypes")
+             "operand_dtypes", "attention")
 
 
 def run_contract(backend: str, contract: str) -> None:
@@ -230,8 +318,10 @@ def test_backend_conformance(backend, contract):
     spec = engine.get_backend(backend)
     if not spec.is_available():
         pytest.skip(f"backend {backend!r} not available on this platform")
-    if contract != "base" and not spec.supports(contract):
+    if contract not in ("base", "attention") and not spec.supports(contract):
         pytest.skip(f"backend {backend!r} does not declare {contract!r}")
+    # "attention" runs on every backend: the engine serves non-capable
+    # backends through its reference composition, so all must answer
     run_contract(backend, contract)
 
 
@@ -274,6 +364,45 @@ def test_violating_backend_fails_readably():
             f"got: {msg}")
     finally:
         engine.unregister_backend("broken-dummy")
+
+
+def test_violating_attention_backend_fails_readably():
+    def ok_gemm(x, w, *, spec):
+        return jnp.matmul(
+            x, w, preferred_element_type=spec.policy.accum_dtype
+        ).astype(spec.policy.out_dtype)
+
+    def broken_attention(kind, operands, **params):
+        # claims the attention capability but returns zeros for the flash
+        # sweep (and a zero state for the linear sweep)
+        q = operands[0]
+        if kind == "attention":
+            return jnp.zeros_like(q)
+        dk, dv = operands[1].shape[-1], operands[2].shape[-1]
+        return (jnp.zeros(operands[2].shape, q.dtype),
+                jnp.zeros((q.shape[0], dk, dv), jnp.float32))
+
+    engine.register_backend(
+        "broken-attn", ok_gemm,
+        capabilities=("attention",), attention_fn=broken_attention,
+        description="conformance negative test: attention returns zeros")
+    try:
+        run_contract("broken-attn", "base")  # the pure GEMM is fine
+        with pytest.raises(AssertionError) as e:
+            run_contract("broken-attn", "attention")
+        msg = str(e.value)
+        assert "broken-attn" in msg and "attention" in msg, (
+            f"violation message must name the backend and the contract, "
+            f"got: {msg}")
+    finally:
+        engine.unregister_backend("broken-attn")
+
+
+def test_attention_capability_requires_attention_fn():
+    with pytest.raises(ValueError, match="attention"):
+        engine.register_backend("attn-no-fn", lambda x, w, *, spec: x,
+                                capabilities=("attention",))
+    assert "attn-no-fn" not in engine.registered_backends()
 
 
 def test_unknown_capability_rejected_at_registration():

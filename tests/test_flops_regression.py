@@ -56,9 +56,40 @@ def _lm_events():
     return events
 
 
+def _attn_events(causal):
+    rng = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(rng, 3)
+    q = jax.random.normal(kq, (2, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(kk, (2, 4, 256, 64), jnp.float32)
+    v = jax.random.normal(kv, (2, 4, 256, 64), jnp.float32)
+    with engine.instrument() as events:
+        # the "attention"-capable interpret backend: the flash sweep's
+        # attention_score / attention_pv events carry the exact bill
+        jax.eval_shape(lambda a, b, c: engine.attention(
+            a, b, c, causal=causal, bq=128, bkv=128, policy=prec.FP32,
+            backend="interpret"), q, k, v)
+    return events
+
+
+def _lattn_events():
+    rng = jax.random.PRNGKey(4)
+    kq, kk, kv, kg = jax.random.split(rng, 4)
+    q = jax.random.normal(kq, (2, 4, 256, 32), jnp.float32)
+    k = jax.random.normal(kk, (2, 4, 256, 32), jnp.float32)
+    v = jax.random.normal(kv, (2, 4, 256, 64), jnp.float32)
+    g = -jnp.abs(jax.random.normal(kg, (2, 4, 256), jnp.float32)) * 0.1
+    with engine.instrument() as events:
+        jax.eval_shape(lambda a, b, c, d: engine.linear_attention(
+            a, b, c, d, chunk=64, backend="interpret"), q, k, v, g)
+    return events
+
+
 @pytest.mark.parametrize("name,collect", [
     ("ae_fwd_B16", _ae_events),
     ("yi-9b-reduced_fwd_B2_S64", _lm_events),
+    ("attn_flash_fwd_B2_H4_S256_D64_causal", lambda: _attn_events(True)),
+    ("attn_flash_fwd_B2_H4_S256_D64_dense", lambda: _attn_events(False)),
+    ("attn_linear_fwd_B2_H4_S256_dk32_dv64", _lattn_events),
 ])
 def test_engine_flops_match_baseline(name, collect):
     events = collect()

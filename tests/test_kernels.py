@@ -281,6 +281,51 @@ def test_flash_attention_padded_kv():
                                rtol=1e-6, atol=1e-6)
 
 
+def test_flash_attention_dead_rows_exact_zero():
+    """l == 0 guard: with t_valid=0 every softmax row is empty; the
+    store-once epilogue must write exact zeros, never NaN from 0/0."""
+    q = _rand((2, 128, 64), np.float32)
+    k = _rand((2, 128, 64), np.float32)
+    v = _rand((2, 128, 64), np.float32)
+    o = flash_attention_pallas(q, k, v, causal=False, bq=128, bkv=128,
+                               t_valid=0, interpret=True)
+    assert np.all(np.asarray(o) == 0.0)
+
+
+def test_flash_attention_short_t_valid_ragged():
+    """A freshly admitted slot: 3 live KV tokens inside a 128-wide block.
+    Must match the kernel on the truncated KV, and the causal rows that
+    precede any live token must be finite (the l == 0 path)."""
+    B, S, D, tv = 1, 128, 64, 3
+    q = _rand((B, S, D), np.float32)
+    k = _rand((B, S, D), np.float32)
+    v = _rand((B, S, D), np.float32)
+    o = flash_attention_pallas(q, k, v, causal=False, bq=128, bkv=128,
+                               t_valid=tv, interpret=True)
+    o_exact = flash_attention_pallas(
+        q, jnp.pad(k[:, :tv], [(0, 0), (0, 128 - tv), (0, 0)]),
+        jnp.pad(v[:, :tv], [(0, 0), (0, 128 - tv), (0, 0)]),
+        causal=False, bq=128, bkv=128, t_valid=tv, interpret=True)
+    assert np.all(np.isfinite(np.asarray(o)))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_exact),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_flash_attention_q_offset_decode_window():
+    """q_offset shifts the causal mask: the last bq rows of a full sweep
+    equal a windowed sweep whose query block starts at that offset."""
+    B, S, D, bq = 1, 256, 64, 128
+    q = _rand((B, S, D), np.float32)
+    k = _rand((B, S, D), np.float32)
+    v = _rand((B, S, D), np.float32)
+    full = flash_attention_pallas(q, k, v, causal=True, bq=bq, bkv=128,
+                                  interpret=True)
+    tail = flash_attention_pallas(q[:, -bq:], k, v, causal=True, bq=bq,
+                                  bkv=128, q_offset=S - bq, interpret=True)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, -bq:]),
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_flash_attention_bf16():
     B, S, D = 2, 256, 64
     q = _rand((B, S, D), jnp.bfloat16)
